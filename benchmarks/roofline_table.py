@@ -1,0 +1,60 @@
+"""Collect dry-run JSONs into the §Roofline table (deliverable g).
+
+Reads ``experiments/dryrun/*_pod16x16.json`` (the roofline table is
+single-pod by spec) and emits one row per (arch × shape): the three terms,
+the dominant bottleneck, MODEL_FLOPS ratio, and per-device memory.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_records(out_dir: str = "experiments/dryrun",
+                 mesh: str = "pod16x16") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, f"*_{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(out_dir: str = "experiments/dryrun") -> tuple[list[dict], str]:
+    recs = load_records(out_dir)
+    rows = []
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant "
+        "| useful FLOP ratio | mem/dev GiB |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("status") != "ok":
+            continue
+        rf = r["roofline"]
+        row = {
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_s": rf["compute_s"], "memory_s": rf["memory_s"],
+            "collective_s": rf["collective_s"],
+            "dominant": rf["dominant"].replace("_s", ""),
+            "useful_flop_ratio": rf.get("useful_flop_ratio", 0.0),
+            "mem_gib": r.get("memory", {}).get("per_device_total_gib"),
+        }
+        rows.append(row)
+        lines.append(
+            "| {arch} | {shape} | {compute_s:.2e} | {memory_s:.2e} "
+            "| {collective_s:.2e} | {dominant} | {useful_flop_ratio:.3f} "
+            "| {mem_gib} |".format(**row))
+    return rows, "\n".join(lines)
+
+
+def main() -> int:
+    rows, md = table()
+    print(md)
+    print(f"\n{len(rows)} baseline rows")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,65 @@
+"""Benchmark harness (deliverable d): one entry per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # all figures + kernels
+  PYTHONPATH=src python -m benchmarks.run --only fig11a fig13
+
+Each figure validates the paper's claim as a band; a failed band is a
+non-zero exit. The roofline table is appended when dry-run records exist.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def main() -> int:
+    from benchmarks import figs, kernel_bench, roofline_table
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    figures = {
+        "fig11a": figs.fig11a, "fig11b": figs.fig11b,
+        "fig11c": figs.fig11c, "fig11d": figs.fig11d,
+        "fig12": figs.fig12, "fig13": figs.fig13, "fig14": figs.fig14,
+    }
+    names = args.only or list(figures) + ["kernels", "roofline"]
+
+    failures = []
+    for name in names:
+        t0 = time.time()
+        if name == "kernels":
+            print("== kernel microbench ==")
+            for row in (kernel_bench.bench_moe_gmm()
+                        + kernel_bench.bench_decode_attn()):
+                print("  ", row)
+                if row["max_abs_err"] > 1e-3:
+                    failures.append(f"kernels: {row}")
+            continue
+        if name == "roofline":
+            rows, md = roofline_table.table()
+            print(f"== roofline baseline table ({len(rows)} rows) ==")
+            print(md)
+            continue
+        rec = figures[name](seed=args.seed)
+        ok = rec.get("band_ok", True)
+        status = "OK" if ok else "BAND-FAIL"
+        print(f"== {rec['figure']} [{status}] ({time.time()-t0:.1f}s) ==")
+        print(json.dumps({k: v for k, v in rec.items() if k != "figure"},
+                         indent=1))
+        if not ok:
+            failures.append(name)
+
+    if failures:
+        print(f"\nFAILED bands: {failures}")
+        return 1
+    print("\nall benchmark bands OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,67 @@
+"""Aurora colocated serving (the paper's §6 in action).
+
+Serves TWO reduced models on one host through a single interleaved XLA
+program — model A (MoE, comm-heavy) and model B (dense, compute-heavy) —
+after planning the expert colocation with AuroraPlanner on historical
+routing statistics. Also prints what the plan predicts vs the baselines.
+
+Usage: PYTHONPATH=src python examples/serve_colocated.py
+"""
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (AuroraPlanner, colocated_inference_time,
+                        homogeneous_cluster, lina_inference_time,
+                        paper_eval_traces)
+from repro.models import Model
+from repro.serving import ColocatedEngine
+from repro.serving.colocated import apply_pairing
+
+
+def main():
+    import jax
+
+    # --- plan (host-side, from historical statistics) --------------------
+    trace_a, trace_b = paper_eval_traces(seed=0)
+    n = trace_a.n
+    cluster = homogeneous_cluster(n)
+    plan = AuroraPlanner(cluster).plan_colocated(trace_a, trace_b)
+    t_aurora = plan.predicted.inference_time
+    t_lina = max(
+        np.mean([lina_inference_time(t, layer, cluster,
+                                     policy="rcs").inference_time
+                 for layer in range(len(t.layers))])
+        for t in (trace_a, trace_b))
+    print(f"planned pairing {plan.pair}")
+    print(f"predicted inference: aurora {t_aurora:.1f} vs lina {t_lina:.1f} "
+          f"({t_lina / t_aurora:.2f}x)")
+
+    # --- serve (reduced models, CPU) --------------------------------------
+    cfg_a = get_config("phi3.5-moe-42b-a6.6b").reduced()
+    cfg_b = get_config("phi4-mini-3.8b").reduced()
+    model_a, model_b = Model(cfg_a), Model(cfg_b)
+    params_a = model_a.init(jax.random.PRNGKey(0))
+    params_b = model_b.init(jax.random.PRNGKey(1))
+    # Apply the planner's pairing to model A's expert placement (reduced
+    # config has 4 experts; re-plan at that size).
+    from repro.core import synthetic_trace
+    e = cfg_a.moe.n_experts
+    pl = AuroraPlanner(homogeneous_cluster(e)).plan_colocated(
+        synthetic_trace("a", n_experts=e, n_layers=2, seed=0),
+        synthetic_trace("b", n_experts=e, n_layers=2, seed=1))
+    params_a = apply_pairing(params_a, pl.pair, cfg_a)
+    print(f"reduced-model pairing applied: {pl.pair}")
+
+    eng = ColocatedEngine(model_a, model_b, params_a, params_b)
+    rng = np.random.default_rng(0)
+    prompts_a = rng.integers(1, cfg_a.vocab, (2, 8))
+    prompts_b = rng.integers(1, cfg_b.vocab, (2, 8))
+    out_a, out_b = eng.serve(prompts_a, prompts_b, max_new_tokens=8,
+                             cache_cap=32)
+    print("model A generated:", np.asarray(out_a).tolist())
+    print("model B generated:", np.asarray(out_b).tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""End-to-end driver (deliverable b): train a ~100M-parameter MoE for a few
+hundred steps on synthetic data and report the loss curve.
+
+The model is a scaled phi3.5-MoE family member (8 experts, top-2) — the
+same code path the production config lowers, including router aux loss and
+capacity dispatch. Takes ~10–20 min on this CPU container with the default
+200 steps; pass --steps 50 for a quick look.
+
+Usage: PYTHONPATH=src python examples/train_moe.py [--steps N]
+"""
+
+import argparse
+import dataclasses
+
+from repro.configs import get_config
+from repro.configs.base import MoEConfig
+from repro.models import Model
+from repro.training import AdamWConfig, SyntheticLMData, train_loop
+
+
+def make_100m_config():
+    base = get_config("phi3.5-moe-42b-a6.6b")
+    return dataclasses.replace(
+        base,
+        arch_id="phi-moe-100m",
+        n_layers=4,
+        d_model=512,
+        n_heads=8,
+        n_kv_heads=4,
+        head_dim=64,
+        vocab=8192,
+        moe=MoEConfig(n_experts=8, top_k=2, d_ff=1024,
+                      capacity_factor=1.25),
+        dtype="float32",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = make_100m_config()
+    model = Model(cfg)
+    n_params = cfg.param_count()
+    print(f"arch {cfg.arch_id}: {n_params/1e6:.1f}M params "
+          f"({cfg.active_param_count()/1e6:.1f}M active/token)")
+
+    data = SyntheticLMData(cfg.vocab, seq_len=args.seq, batch=args.batch,
+                           seed=0)
+    state, hist = train_loop(
+        model, data, steps=args.steps,
+        opt_cfg=AdamWConfig(lr=6e-4, warmup_steps=args.steps // 10),
+        log_every=max(args.steps // 20, 1))
+    for h in hist:
+        print(f"step {h['step']:4d}  ce {h['ce']:.4f}  aux {h['aux']:.4f}  "
+              f"wall {h['wall']:.0f}s")
+    first, last = hist[0]["ce"], hist[-1]["ce"]
+    print(f"\nloss {first:.3f} -> {last:.3f} "
+          f"({'OK: decreased' if last < first else 'WARNING: did not decrease'})")
+
+
+if __name__ == "__main__":
+    main()

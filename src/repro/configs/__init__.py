@@ -1,0 +1,29 @@
+"""Architecture registry: ``get_config("<arch-id>")`` / ``--arch <id>``."""
+
+from __future__ import annotations
+
+from .base import MLAConfig, ModelConfig, MoEConfig, SSMConfig
+from .shapes import (DECODE_32K, LONG_500K, PREFILL_32K, SHAPES, TRAIN_4K,
+                     InputShape)
+
+from . import (deepseek_v3_671b, gemma3_27b, gemma_7b, mamba2_1_3b,
+               phi3_5_moe_42b, phi4_mini_3_8b, qwen2_vl_7b, qwen3_32b,
+               seamless_m4t_large_v2, zamba2_7b)
+
+_MODULES = (mamba2_1_3b, gemma_7b, qwen2_vl_7b, qwen3_32b, deepseek_v3_671b,
+            gemma3_27b, seamless_m4t_large_v2, phi4_mini_3_8b, zamba2_7b,
+            phi3_5_moe_42b)
+
+REGISTRY: dict[str, ModelConfig] = {m.CONFIG.arch_id: m.CONFIG for m in _MODULES}
+ARCH_IDS: tuple[str, ...] = tuple(REGISTRY)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[arch_id]
+
+
+__all__ = ["ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig", "InputShape",
+           "SHAPES", "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+           "REGISTRY", "ARCH_IDS", "get_config"]

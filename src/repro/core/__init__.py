@@ -1,0 +1,45 @@
+"""Aurora core: MoE inference deployment + communication scheduling.
+
+The paper's contribution as a composable library:
+
+- ``traffic``     — traffic matrices, b_max bounds, trace generation
+- ``schedule``    — Thm 4.2/5.2 BvN contention-free schedules + baselines
+- ``matching``    — Hopcroft–Karp, bottleneck perfect matching
+- ``assignment``  — Thm 5.1 heterogeneous GPU assignment
+- ``colocation``  — Thm 6.2 cross-model expert colocation
+- ``simulator``   — Table 2 / Eqn 1–4 inference-time model
+- ``planner``     — the 4-scenario AuroraPlanner
+- ``bruteforce``  — exhaustive optima for validation
+"""
+
+from .cluster import (Cluster, DeviceType, heterogeneous_cluster,
+                      homogeneous_cluster, PAPER_HET_TIERS)
+from .traffic import (MoETrace, add_noise, b_max_heterogeneous,
+                      b_max_homogeneous, paper_eval_traces, synthetic_trace,
+                      traffic_from_routing)
+from .schedule import (CommSchedule, Slot, aurora_schedule, comm_time,
+                       fluid_comm_time, rcs_order, sjf_order)
+from .matching import bottleneck_perfect_matching, hopcroft_karp
+from .assignment import (apply_assignment, aurora_assignment, expert_loads,
+                         random_assignment)
+from .colocation import (aggregate_traffic, aurora_pairing, case1_pairing,
+                         case2_pairing, lina_packing, random_pairing)
+from .simulator import (SimResult, colocated_inference_time,
+                        exclusive_inference_time, lina_inference_time)
+from .planner import AuroraPlanner, Plan
+from .bruteforce import bruteforce_colocated, bruteforce_exclusive
+
+__all__ = [
+    "Cluster", "DeviceType", "heterogeneous_cluster", "homogeneous_cluster",
+    "PAPER_HET_TIERS", "MoETrace", "add_noise", "b_max_heterogeneous",
+    "b_max_homogeneous", "paper_eval_traces", "synthetic_trace",
+    "traffic_from_routing", "CommSchedule", "Slot", "aurora_schedule",
+    "comm_time", "fluid_comm_time", "rcs_order", "sjf_order",
+    "bottleneck_perfect_matching", "hopcroft_karp", "apply_assignment",
+    "aurora_assignment", "expert_loads", "random_assignment",
+    "aggregate_traffic", "aurora_pairing", "case1_pairing", "case2_pairing",
+    "lina_packing", "random_pairing", "SimResult",
+    "colocated_inference_time", "exclusive_inference_time",
+    "lina_inference_time", "AuroraPlanner", "Plan", "bruteforce_colocated",
+    "bruteforce_exclusive",
+]

@@ -1,0 +1,141 @@
+"""AuroraPlanner: the four-scenario dispatcher (Fig 2).
+
+Given historical model statistics (traces) and a cluster description, produce
+a deployment + scheduling plan:
+
+  scenario 1  Exclusive  + Homogeneous   → transmission schedule (Thm 4.2)
+  scenario 2  Exclusive  + Heterogeneous → GPU assignment (Thm 5.1) + schedule
+  scenario 3  Colocating + Homogeneous   → expert pairing (Thm 6.2 / bottleneck
+                                           matching) + schedule
+  scenario 4  Colocating + Heterogeneous → decoupled 3D matching (§7.2):
+                                           pairing then pair→GPU matching
+
+The plan carries everything the runtime needs: per-layer CommSchedules (BvN
+permutation rounds for the ppermute lowering), the expert→device map, and the
+predicted inference time from the Table-2 simulator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .assignment import aurora_assignment, expert_loads
+from .cluster import Cluster
+from .colocation import aurora_pairing, aggregate_traffic, case2_pairing
+from .matching import bottleneck_perfect_matching
+from .schedule import CommSchedule, aurora_schedule
+from .simulator import (SimResult, colocated_inference_time,
+                        exclusive_inference_time)
+from .traffic import MoETrace
+from .assignment import apply_assignment
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    scenario: str
+    expert_to_device: np.ndarray              # model a (or the only model)
+    pair: list[int] | None                    # b-expert colocated per slot
+    schedules: tuple[CommSchedule, ...]       # per layer, dispatch phase
+    predicted: SimResult
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.schedules)
+
+
+class AuroraPlanner:
+    """Plans deployment + communication scheduling per the paper's four cases."""
+
+    def __init__(self, cluster: Cluster):
+        self.cluster = cluster
+        cluster.validate()
+
+    # -- scenarios 1 & 2 ----------------------------------------------------
+    def plan_exclusive(self, trace: MoETrace) -> Plan:
+        cl = self.cluster
+        n = trace.n
+        if cl.homogeneous:
+            scenario = "exclusive+homogeneous"
+            e2d = np.arange(n)  # observation 1: assignment is irrelevant
+        else:
+            scenario = "exclusive+heterogeneous"
+            # Thm 5.1 on aggregate load across layers (the deployment is one
+            # decision for the whole model; per-layer loads are averaged).
+            mean_d = np.mean([trace.layer(l) for l in range(len(trace.layers))],
+                             axis=0)
+            e2d = aurora_assignment(mean_d, cl)
+        bw = np.asarray(cl.bandwidths, float)
+        schedules = tuple(
+            aurora_schedule(apply_assignment(trace.layer(l), e2d), bw)
+            for l in range(len(trace.layers))
+        )
+        sims = [
+            exclusive_inference_time(trace, l, cl, e2d, policy="aurora")
+            for l in range(len(trace.layers))
+        ]
+        pred = SimResult(
+            float(np.mean([s.inference_time for s in sims])),
+            float(np.mean([s.utilization for s in sims])),
+            {"per_layer": [s.inference_time for s in sims]},
+        )
+        return Plan(scenario, e2d, None, schedules, pred)
+
+    # -- scenarios 3 & 4 ----------------------------------------------------
+    def plan_colocated(self, trace_a: MoETrace, trace_b: MoETrace) -> Plan:
+        cl = self.cluster
+        n = trace_a.n
+        mean_a = np.mean([trace_a.layer(l) for l in range(len(trace_a.layers))],
+                         axis=0)
+        mean_b = np.mean([trace_b.layer(l) for l in range(len(trace_b.layers))],
+                         axis=0)
+        if cl.homogeneous:
+            scenario = "colocating+homogeneous"
+            pair = aurora_pairing(mean_a, mean_b)
+            s2d = np.arange(n)
+        else:
+            scenario = "colocating+heterogeneous"
+            # §7.2 decoupling. Step 1: expert↔expert bottleneck matching.
+            pair, _ = case2_pairing(mean_a, mean_b)
+            # Step 2: pair↔device bottleneck matching; the edge weight is the
+            # pair's inference-time contribution on that device: compute
+            # (gate+agg+ffn of both experts) scaled by 1/compute plus its
+            # send/recv bottleneck scaled by 1/bandwidth.
+            d_agg = aggregate_traffic(mean_a, mean_b, pair)
+            send = d_agg.sum(axis=1)
+            recv = d_agg.sum(axis=0)
+            loads_a = expert_loads(mean_a)
+            loads_b = expert_loads(mean_b)[np.asarray(pair)]
+            comp_fixed = (trace_a.gate + trace_a.agg + trace_b.gate + trace_b.agg)
+            comp_tok = (trace_a.ffn_per_token * loads_a
+                        + trace_b.ffn_per_token * loads_b)
+            w = np.empty((n, n))
+            for k in range(n):
+                for dev in range(n):
+                    dt = cl.devices[dev]
+                    w[k, dev] = ((comp_fixed + comp_tok[k]) / dt.compute
+                                 + max(send[k], recv[k]) / dt.bandwidth)
+            match, _ = bottleneck_perfect_matching(w)
+            s2d = np.asarray(match)
+        bw = np.asarray(cl.bandwidths, float)
+        schedules = tuple(
+            aurora_schedule(
+                apply_assignment(
+                    aggregate_traffic(trace_a.layer(l), trace_b.layer(l), pair),
+                    s2d),
+                bw)
+            for l in range(len(trace_a.layers))
+        )
+        sims = [
+            colocated_inference_time(trace_a, trace_b, l, cl, pair, s2d,
+                                     policy="aurora")
+            for l in range(len(trace_a.layers))
+        ]
+        pred = SimResult(
+            float(np.mean([s.inference_time for s in sims])),
+            float(np.mean([s.utilization for s in sims])),
+            {"per_layer": [s.inference_time for s in sims]},
+        )
+        return Plan(scenario, np.arange(n) if cl.homogeneous else s2d,
+                    pair, schedules, pred)

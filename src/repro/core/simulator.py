@@ -1,0 +1,202 @@
+"""Inference-time simulator for the four Aurora scenarios (Eqn 1–4, Table 2).
+
+Timing semantics follow the paper:
+
+- Exclusive (Eqn 3, generalized to heterogeneous devices):
+  ``t = max_i G_i + N + max_i F_i + C + max_i A_i`` where N and C are the two
+  all-to-all times under the chosen scheduling policy.
+- Colocated (Table 2 recurrence): model b's gate overlaps model a's dispatch,
+  each model's FFN overlaps the other model's communication, etc. Component
+  end-times are the maxima across devices, exactly as Table 2 collapses the
+  per-GPU index. Aggregated communication completions follow §6.2:
+  ``End(N^b) = |overline{N^a+N^b}|`` and
+  ``End(C^b) = |overline{N^a+N^b}| + |overline{C^a+C^b}|`` (N and C phases are
+  disjoint in time, separated by the FFNs), each additionally floored by the
+  compute dependencies (a phase cannot end before its producer finished plus
+  its own duration).
+
+Computation-time model: ``trace.gate`` / ``trace.agg`` are per-device times on
+a reference (compute=1.0) device; FFN time is ``ffn_per_token × tokens
+received``; a device with relative compute c runs all of these 1/c as fast.
+GPU utilization is compute-busy time divided by inference time, averaged over
+devices (§8.1 metrics).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .assignment import apply_assignment
+from .cluster import Cluster
+from .colocation import aggregate_traffic, lina_packing
+from .schedule import comm_time
+from .traffic import MoETrace, strip_diagonal
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    inference_time: float
+    utilization: float
+    detail: dict
+
+
+def _device_arrays(cluster: Cluster) -> tuple[np.ndarray, np.ndarray]:
+    return (np.asarray(cluster.bandwidths, float),
+            np.asarray(cluster.computes, float))
+
+
+def exclusive_inference_time(
+    trace: MoETrace,
+    layer: int,
+    cluster: Cluster,
+    expert_to_device: np.ndarray | None = None,
+    policy: str = "aurora",
+    seed: int = 0,
+) -> SimResult:
+    """One MoE layer, one model per cluster (scenarios 1 and 2)."""
+    d_exp = trace.layer(layer)
+    n = d_exp.shape[0]
+    if cluster.n != n:
+        raise ValueError("one device per expert required in exclusive mode")
+    e2d = (np.arange(n) if expert_to_device is None
+           else np.asarray(expert_to_device))
+    d_dev = apply_assignment(d_exp, e2d)
+    bw, comp = _device_arrays(cluster)
+
+    recv_tokens = strip_diagonal(d_dev).sum(axis=0)  # per-device FFN load
+    gate = trace.gate / comp
+    ffn = trace.ffn_time(recv_tokens) / comp
+    agg = trace.agg / comp
+    n_time = comm_time(d_dev, policy, bw, seed=seed)
+    c_time = comm_time(d_dev.T, policy, bw, seed=seed + 1)
+
+    t = float(gate.max() + n_time + ffn.max() + c_time + agg.max())
+    busy = gate + ffn + agg
+    util = float(np.mean(busy / t)) if t > 0 else 1.0
+    return SimResult(t, util, dict(
+        gate=float(gate.max()), N=n_time, ffn=float(ffn.max()),
+        C=c_time, agg=float(agg.max()),
+    ))
+
+
+def colocated_inference_time(
+    trace_a: MoETrace,
+    trace_b: MoETrace,
+    layer: int,
+    cluster: Cluster,
+    pair: list[int],
+    slot_to_device: np.ndarray | None = None,
+    policy: str = "aurora",
+    seed: int = 0,
+) -> SimResult:
+    """Two models colocated, one expert of each per device (scenarios 3, 4).
+
+    Slot k hosts a-expert k and b-expert ``pair[k]``; ``slot_to_device`` maps
+    slots onto physical devices (identity on homogeneous clusters).
+    """
+    da = trace_a.layer(layer)
+    db = trace_b.layer(layer)
+    n = da.shape[0]
+    if db.shape[0] != n:
+        raise ValueError("colocated models must have equal expert counts (§6 fn 3)")
+    if cluster.n != n:
+        raise ValueError("one device per expert pair required")
+    s2d = (np.arange(n) if slot_to_device is None
+           else np.asarray(slot_to_device))
+    p = np.asarray(pair)
+
+    # Device-space matrices.
+    da_dev = apply_assignment(da, s2d)                      # a-expert k -> slot k
+    db_dev = apply_assignment(db[np.ix_(p, p)], s2d)        # b-expert pair[k] -> slot k
+    d_agg = apply_assignment(aggregate_traffic(da, db, pair), s2d)
+    bw, comp = _device_arrays(cluster)
+
+    # Communication times under the policy.
+    na = comm_time(da_dev, policy, bw, seed=seed)
+    nb = comm_time(db_dev, policy, bw, seed=seed + 1)
+    n_agg = comm_time(d_agg, policy, bw, seed=seed + 2)     # |overline{Na+Nb}|
+    ca = comm_time(da_dev.T, policy, bw, seed=seed + 3)
+    cb = comm_time(db_dev.T, policy, bw, seed=seed + 4)
+    c_agg = comm_time(d_agg.T, policy, bw, seed=seed + 5)   # |overline{Ca+Cb}|
+
+    # Per-device compute times.
+    recv_a = strip_diagonal(da_dev).sum(axis=0)
+    recv_b = strip_diagonal(db_dev).sum(axis=0)
+    ga = trace_a.gate / comp
+    gb = trace_b.gate / comp
+    fa = trace_a.ffn_time(recv_a) / comp
+    fb = trace_b.ffn_time(recv_b) / comp
+    aa = trace_a.agg / comp
+    ab = trace_b.agg / comp
+
+    # Table 2 recurrence (maxima across devices).
+    e_gb = float(gb.max())
+    e_na = na                                    # End(N^a) = |N̄^a|
+    e_fa = max(e_gb, e_na) + float(fa.max())
+    e_nb = max(n_agg, e_gb + nb)                 # End(N^b) = |overline{Na+Nb}|
+    e_fb = max(e_fa, e_nb) + float(fb.max())
+    e_ca = max(e_nb, e_fa) + ca                  # network frees at E_Nb; §6.2:
+    #   |overline{Na+Nb+Ca}| = |overline{Na+Nb}| + |C̄a|, floored by E_Fa.
+    e_aa = max(e_fb, e_ca) + float(aa.max())
+    # End(C^b) = |overline{Na+Nb}| + |overline{Ca+Cb}| (the two return
+    # all-to-alls overlap), floored by its compute producer and by E_Ca.
+    e_cb = max(e_nb + c_agg, e_fb + cb, e_ca)
+    e_ab = max(e_aa, e_cb) + float(ab.max())
+    t = e_ab + float(ga.max())  # Eqn 4: + |G^a| of the next round
+
+    busy = ga + gb + fa + fb + aa + ab
+    util = float(np.mean(busy / t)) if t > 0 else 1.0
+    return SimResult(t, util, dict(
+        Na=na, Nb=nb, Nagg=n_agg, Ca=ca, Cb=cb,
+        E_Fa=e_fa, E_Fb=e_fb, E_Ab=e_ab,
+    ))
+
+
+def lina_inference_time(
+    trace: MoETrace,
+    layer: int,
+    cluster: Cluster,
+    device_subset: np.ndarray | None = None,
+    policy: str = "aurora",
+    seed: int = 0,
+) -> SimResult:
+    """Lina baseline: two experts of the SAME model per device.
+
+    The model's n experts pack onto n/2 devices (popular-with-unpopular);
+    colocated same-model experts stay bound to the synchronous all-to-all, so
+    the phase structure is the exclusive one with merged traffic and doubled
+    per-device FFN load (Fig 3a).
+    """
+    d_exp = trace.layer(layer)
+    merged, pairs = lina_packing(d_exp)
+    m = merged.shape[0]
+    if device_subset is None:
+        device_subset = np.arange(m)
+    devs = [cluster.devices[i] for i in np.asarray(device_subset)]
+    bw = np.asarray([d.bandwidth for d in devs], float)
+    comp = np.asarray([d.compute for d in devs], float)
+
+    recv_tokens = strip_diagonal(merged).sum(axis=0)
+    gate = trace.gate / comp
+    # Two experts per device: two weight-loads (fixed cost counted twice).
+    ffn = (trace.ffn_fixed + trace.ffn_time(recv_tokens)) / comp
+    agg = trace.agg / comp
+    n_time = comm_time(merged, policy, bw, seed=seed)
+    c_time = comm_time(merged.T, policy, bw, seed=seed + 1)
+
+    t = float(gate.max() + n_time + ffn.max() + c_time + agg.max())
+    busy = gate + ffn + agg
+    util = float(np.mean(busy / t)) if t > 0 else 1.0
+    return SimResult(t, util, dict(pairs=pairs, N=n_time, C=c_time))
+
+
+def mean_over_layers(fn, n_layers: int, **kw) -> SimResult:
+    """Average a per-layer simulator over all layers of a trace."""
+    results = [fn(layer=l, **kw) for l in range(n_layers)]
+    return SimResult(
+        inference_time=float(np.mean([r.inference_time for r in results])),
+        utilization=float(np.mean([r.utilization for r in results])),
+        detail={"per_layer": [r.inference_time for r in results]},
+    )

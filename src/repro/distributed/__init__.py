@@ -1,0 +1,7 @@
+"""Distributed runtime: shard_map collectives for expert parallelism."""
+
+from .alltoall import (aurora_rounds_from_schedule, ep_all_to_all,
+                       ep_dispatch_combine, round_robin_rounds)
+
+__all__ = ["aurora_rounds_from_schedule", "ep_all_to_all",
+           "ep_dispatch_combine", "round_robin_rounds"]

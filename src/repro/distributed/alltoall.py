@@ -1,0 +1,234 @@
+"""Expert-parallel dispatch/combine collectives.
+
+The MoE all-to-all is realized two ways:
+
+1. **Baseline** — one monolithic ``jax.lax.all_to_all`` per phase. This is
+   what existing systems (GShard / DeepSpeed-MoE / Tutel) lower to and what
+   the paper's baselines model: the runtime picks an arbitrary transmission
+   order, so receivers can suffer bandwidth contention.
+
+2. **Aurora** — the paper's Thm 4.2 schedule: a static sequence of
+   ``lax.ppermute`` **permutation rounds**. Each round is a (partial)
+   permutation of the devices, so every device sends to at most one peer and
+   receives from at most one peer — exactly the paper's contention-free
+   invariant, and also the contention-free traffic pattern for the TPU ICI
+   torus. The round order is computed host-side by ``repro.core.schedule``
+   from historical traffic statistics (the paper's §2.4 prerequisite) and
+   baked into the compiled program ("a buffer layer … calls communication
+   collective libraries in the desired order", §3).
+
+Both variants move identical bytes; on real hardware the Aurora variant
+avoids receiver contention for skewed traffic. On the dry-run we verify both
+lower/compile and that the HLO shows the expected collective structure.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Round construction (host side)
+# ---------------------------------------------------------------------------
+
+def round_robin_rounds(n: int) -> tuple[tuple[int, ...], ...]:
+    """Default contention-free cover: n-1 cyclic-shift permutations.
+
+    Round r sends i → (i + r) mod n. Every ordered pair appears exactly once
+    and every round is a full permutation — the unscheduled (traffic-blind)
+    member of the family Aurora optimizes over.
+    """
+    return tuple(
+        tuple((i + r) % n for i in range(n)) for r in range(1, n)
+    )
+
+
+def aurora_rounds_from_schedule(schedule, n: int) -> tuple[tuple[int, ...], ...]:
+    """Collapse a ``CommSchedule`` into one exchange round per (src, dst) pair.
+
+    The BvN schedule may split a pair across slots (durations differ); the
+    static lowering moves each pair's whole capacity bucket in the slot where
+    the pair FIRST appears — preserving Aurora's *ordering* decision (heavy
+    pairs early, contention-free rounds). Pairs absent from the schedule
+    (zero historical traffic) are appended as round-robin cleanup rounds so
+    the exchange stays correct under traffic drift (§8 Q4).
+    """
+    seen = np.zeros((n, n), dtype=bool)
+    rounds: list[tuple[int, ...]] = []
+    for slot in schedule.slots:
+        dst = []
+        any_new = False
+        for i, j in enumerate(slot.dst):
+            if j >= 0 and not seen[i, j]:
+                seen[i, j] = True
+                dst.append(j)
+                any_new = True
+            else:
+                dst.append(-1)
+        if any_new:
+            rounds.append(tuple(dst))
+    # Cleanup: cover never-seen off-diagonal pairs with round-robin shifts.
+    for r in range(1, n):
+        dst = []
+        any_new = False
+        for i in range(n):
+            j = (i + r) % n
+            if not seen[i, j]:
+                seen[i, j] = True
+                dst.append(j)
+                any_new = True
+            else:
+                dst.append(-1)
+        if any_new:
+            rounds.append(tuple(dst))
+    return tuple(rounds)
+
+
+# ---------------------------------------------------------------------------
+# In-shard_map exchange primitives
+# ---------------------------------------------------------------------------
+
+def _exchange_rounds(buf, axis_names, rounds) -> jnp.ndarray:
+    """Scheduled exchange: buf (n, ...) slices; out[s] = buf_of_device_s[me].
+
+    Equivalent to ``lax.all_to_all(buf, axes, 0, 0)`` but expressed as the
+    static ppermute round sequence (each round a partial permutation).
+    Multi-axis EP (e.g. deepseek's flat ('data','model') = 256) uses the
+    row-major flattened device index, matching all_to_all's ordering.
+    """
+    n = buf.shape[0]
+    me = jnp.zeros((), jnp.int32)
+    for ax in axis_names:
+        me = me * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+    axis_name = tuple(axis_names) if len(axis_names) > 1 else axis_names[0]
+    # Row n is a scratch slot for rounds in which this device receives nothing.
+    out = jnp.zeros((n + 1,) + buf.shape[1:], buf.dtype)
+    for dst_vec in rounds:
+        dst = np.asarray(dst_vec)
+        src = np.full(n, n, dtype=np.int64)          # n = scratch
+        for i, j in enumerate(dst):
+            if j >= 0:
+                src[j] = i
+        perm = [(i, int(j)) for i, j in enumerate(dst) if j >= 0]
+        send_idx = jnp.asarray(np.where(dst < 0, 0, dst))[me]
+        send = jax.lax.dynamic_index_in_dim(buf, send_idx, 0, keepdims=False)
+        recv = jax.lax.ppermute(send, axis_name, perm)
+        write_idx = jnp.asarray(src)[me]
+        out = jax.lax.dynamic_update_index_in_dim(out, recv, write_idx, 0)
+    # Self-traffic never crosses the network (paper §4.2 footnote 1).
+    out = jax.lax.dynamic_update_index_in_dim(
+        out, jax.lax.dynamic_index_in_dim(buf, me, 0, keepdims=False), me, 0)
+    return out[:n]
+
+
+def ep_all_to_all(buf, axis_names, rounds=None) -> jnp.ndarray:
+    """Dispatch exchange over the flat EP axis. buf: (n_ep, ...) per device.
+
+    Result[s] = what device s sent to me. ``rounds=None`` → monolithic
+    all_to_all; otherwise the Aurora ppermute schedule (works for single-
+    and multi-axis flat EP).
+    """
+    if rounds is not None:
+        return _exchange_rounds(buf, tuple(axis_names), rounds)
+    return jax.lax.all_to_all(buf, axis_names, split_axis=0, concat_axis=0,
+                              tiled=False)
+
+
+# ---------------------------------------------------------------------------
+# Full dispatch → expert FFN → combine (runs inside shard_map)
+# ---------------------------------------------------------------------------
+
+def _local_dispatch_combine(xt, valid, router_w, experts, moe, act,
+                            ep_axes, token_axes, rounds):
+    """Per-device body. xt: (T_loc, d) local token slice."""
+    from repro.models.moe import capacity, dispatch_indices, route
+
+    t_loc, d = xt.shape
+    n_ep = 1
+    for ax in ep_axes:
+        n_ep *= jax.lax.axis_size(ax)
+    e = moe.n_experts
+    epd = e // n_ep                                  # experts per device
+
+    gates, idx, aux = route(router_w, xt, moe)
+    aux = jax.lax.pmean(aux, token_axes)
+    cap = capacity(t_loc, moe.top_k, e, moe.capacity_factor)
+    slot, keep = dispatch_indices(idx, e, cap)
+    keep = keep & valid[:, None]
+
+    # Scatter local tokens into per-(expert) capacity buckets: (E, C, d).
+    buf = jnp.zeros((e, cap, d), xt.dtype)
+    tok_ids = jnp.broadcast_to(jnp.arange(t_loc)[:, None], idx.shape)
+    e_f, s_f, t_f = idx.reshape(-1), slot.reshape(-1), tok_ids.reshape(-1)
+    k_f = keep.reshape(-1)
+    safe_s = jnp.where(k_f, s_f, cap - 1)
+    buf = buf.at[e_f, safe_s].add(jnp.where(k_f[:, None], xt[t_f], 0.0))
+
+    # First all-to-all (token dispatch, D_N).
+    buf = buf.reshape(n_ep, epd, cap, d)
+    recv = ep_all_to_all(buf, ep_axes, rounds)       # (n_src, epd, C, d)
+    recv = recv.transpose(1, 0, 2, 3).reshape(epd, n_ep * cap, d)
+
+    # Expert FFN on this device's experts.
+    from repro.models.layers import ffn_apply
+    out = jax.vmap(lambda p, xb: ffn_apply(p, xb, act))(experts, recv)
+
+    # Second all-to-all (expert-output return, D_C = D_N^T): same rounds —
+    # the two phases are exact reverses (§2.2), so the contention-free
+    # property carries over by symmetry.
+    out = out.reshape(epd, n_ep, cap, d).transpose(1, 0, 2, 3)
+    back = ep_all_to_all(out, ep_axes, rounds)       # (E_dev_of_pair …)
+    back = back.reshape(e, cap, d)
+
+    # Local combine.
+    picked = back[e_f, safe_s]
+    picked = jnp.where(k_f[:, None], picked, 0.0)
+    y = jnp.zeros_like(xt).at[t_f].add(
+        picked * gates.reshape(-1)[:, None])
+    return y, aux
+
+
+def ep_dispatch_combine(xt, router_w, experts, moe, act, pc):
+    """shard_map wrapper. xt: (T, d) global.
+
+    The flat token axis shards over ``pc.token_axes`` (all mesh axes —
+    including ``pod``); the all-to-all collectives run over ``pc.ep_axes``
+    only, so each pod performs its own expert exchange and **no all-to-all
+    crosses the DCN boundary** (DESIGN.md §6). Pads T to a multiple of the
+    token-shard count (decode steps can have fewer tokens than devices);
+    padded tokens are masked out of dispatch.
+    """
+    ep_axes = tuple(pc.ep_axes)
+    token_axes = tuple(pc.token_axes) or ep_axes
+    mesh = pc.mesh
+    n_tok_shards = 1
+    for ax in token_axes:
+        n_tok_shards *= mesh.shape[ax]
+    t = xt.shape[0]
+    t_pad = -(-t // n_tok_shards) * n_tok_shards
+    valid = jnp.arange(t_pad) < t
+    if t_pad != t:
+        xt = jnp.pad(xt, ((0, t_pad - t), (0, 0)))
+
+    rounds = pc.aurora_rounds if pc.moe_impl == "aurora" else None
+    if pc.moe_impl == "aurora" and rounds is None:
+        n_ep = 1
+        for ax in ep_axes:
+            n_ep *= mesh.shape[ax]
+        rounds = round_robin_rounds(n_ep)
+
+    fn = shard_map(
+        lambda xs, vs, rw, ex: _local_dispatch_combine(
+            xs, vs, rw, ex, moe, act, ep_axes, token_axes, rounds),
+        mesh=mesh,
+        in_specs=(P(token_axes, None), P(token_axes), P(), P(ep_axes)),
+        out_specs=(P(token_axes, None), P()),
+        check_vma=False,
+    )
+    y, aux = fn(xt, valid, router_w, experts)
+    return y[:t], aux

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: single-query flash-decode attention.
+
+The decode shapes (``decode_32k``, ``long_500k``) are dominated by streaming
+the KV cache past one query token — a pure memory-bandwidth problem. The
+kernel tiles the cache into (block_s, Hkv, D) VMEM blocks and maintains an
+online-softmax running (max, sum, accumulator) across sequence blocks, so
+the (S)-long score row is never materialized in HBM and each cache byte is
+read exactly once.
+
+TPU mapping: grid (B, S/block_s) with the sequence axis innermost
+(arbitrary = sequential accumulation). GQA is handled in-block: q is viewed
+as (Hkv, G, D) and scores are computed per kv-head group. ``valid_len``
+masks cache slots beyond the fill level (per batch row).
+
+Validated against ``ref.decode_attn_ref`` in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(vl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, block_s: int, n_s: int, scale: float):
+    s_idx = pl.program_id(1)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                    # (H, D)
+    k = k_ref[0]                                    # (bs, Hkv, D)
+    v = v_ref[0]
+    h, d = q.shape
+    bs, hkv, _ = k.shape
+    g = h // hkv
+
+    qg = q.reshape(hkv, g, d)
+    scores = jax.lax.dot_general(
+        qg.astype(jnp.float32), k.astype(jnp.float32).transpose(1, 2, 0),
+        (((2,), (1,)), ((0,), (0,))),
+    ) * scale                                        # (hkv, g, bs)
+    scores = scores.reshape(h, bs)
+
+    valid = (s_idx * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, (h, bs), 1)) < vl_ref[0]
+    scores = jnp.where(valid, scores, _NEG_INF)
+
+    m_prev = m_ref[...]                              # (H, 1)
+    m_new = jnp.maximum(m_prev, scores.max(axis=-1, keepdims=True))
+    p = jnp.exp(scores - m_new)                      # (H, bs)
+    corr = jnp.exp(m_prev - m_new)                   # (H, 1)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    pg = p.reshape(hkv, g, bs)
+    ctx = jax.lax.dot_general(
+        pg, v.astype(jnp.float32).transpose(1, 0, 2),
+        (((2,), (1,)), ((0,), (0,))),
+    )                                                # (hkv, g, d)
+    acc_ref[...] = acc_ref[...] * corr[:, :, None].reshape(h, 1) + \
+        ctx.reshape(h, d)
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attn(q, k, v, valid_len, *, block_s: int = 512,
+                interpret: bool = False):
+    """Flash-decode. q: (B, H, D); k/v: (B, S, Hkv, D); valid_len: (B,)."""
+    b, h, d = q.shape
+    s = k.shape[1]
+    bs = min(block_s, s)
+    if s % bs:
+        raise ValueError(f"S={s} not divisible by block_s={bs}")
+    n_s = s // bs
+    grid = (b, n_s)
+    return pl.pallas_call(
+        functools.partial(_kernel, block_s=bs, n_s=n_s, scale=d ** -0.5),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, s_: (b_,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, h, d), lambda b_, s_: (b_, 0, 0)),
+            pl.BlockSpec((1, bs, k.shape[2], d), lambda b_, s_: (b_, s_, 0, 0)),
+            pl.BlockSpec((1, bs, k.shape[2], d), lambda b_, s_: (b_, s_, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda b_, s_: (b_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),     # running max
+            pltpu.VMEM((h, 1), jnp.float32),     # running sum
+            pltpu.VMEM((h, d), jnp.float32),     # context accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(valid_len, q, k, v)

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: grouped expert FFN (the MoE compute hot-spot).
+
+Computes, per expert e over its capacity bucket:
+
+    y[e] = (act(x[e] @ w_gate[e]) * (x[e] @ w_up[e])) @ w_down[e]
+
+in one fused kernel — the (E, C, d) dispatch buffer produced by the
+all-to-all is consumed directly, so the gate/up/down matmuls and the
+activation never round-trip through HBM between them.
+
+TPU mapping: grid (E, C/bc, F/bf) with the f-axis innermost as a reduction —
+each (e, c) output block accumulates partial ``h_blk @ w_down_blk`` products
+across f-steps in a float32 VMEM scratch accumulator, flushing to the output
+on the last step. Block shapes keep the working set in VMEM
+(x (bc,d) + w (d,bf)·2 + w_down (bf,d) + acc (bc,d)f32 ≈ 11 MB at
+bc=bf=128, d=7168) and all matmul dims are multiples of 128 for the MXU.
+
+Validated against ``ref.moe_ffn_ref`` in interpret mode (this container is
+CPU-only; TPU is the target).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref, *, act: str,
+            n_f: int):
+    f_idx = pl.program_id(2)
+
+    @pl.when(f_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]                                   # (bc, d)
+    hg = jnp.dot(x, wg_ref[0], preferred_element_type=jnp.float32)
+    hu = jnp.dot(x, wu_ref[0], preferred_element_type=jnp.float32)
+    act_fn = jax.nn.gelu if act == "geglu" else jax.nn.silu
+    h = (act_fn(hg) * hu).astype(x.dtype)          # (bc, bf)
+    acc_ref[...] += jnp.dot(h, wd_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(f_idx == n_f - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("act", "block_c", "block_f",
+                                             "interpret"))
+def moe_gmm(x, w_gate, w_up, w_down, *, act: str = "swiglu",
+            block_c: int = 128, block_f: int = 128,
+            interpret: bool = False):
+    """Fused grouped expert FFN.
+
+    x: (E, C, d); w_gate/w_up: (E, d, f); w_down: (E, f, d) → (E, C, d).
+    C and f must be divisible by the block sizes (the dispatch path pads
+    capacity to multiples of 8·block granularity already).
+    """
+    e, c, d = x.shape
+    f = w_gate.shape[-1]
+    bc = min(block_c, c)
+    bf = min(block_f, f)
+    if c % bc or f % bf:
+        raise ValueError(f"C={c} / F={f} not divisible by blocks {bc}/{bf}")
+    n_f = f // bf
+    grid = (e, c // bc, n_f)
+    return pl.pallas_call(
+        functools.partial(_kernel, act=act, n_f=n_f),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, d), lambda e_, c_, f_: (e_, c_, 0)),
+            pl.BlockSpec((1, d, bf), lambda e_, c_, f_: (e_, 0, f_)),
+            pl.BlockSpec((1, d, bf), lambda e_, c_, f_: (e_, 0, f_)),
+            pl.BlockSpec((1, bf, d), lambda e_, c_, f_: (e_, f_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, d), lambda e_, c_, f_: (e_, c_, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, c, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, d), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w_gate, w_up, w_down)

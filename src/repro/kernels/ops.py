@@ -1,0 +1,40 @@
+"""Jit'd wrappers over the Pallas kernels with automatic fallback.
+
+``use_pallas(interpret=...)`` selects the execution mode:
+- On TPU: compiled Pallas (the production path).
+- On CPU (this container): ``interpret=True`` executes the kernel body in
+  Python for correctness validation; the model default remains the pure-jnp
+  reference so tests stay fast.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .decode_attn import decode_attn
+from .moe_gmm import moe_gmm
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def moe_ffn(x, w_gate, w_up, w_down, act: str = "swiglu",
+            impl: str = "auto", interpret: bool | None = None):
+    """Grouped expert FFN: Pallas on TPU, reference elsewhere."""
+    if impl == "ref" or (impl == "auto" and not on_tpu() and not interpret):
+        return ref.moe_ffn_ref(x, w_gate, w_up, w_down, act)
+    return moe_gmm(x, w_gate, w_up, w_down, act=act,
+                   interpret=bool(interpret) if interpret is not None
+                   else not on_tpu())
+
+
+def flash_decode(q, k, v, valid_len, impl: str = "auto",
+                 interpret: bool | None = None):
+    """Single-query attention: Pallas on TPU, reference elsewhere."""
+    if impl == "ref" or (impl == "auto" and not on_tpu() and not interpret):
+        return ref.decode_attn_ref(q, k, v, valid_len)
+    return decode_attn(q, k, v, valid_len,
+                       interpret=bool(interpret) if interpret is not None
+                       else not on_tpu())

@@ -1,0 +1,149 @@
+"""Abstract input/state specs for the dry-run: ShapeDtypeStructs with
+NamedShardings — weak-type-correct, shardable, zero allocation.
+
+Per input shape (configs/shapes.py):
+  train_4k     → train_step(params, opt, batch)
+  prefill_32k  → prefill_step(params, inputs, cache)
+  decode_*     → serve_step(params, token, cache)   (ONE token, full cache)
+
+Family conventions (DESIGN.md §5): VLM prefill takes patch embeddings;
+audio (enc-dec) prefill takes source frames + a target prefix of
+``seq_len // 4``; enc-dec decode carries a ``SRC_LEN``-frame cross-attention
+context. ``long_500k`` only lowers for sub-quadratic configs (shape-skip
+matrix in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import Model, transformer as tf
+from repro.sharding import cache_specs, input_sharding, make_pc, param_specs
+from repro.training.optim import AdamWConfig, adamw_init
+
+SRC_LEN = 4_096          # enc-dec cross-attention context at decode
+AUDIO_TGT_FRac = 4       # enc-dec: target prefix = seq_len // 4
+
+# >100B-param configs keep AdamW moments in bf16 so optimizer state fits
+# HBM on 256 chips (recorded in EXPERIMENTS.md §Dry-run).
+BIG_MODEL_PARAMS = 100e9
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _tree_sds(shapes_tree, specs_tree, mesh):
+    return jax.tree.map(
+        lambda s, p: _sds(s.shape, s.dtype, mesh, p), shapes_tree, specs_tree)
+
+
+def supported(cfg, shape) -> bool:
+    """Shape-skip matrix (DESIGN.md §5)."""
+    if shape.name == "long_500k":
+        return cfg.subquadratic
+    return True
+
+
+def opt_config_for(cfg) -> AdamWConfig:
+    big = cfg.param_count() > BIG_MODEL_PARAMS
+    return AdamWConfig(state_dtype="bfloat16" if big else "float32")
+
+
+def abstract_params(cfg, mesh):
+    shapes = jax.eval_shape(lambda: tf.init_params(jax.random.PRNGKey(0), cfg))
+    specs = param_specs(cfg, mesh)
+    return _tree_sds(shapes, specs, mesh)
+
+
+def abstract_opt(cfg, mesh, params_abs):
+    opt_cfg = opt_config_for(cfg)
+    shapes = jax.eval_shape(lambda: adamw_init(
+        jax.tree.map(lambda a: jnp.zeros(a.shape, a.dtype), params_abs),
+        opt_cfg))
+    pspecs = param_specs(cfg, mesh)
+    specs = {"m": pspecs, "v": pspecs, "step": P()}
+    return _tree_sds(shapes, specs, mesh), opt_cfg
+
+
+def abstract_cache(cfg, mesh, batch, cap, src_len=0):
+    shapes = jax.eval_shape(
+        lambda: tf.init_cache(cfg, batch, cap, src_len=src_len))
+    specs = cache_specs(cfg, mesh, batch, cap, src_len=src_len)
+    return _tree_sds(shapes, specs, mesh)
+
+
+def input_specs(cfg, shape, mesh) -> dict:
+    """Abstract step inputs for one (arch × input-shape × mesh)."""
+    b, s = shape.global_batch, shape.seq_len
+    bspec = input_sharding(cfg, mesh, b)
+    batch_ax = bspec[0] if len(bspec) else None
+
+    def tok(shape_):
+        return _sds(shape_, jnp.int32, mesh, P(batch_ax) if len(shape_) == 2
+                    else P(batch_ax, None, None))
+
+    if shape.kind == "train":
+        if cfg.is_encoder_decoder:
+            return {"frames": _sds((b, s, cfg.frontend_dim), jnp.bfloat16,
+                                   mesh, P(batch_ax, None, None)),
+                    "tokens": tok((b, s // AUDIO_TGT_FRac))}
+        return {"tokens": tok((b, s))}
+    if shape.kind == "prefill":
+        if cfg.is_encoder_decoder:
+            return {"frames": _sds((b, s, cfg.frontend_dim), jnp.bfloat16,
+                                   mesh, P(batch_ax, None, None)),
+                    "tokens": tok((b, s // AUDIO_TGT_FRac))}
+        if cfg.input_mode == "patches":
+            return {"embeds": _sds((b, s, cfg.frontend_dim), jnp.bfloat16,
+                                   mesh, P(batch_ax, None, None))}
+        return {"tokens": tok((b, s))}
+    # decode
+    return {"tokens": tok((b, 1))}
+
+
+def make_step_fns(cfg, mesh, moe_impl: str = "ep", aurora_rounds=None,
+                  unroll: bool = False):
+    """(train_step, prefill_step, serve_step) closed over a Model+mesh."""
+    import dataclasses as _dc
+    pc = make_pc(cfg, mesh, moe_impl=moe_impl, aurora_rounds=aurora_rounds)
+    if unroll:
+        pc = _dc.replace(pc, unroll_segments=True)
+    model = Model(cfg, pc)
+    from repro.training.loop import make_train_step
+    from repro.models import cross_entropy
+
+    opt_cfg = opt_config_for(cfg)
+    train_step = make_train_step(model, opt_cfg)
+
+    def prefill_step(params, inputs, cache):
+        return model.prefill(params, inputs, cache)
+
+    def serve_step(params, token, cache):
+        return model.decode_step(params, token, cache)
+
+    return model, train_step, prefill_step, serve_step
+
+
+def lowering_args(cfg, shape, mesh, moe_impl: str = "ep",
+                  aurora_rounds=None, unroll: bool = False):
+    """(step_fn, abstract_args) ready for jit(...).lower(*args)."""
+    model, train_step, prefill_step, serve_step = make_step_fns(
+        cfg, mesh, moe_impl, aurora_rounds, unroll=unroll)
+    params = abstract_params(cfg, mesh)
+    inputs = input_specs(cfg, shape, mesh)
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        opt, _ = abstract_opt(cfg, mesh, params)
+        return train_step, (params, opt, inputs)
+    if shape.kind == "prefill":
+        tgt = (s // AUDIO_TGT_FRac) if cfg.is_encoder_decoder else s
+        cache = abstract_cache(cfg, mesh, b, tgt,
+                               src_len=s if cfg.is_encoder_decoder else 0)
+        return prefill_step, (params, inputs, cache)
+    cache = abstract_cache(cfg, mesh, b, s,
+                           src_len=SRC_LEN if cfg.is_encoder_decoder else 0)
+    return serve_step, (params, inputs["tokens"], cache)

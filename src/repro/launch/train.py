@@ -1,0 +1,58 @@
+"""Training driver.
+
+Single-host (CPU/example) mode runs a real loop on a reduced config:
+
+  python -m repro.launch.train --arch phi3.5-moe-42b-a6.6b --reduced \
+      --steps 100 --batch 8 --seq 128
+
+On the production mesh the same script is pointed at the full config with
+``--mesh pod16x16`` (the step function is identical to the one the dry-run
+lowers for ``train_4k``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.training import (AdamWConfig, SyntheticLMData,
+                                save_checkpoint, train_loop)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = Model(cfg)
+    data = SyntheticLMData(
+        cfg.vocab, seq_len=args.seq, batch=args.batch,
+        frames_dim=cfg.frontend_dim if cfg.is_encoder_decoder else 0,
+        frames_len=args.seq if cfg.is_encoder_decoder else 0)
+    state, hist = train_loop(
+        model, data, steps=args.steps,
+        opt_cfg=AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1)),
+        log_every=args.log_every)
+    for h in hist:
+        print(json.dumps({k: round(v, 4) if isinstance(v, float) else v
+                          for k, v in h.items()}))
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, state.params, step=state.step)
+        print(f"saved checkpoint to {args.checkpoint}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,100 @@
+"""Top-level model facade: one API over all 10 assigned architectures.
+
+``Model(cfg)`` exposes:
+  init(key)                          → params
+  train_logits(params, batch)        → (logits, aux)
+  prefill(params, inputs, cache)     → (logits, cache)
+  decode_step(params, token, cache)  → (logits, cache)
+  init_cache(batch, cap)             → cache pytree
+
+Input conventions per family (see DESIGN.md §5):
+  text archs       tokens (B, S) int32
+  vlm              prefill takes ``embeds`` (B, S, frontend_dim) patch
+                   embeddings from the vision-stub; train/decode take tokens
+  audio (enc-dec)  ``frames`` (B, S_src, frontend_dim); the decoder runs on
+                   target tokens; cross-K/V is cached at prefill
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .layers import NO_PARALLEL, ParallelContext
+from . import transformer as tf
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: object
+    pc: ParallelContext = NO_PARALLEL
+
+    # -- params / cache ----------------------------------------------------
+    def init(self, key):
+        return tf.init_params(key, self.cfg)
+
+    def init_cache(self, batch: int, cap: int, src_len: int = 0):
+        return tf.init_cache(self.cfg, batch, cap, src_len=src_len)
+
+    @property
+    def padded_vocab(self) -> int:
+        return tf.padded_vocab(self.cfg)
+
+    # -- training ----------------------------------------------------------
+    def train_logits(self, params, batch, remat: bool = True):
+        """batch: {"tokens": (B,S)} (+ "frames" for enc-dec, "embeds" for
+        vlm-style pretraining). Returns (logits, aux_loss)."""
+        cfg = self.cfg
+        enc_out = None
+        if cfg.is_encoder_decoder:
+            enc_out = tf.encode(params, cfg, batch["frames"], self.pc)
+        logits, _, aux = tf.forward(
+            params, cfg, tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"), mode="train", pc=self.pc,
+            enc_out=enc_out, remat=remat)
+        return logits, aux
+
+    # -- serving -----------------------------------------------------------
+    def prefill(self, params, inputs, cache):
+        """inputs: {"tokens"} | {"embeds"} | {"frames", "tokens"}."""
+        cfg = self.cfg
+        enc_out = None
+        if cfg.is_encoder_decoder:
+            enc_out = tf.encode(params, cfg, inputs["frames"], self.pc)
+        logits, cache, _ = tf.forward(
+            params, cfg, tokens=inputs.get("tokens"),
+            embeds=inputs.get("embeds"), mode="prefill", cache=cache,
+            pc=self.pc, enc_out=enc_out)
+        return logits, cache
+
+    def decode_step(self, params, token, cache):
+        """token: (B, 1) int32. Returns (logits (B,1,V), cache)."""
+        logits, cache, _ = tf.forward(
+            params, self.cfg, tokens=token, mode="decode", cache=cache,
+            pc=self.pc)
+        return logits, cache
+
+
+def cross_entropy(logits, labels, vocab: int):
+    """Mean CE over tokens; logits (B,S,Vpad) may carry padded vocab slots.
+
+    Written to stay VOCAB-SHARDED under GSPMD (§Perf iteration 2): the
+    padded-slot mask is an elementwise iota compare (no cross-shard
+    scatter), and the label logit is a fused select+reduce instead of
+    ``take_along_axis`` — the naive forms forced XLA to all-gather the full
+    (B, S, 152k) f32 logits to every device (74 GiB/step on qwen3 train).
+    Only (B, S)-sized partial sums cross the mesh.
+    """
+    vpad = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    slot = jnp.arange(vpad)
+    if vpad > vocab:
+        logits = jnp.where(slot >= vocab, -1e30, logits)
+    # logsumexp: local max/sum over the vocab shard + tiny all-reduces.
+    m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    # Label logit: compare-select-reduce fuses into the logits producer.
+    lab = jnp.where(slot == labels[..., None], logits, 0.0).sum(-1)
+    return (lse - lab).mean()

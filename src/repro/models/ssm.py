@@ -1,0 +1,229 @@
+"""Mamba2 (State-Space Duality) blocks [arXiv:2405.21060].
+
+Chunked SSD forward for train/prefill — the block-decomposition of the
+semiseparable attention form: intra-chunk "attention" with the 1-SS decay
+mask plus an inter-chunk state recurrence carried by ``lax.scan`` — and a
+constant-time single-token recurrence for decode (this is what makes SSM
+archs eligible for the ``long_500k`` shape: no KV cache, O(1) state).
+
+TPU adaptation: the chunk length is the tile unit — intra-chunk einsums are
+(Q×Q)·(Q×P) matmuls that map onto the MXU; the sequential part is only the
+S/Q chunk-granular scan. Heads/d_inner shard over the tensor axis; batch over
+data; the scan itself is unsharded in sequence (chunk recurrence is serial).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rmsnorm
+
+
+def d_inner_of(cfg) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+def n_heads_of(cfg) -> int:
+    return d_inner_of(cfg) // cfg.ssm.head_dim
+
+
+def conv_dim_of(cfg) -> int:
+    return d_inner_of(cfg) + 2 * cfg.ssm.n_groups * cfg.ssm.d_state
+
+
+def init_mamba(key, cfg, dtype) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = d_inner_of(cfg)
+    h = n_heads_of(cfg)
+    cdim = conv_dim_of(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    in_dim = 2 * di + 2 * s.n_groups * s.d_state + h
+    return {
+        "in_proj": jax.random.normal(k1, (d, in_dim), dtype) * d ** -0.5,
+        "conv_w": jax.random.normal(k2, (s.conv_kernel, cdim), dtype) * 0.3,
+        "conv_b": jnp.zeros((cdim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.zeros((di,), dtype),
+        "out_proj": jax.random.normal(k3, (di, d), dtype) * di ** -0.5,
+    }
+
+
+def init_ssm_cache(cfg, batch: int, dtype) -> dict:
+    s = cfg.ssm
+    return {
+        "conv": jnp.zeros((batch, s.conv_kernel - 1, conv_dim_of(cfg)), dtype),
+        "state": jnp.zeros((batch, n_heads_of(cfg), s.head_dim, s.d_state),
+                           jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv
+# ---------------------------------------------------------------------------
+
+def _conv_scan(w, b, x, init_state):
+    """Causal depthwise conv1d. x: (B, S, C); init_state: (B, K-1, C)."""
+    k = w.shape[0]
+    xp = jnp.concatenate([init_state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    new_state = xp[:, xp.shape[1] - (k - 1):]
+    return jax.nn.silu(out + b), new_state
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD
+# ---------------------------------------------------------------------------
+
+def _expand_groups(m, h: int):
+    """(B, S, G, N) → (B, S, H, N) by repeating each group H/G times."""
+    g = m.shape[2]
+    if g == h:
+        return m
+    return jnp.repeat(m, h // g, axis=2)
+
+
+def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int, init_state=None):
+    """SSD scan. x: (B,S,H,P); dt: (B,S,H); a: (H,) negative;
+    b_mat/c_mat: (B,S,G,N). Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // q
+
+    bh = _expand_groups(b_mat, h)
+    ch = _expand_groups(c_mat, h)
+
+    def to_chunks(t):
+        return t.reshape((bsz, nc, q) + t.shape[2:]).swapaxes(0, 1)
+
+    xs = (to_chunks(x.astype(jnp.float32) * dt[..., None]),
+          to_chunks((dt * a).astype(jnp.float32)),        # dA, negative
+          to_chunks(bh.astype(jnp.float32)),
+          to_chunks(ch.astype(jnp.float32)))
+
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(state, inp):
+        xdt, da, bc, cc = inp                     # (B,Q,H,P) (B,Q,H) (B,Q,H,N)
+        cum = jnp.cumsum(da, axis=1)              # (B,Q,H)
+        # Intra-chunk: 1-SS masked attention  L[q1,q2] = exp(cum_q1 - cum_q2).
+        rel = cum[:, :, None, :] - cum[:, None, :, :]      # (B,Q,Q,H)
+        tri = jnp.tril(jnp.ones((q, q), bool))[None, :, :, None]
+        # Mask BEFORE exp: upper-tri rel is positive and overflows, and
+        # where(mask, inf, 0) poisons the gradient with inf*0 = NaN.
+        l_mask = jnp.exp(jnp.where(tri, rel, -jnp.inf))
+        scores = jnp.einsum("bqhn,bkhn->bqkh", cc, bc) * l_mask
+        y = jnp.einsum("bqkh,bkhp->bqhp", scores, xdt)
+        # Contribution of the carried state.
+        y = y + jnp.einsum("bqhn,bhpn,bqh->bqhp", cc, state, jnp.exp(cum))
+        # New carried state.
+        decay_end = jnp.exp(cum[:, -1:, :] - cum)          # (B,Q,H)
+        new_state = jnp.einsum("bkhn,bkh,bkhp->bhpn", bc, decay_end, xdt)
+        state = state * jnp.exp(cum[:, -1])[:, :, None, None] + new_state
+        return state, y
+
+    final_state, ys = jax.lax.scan(step, init_state, xs)
+    y = ys.swapaxes(0, 1).reshape(bsz, nc * q, h, p)[:, :s]
+    return y, final_state
+
+
+def ssd_decode_step(x, dt, a, b_mat, c_mat, state):
+    """One-token recurrence. x: (B,H,P); dt: (B,H); b/c: (B,G,N);
+    state: (B,H,P,N). Returns (y (B,H,P), new_state)."""
+    h = x.shape[1]
+    bh = _expand_groups(b_mat[:, None], h)[:, 0]           # (B,H,N)
+    ch = _expand_groups(c_mat[:, None], h)[:, 0]
+    da = jnp.exp((dt * a).astype(jnp.float32))             # (B,H)
+    xdt = (x * dt[..., None]).astype(jnp.float32)
+    state = state * da[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", xdt, bh.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhpn->bhp", ch.astype(jnp.float32), state)
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 block
+# ---------------------------------------------------------------------------
+
+def _split_proj(cfg, zxbcdt):
+    s = cfg.ssm
+    di = d_inner_of(cfg)
+    gn = s.n_groups * s.d_state
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + di + 2 * gn], axis=-1)
+    return z, xbc, dt
+
+
+def mamba_block(p, x, cfg, cache=None):
+    """Mamba2 block, sequence mode (train / prefill).
+
+    x: (B, S, d). Returns (y, new_cache or None)."""
+    s = cfg.ssm
+    bsz, seq, _ = x.shape
+    di = d_inner_of(cfg)
+    h = n_heads_of(cfg)
+    gn = s.n_groups * s.d_state
+
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    conv_init = (cache["conv"] if cache is not None else
+                 jnp.zeros((bsz, s.conv_kernel - 1, xbc.shape[-1]), x.dtype))
+    xbc, conv_state = _conv_scan(p["conv_w"], p["conv_b"], xbc, conv_init)
+    xin, bmat, cmat = jnp.split(xbc, [di, di + gn], axis=-1)
+    xin = xin.reshape(bsz, seq, h, s.head_dim)
+    bmat = bmat.reshape(bsz, seq, s.n_groups, s.d_state)
+    cmat = cmat.reshape(bsz, seq, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+
+    init_state = cache["state"] if cache is not None else None
+    y, state = ssd_chunked(xin, dt, a, bmat, cmat, s.chunk, init_state)
+    y = y + p["D"][None, None, :, None] * xin.astype(jnp.float32)
+    y = y.reshape(bsz, seq, di).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ p["out_proj"]
+    new_cache = ({"conv": conv_state, "state": state}
+                 if cache is not None else None)
+    return out, new_cache
+
+
+def mamba_decode(p, x, cfg, cache):
+    """Mamba2 block, single-token decode. x: (B, 1, d)."""
+    s = cfg.ssm
+    bsz = x.shape[0]
+    di = d_inner_of(cfg)
+    h = n_heads_of(cfg)
+    gn = s.n_groups * s.d_state
+
+    zxbcdt = x[:, 0] @ p["in_proj"]                        # (B, ·)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    window = jnp.concatenate(
+        [cache["conv"].astype(x.dtype), xbc[:, None]], axis=1)  # (B, K, C)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:]
+
+    xin, bmat, cmat = jnp.split(xbc, [di, di + gn], axis=-1)
+    xin = xin.reshape(bsz, h, s.head_dim)
+    bmat = bmat.reshape(bsz, s.n_groups, s.d_state)
+    cmat = cmat.reshape(bsz, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+
+    y, state = ssd_decode_step(xin.astype(jnp.float32), dt, a, bmat, cmat,
+                               cache["state"])
+    y = y + p["D"][None, :, None] * xin.astype(jnp.float32)
+    y = y.reshape(bsz, di).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None]
+    return out, {"conv": new_conv, "state": state}

@@ -1,0 +1,7 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+
+from .analysis import (HW, collective_bytes_from_hlo, model_flops,
+                       roofline_report)
+
+__all__ = ["HW", "collective_bytes_from_hlo", "model_flops",
+           "roofline_report"]

@@ -1,0 +1,129 @@
+"""Three-term roofline from the compiled dry-run (deliverable g).
+
+This container is CPU-only (TPU v5e is the TARGET), so instead of measured
+MFU we derive, per (arch × shape × mesh):
+
+    compute    = HLO_FLOPs        / (chips × peak_FLOP/s)
+    memory     = HLO_bytes        / (chips × HBM_bw)
+    collective = collective_bytes / (chips × link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are NOT
+in cost_analysis — they are parsed from the compiled HLO text by summing
+operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op. The dominant term is the bottleneck the
+§Perf loop iterates on. We also record MODEL_FLOPS = 6·N·D (6·N_active·D
+for MoE) and the useful-compute ratio MODEL_FLOPS / HLO_FLOPs, which
+catches remat/redundancy waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    """TPU v5e hardware constants (per chip)."""
+    peak_flops: float = 197e12        # bf16 FLOP/s
+    hbm_bw: float = 819e9             # bytes/s
+    link_bw: float = 50e9             # bytes/s per ICI link
+
+
+V5E = HW()
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+    r"(\([^)]*\)|\S+)\s+"                    # result shape (maybe a tuple)
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+    re.MULTILINE,
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Histogram of bytes moved per collective kind.
+
+    Sizes are HLO result-shape sizes of the per-device (SPMD) program;
+    '-done' halves of async pairs are skipped so each collective counts
+    once. ``link_bytes`` approximates per-device ICI traffic: all-reduce
+    counts twice its shape (ring reduce+broadcast), everything else once.
+    """
+    out: dict = {"total_bytes": 0.0, "link_bytes": 0.0, "by_kind": {},
+                 "counts": {}}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        # Skip the -done half of async pairs (shape repeats the -start's).
+        tail = hlo_text[m.start():m.start() + 200]
+        if f"{kind}-done" in tail.split("(")[0]:
+            continue
+        b = _shape_bytes(shape_str)
+        out["by_kind"][kind] = out["by_kind"].get(kind, 0) + b
+        out["counts"][kind] = out["counts"].get(kind, 0) + 1
+        out["total_bytes"] += b
+        out["link_bytes"] += 2 * b if kind == "all-reduce" else b
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N·D train, 2·N·D inference (N = active params)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # decode: 1 token per seq
+
+
+def roofline_report(flops: float, hbm_bytes: float, collective_bytes: float,
+                    n_devices: int, cfg=None, shape=None,
+                    hw: HW = V5E, arg_bytes: float | None = None,
+                    out_bytes: float | None = None) -> dict:
+    """The three roofline terms (seconds) + bottleneck + useful-FLOP ratio.
+
+    ``flops``/``hbm_bytes``/``collective_bytes`` are PER-DEVICE (XLA's
+    cost_analysis reports the per-device SPMD program — verified on this
+    container against known-FLOP matmuls), so each term divides by one
+    chip's peak. ``n_devices`` scales MODEL_FLOPS (a global quantity) down
+    to per-device for the useful-compute ratio.
+    """
+    compute_s = flops / hw.peak_flops if flops else 0.0
+    memory_s = hbm_bytes / hw.hbm_bw if hbm_bytes else 0.0
+    collective_s = collective_bytes / hw.link_bw if collective_bytes else 0.0
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get) if any(terms.values()) else "none"
+    rec = dict(terms, dominant=dominant)
+    if arg_bytes is not None:
+        # Analytic HBM floor: every live byte (weights + state in, state
+        # out) touched exactly once. cost_analysis "bytes accessed" counts
+        # fusion-internal traffic and the CPU backend's f32 weight converts,
+        # so it is an upper bound; the floor brackets the truth from below.
+        rec["memory_floor_s"] = (arg_bytes + (out_bytes or 0.0)) / hw.hbm_bw
+    if cfg is not None and shape is not None:
+        mf = model_flops(cfg, shape)
+        rec["model_flops"] = mf
+        rec["useful_flop_ratio"] = (mf / n_devices / flops) if flops else 0.0
+    return rec

@@ -1,0 +1,6 @@
+"""Serving: batched single-model engine + Aurora dual-model colocation."""
+
+from .engine import Request, ServingEngine
+from .colocated import ColocatedEngine
+
+__all__ = ["Request", "ServingEngine", "ColocatedEngine"]

@@ -1,0 +1,101 @@
+"""Aurora dual-model colocated serving (§6 of the paper, as a runtime).
+
+The paper's key utilization insight: colocate experts of **two different
+models** so one model's compute overlaps the other model's all-to-all
+(Fig 3b) — same-model colocation (Lina) stays blocked behind its own
+synchronous all-to-all.
+
+TPU realization (DESIGN.md §3): GPU SM time-slicing has no literal TPU
+analogue, so the interleave is program-level — a single jitted
+``colocated_step`` evaluates model A's and model B's steps in one XLA
+program. A's MoE dispatch collectives (all-to-all / ppermute rounds) are
+async pairs in XLA (``collective-permute-start/done``), and B's compute is
+data-independent of them, so XLA's latency-hiding scheduler hoists B's FFN
+between A's start/done — the Fig 3(b) schedule, compiled in.
+
+The expert→device pairing comes from ``AuroraPlanner.plan_colocated``; it is
+applied by permuting model B's expert→device map before weights are placed
+(``apply_pairing``), so the aggregated per-device traffic matches the plan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import Model
+
+
+def apply_pairing(params_b, pair: list[int], cfg_b):
+    """Permute model B's expert dimension so b-expert ``pair[k]`` lands on
+    the device slot of a-expert k (the planner's colocation choice).
+
+    Expert weights live as stacked leaves (count, E, ...) under "experts".
+    """
+    perm = jnp.asarray(np.asarray(pair), jnp.int32)
+
+    def permute(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        if "experts" in names:
+            return jnp.take(leaf, perm, axis=1)   # (count, E, …) — E axis
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(permute, params_b)
+
+
+@dataclasses.dataclass
+class ColocatedEngine:
+    """Serve two models on one mesh with interleaved steps."""
+
+    model_a: Model
+    model_b: Model
+    params_a: object
+    params_b: object
+    jit: bool = True
+
+    def __post_init__(self):
+        def step(params_a, params_b, tok_a, tok_b, cache_a, cache_b):
+            # One XLA program: A's dispatch collectives overlap B's compute
+            # (and vice versa) under the latency-hiding scheduler.
+            logits_a, cache_a = self.model_a.decode_step(
+                params_a, tok_a, cache_a)
+            logits_b, cache_b = self.model_b.decode_step(
+                params_b, tok_b, cache_b)
+            return logits_a, logits_b, cache_a, cache_b
+
+        def prefill(params_a, params_b, in_a, in_b, cache_a, cache_b):
+            la, cache_a = self.model_a.prefill(params_a, in_a, cache_a)
+            lb, cache_b = self.model_b.prefill(params_b, in_b, cache_b)
+            return la, lb, cache_a, cache_b
+
+        # Donate both models' caches (in-place update, no per-step copy).
+        self._step = (jax.jit(step, donate_argnums=(4, 5))
+                      if self.jit else step)
+        self._prefill = (jax.jit(prefill, donate_argnums=(4, 5))
+                         if self.jit else prefill)
+
+    def serve(self, prompts_a, prompts_b, max_new_tokens: int,
+              cache_cap: int):
+        """Greedy-decode both batches in lockstep. Returns (out_a, out_b)."""
+        ta = jnp.asarray(prompts_a, jnp.int32)
+        tb = jnp.asarray(prompts_b, jnp.int32)
+        ca = self.model_a.init_cache(ta.shape[0], cache_cap)
+        cb = self.model_b.init_cache(tb.shape[0], cache_cap)
+        la, lb, ca, cb = self._prefill(self.params_a, self.params_b,
+                                       {"tokens": ta}, {"tokens": tb},
+                                       ca, cb)
+        va, vb = self.model_a.cfg.vocab, self.model_b.cfg.vocab
+        tok_a = jnp.argmax(la[:, -1:, :va], -1).astype(jnp.int32)
+        tok_b = jnp.argmax(lb[:, -1:, :vb], -1).astype(jnp.int32)
+        out_a, out_b = [tok_a], [tok_b]
+        for _ in range(max_new_tokens - 1):
+            la, lb, ca, cb = self._step(self.params_a, self.params_b,
+                                        tok_a, tok_b, ca, cb)
+            tok_a = jnp.argmax(la[:, :, :va], -1).astype(jnp.int32)
+            tok_b = jnp.argmax(lb[:, :, :vb], -1).astype(jnp.int32)
+            out_a.append(tok_a)
+            out_b.append(tok_b)
+        return (jnp.concatenate(out_a, 1), jnp.concatenate(out_b, 1))

@@ -1,0 +1,72 @@
+"""Batched serving engine: fixed-capacity batch, prefill + greedy decode.
+
+The engine owns params and a KV/SSM cache sized ``(batch_slots, cache_cap)``
+and runs jitted ``prefill`` / ``decode_step`` functions — the same functions
+the dry-run lowers for the decode input shapes. Requests are left-padded to
+a common prompt length per batch (fixed-shape serving; continuous batching
+is out of scope for the paper, which schedules the MoE all-to-all).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import Model
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: Sequence[int]
+    max_new_tokens: int = 16
+    out_tokens: list = dataclasses.field(default_factory=list)
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, batch_slots: int,
+                 cache_cap: int, src_len: int = 0, jit: bool = True):
+        self.model = model
+        self.params = params
+        self.batch_slots = batch_slots
+        self.cache_cap = cache_cap
+        self.src_len = src_len
+        # Cache buffers are donated: the update aliases in place instead of
+        # copying the full KV/SSM state every step.
+        self._prefill = (jax.jit(model.prefill, donate_argnums=(2,))
+                         if jit else model.prefill)
+        self._decode = (jax.jit(model.decode_step, donate_argnums=(2,))
+                        if jit else model.decode_step)
+
+    def _pad_prompts(self, reqs: list[Request]) -> np.ndarray:
+        plen = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((self.batch_slots, plen), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, plen - len(r.prompt):] = r.prompt  # left-pad with 0
+        return toks
+
+    def serve(self, reqs: list[Request], frames=None) -> list[Request]:
+        """Run one batch of requests to completion (greedy decoding)."""
+        if len(reqs) > self.batch_slots:
+            raise ValueError("too many requests for the batch")
+        toks = self._pad_prompts(reqs)
+        cache = self.model.init_cache(self.batch_slots, self.cache_cap,
+                                      src_len=self.src_len)
+        inputs = {"tokens": jnp.asarray(toks)}
+        if frames is not None:
+            inputs["frames"] = jnp.asarray(frames)
+        logits, cache = self._prefill(self.params, inputs, cache)
+        tok = jnp.argmax(logits[:, -1:, : self.model.cfg.vocab],
+                         axis=-1).astype(jnp.int32)
+        steps = max(r.max_new_tokens for r in reqs)
+        for _ in range(steps):
+            for i, r in enumerate(reqs):
+                if len(r.out_tokens) < r.max_new_tokens:
+                    r.out_tokens.append(int(tok[i, 0]))
+            logits, cache = self._decode(self.params, tok, cache)
+            tok = jnp.argmax(logits[:, :, : self.model.cfg.vocab],
+                             axis=-1).astype(jnp.int32)
+        return reqs

@@ -1,0 +1,7 @@
+"""Partition rules: ModelConfig × mesh → PartitionSpecs."""
+
+from .rules import (cache_specs, ep_axes_for, input_sharding, make_pc,
+                    param_specs)
+
+__all__ = ["cache_specs", "ep_axes_for", "input_sharding", "make_pc",
+           "param_specs"]

@@ -1,0 +1,198 @@
+"""Sharding rules for every architecture on the production mesh.
+
+Mesh axes: ``(data=16, model=16)`` single pod; ``(pod=2, data=16, model=16)``
+multi-pod. Policy (DESIGN.md §6):
+
+- vocab (embedding / lm-head) over ``model``;
+- attention heads over ``model`` **iff the head count divides the axis**
+  (qwen2-vl's 28 and phi4's 24 heads don't divide 16 — those attention
+  weights stay replicated within the model axis; FFN still shards);
+- FFN d_ff over ``model`` (column→row parallel pair);
+- MoE experts over the flat EP axis (``('data','model')`` when
+  E % (data·model) == 0, e.g. deepseek's 256; else ``('model',)``,
+  e.g. phi3.5's 16). The ``pod`` axis never joins EP;
+- batch over ``(pod, data)``;
+- KV caches: batch over ``data``(+``pod``), sequence over ``model``
+  (kv-head counts rarely divide 16; a seq-sharded cache turns decode into
+  GSPMD flash-decode with partial-softmax all-reduces). ``long_500k``
+  (batch 1) shards sequence over ``(data, model)``;
+- SSM state: batch over data, heads over model.
+
+Specs are built against ``jax.eval_shape`` of the real initializers, so
+every rule is divisibility-checked against actual leaf shapes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as tf
+from repro.models.layers import ParallelContext
+
+
+def _axis_size(mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]
+
+
+def ep_axes_for(cfg, mesh) -> tuple[str, ...] | None:
+    """Flat expert-parallel axis for a MoE config on this mesh."""
+    if cfg.moe is None:
+        return None
+    e = cfg.moe.n_experts
+    dm = _axis_size(mesh, "data") * _axis_size(mesh, "model")
+    if e % dm == 0:
+        return ("data", "model")
+    if e % _axis_size(mesh, "model") == 0:
+        return ("model",)
+    return None  # reduced configs fall back to dense dispatch
+
+
+def _divides(n: int, k: int) -> bool:
+    return n > 0 and k > 0 and n % k == 0
+
+
+def _leaf_spec(path, shape, cfg, mesh, ep) -> P:
+    """Rule table keyed on the trailing dict key of the param path."""
+    names = [p.key for p in path if hasattr(p, "key")]
+    name = names[-1] if names else ""
+    in_experts = "experts" in names
+    m = _axis_size(mesh, "model")
+    nd = len(shape)
+
+    def spec(**at):  # build a P with axis names at given (negative) dims
+        out = [None] * nd
+        for pos, ax in at.items():
+            out[int(pos)] = ax
+        return P(*out)
+
+    if in_experts:
+        # (count, E, d, f) — experts over the flat EP axis.
+        if ep is not None and _divides(shape[-3], _ep_size(mesh, ep)):
+            return spec(**{"-3": ep})
+        return P()
+    if name == "embed":
+        return spec(**{"0": "model"}) if _divides(shape[0], m) else P()
+    if name == "lm_head":
+        return spec(**{"1": "model"}) if _divides(shape[1], m) else P()
+    if name in ("wq", "wk", "wv"):          # (…, d, H, hd): heads at -2
+        return spec(**{"-2": "model"}) if _divides(shape[-2], m) else P()
+    if name == "wo":                        # (…, H, hd, d): heads at -3
+        return spec(**{"-3": "model"}) if _divides(shape[-3], m) else P()
+    if name in ("wq_b", "wk_b", "wv_b"):    # (…, r, H, dh): heads at -2
+        return spec(**{"-2": "model"}) if _divides(shape[-2], m) else P()
+    if name == "wq_a":                      # (…, d, r)
+        return spec(**{"-1": "model"}) if _divides(shape[-1], m) else P()
+    if name in ("w_gate", "w_up"):          # (…, d, f): d_ff at -1
+        return spec(**{"-1": "model"}) if _divides(shape[-1], m) else P()
+    if name == "w_down":                    # (…, f, d): d_ff at -2
+        return spec(**{"-2": "model"}) if _divides(shape[-2], m) else P()
+    if name == "in_proj":                   # mamba (…, d, zxbcdt)
+        return spec(**{"-1": "model"}) if _divides(shape[-1], m) else P()
+    if name == "out_proj":                  # mamba (…, d_inner, d)
+        return spec(**{"-2": "model"}) if _divides(shape[-2], m) else P()
+    if name in ("conv_w", "conv_b"):        # (…, K, cdim) / (…, cdim)
+        return spec(**{"-1": "model"}) if _divides(shape[-1], m) else P()
+    return P()  # norms, router, biases, frontend_proj, A_log, D, dt_bias
+
+
+def _ep_size(mesh, ep) -> int:
+    n = 1
+    for ax in ep:
+        n *= _axis_size(mesh, ax)
+    return n
+
+
+def param_specs(cfg, mesh):
+    """PartitionSpec pytree matching ``init_params(cfg)``."""
+    shapes = jax.eval_shape(lambda: tf.init_params(jax.random.PRNGKey(0), cfg))
+    ep = ep_axes_for(cfg, mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(path, leaf.shape, cfg, mesh, ep), shapes)
+
+
+# ---------------------------------------------------------------------------
+# Caches and inputs
+# ---------------------------------------------------------------------------
+
+def _batch_axes(mesh) -> tuple[str, ...]:
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+
+
+def cache_specs(cfg, mesh, batch: int, cap: int, src_len: int = 0):
+    """PartitionSpec pytree matching ``init_cache``."""
+    dp = _batch_axes(mesh)
+    nb = 1
+    for ax in dp:
+        nb *= _axis_size(mesh, ax)
+    m = _axis_size(mesh, "model")
+
+    batch_ax = dp if _divides(batch, nb) else (
+        ("data",) if _divides(batch, _axis_size(mesh, "data")) else None)
+    if batch_ax is None and batch == 1:
+        seq_ax: object = ("data", "model")   # long_500k: seq over both
+    else:
+        seq_ax = "model"
+
+    def leaf(path, leaf_shape):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1] if names else ""
+        shape = leaf_shape.shape
+        if name == "len":
+            return P()
+        if name in ("k", "v", "xk", "xv", "ckv", "k_rope"):
+            # (count, B, S, …): batch at 1, seq at 2.
+            out = [None] * len(shape)
+            if batch_ax is not None:
+                out[1] = batch_ax
+            seq = shape[2]
+            n_seq = m if seq_ax == "model" else nb * m
+            if _divides(seq, n_seq):
+                out[2] = seq_ax
+            return P(*out)
+        if name == "conv":                    # (count, B, K-1, cdim)
+            out = [None] * len(shape)
+            if batch_ax is not None:
+                out[1] = batch_ax
+            if _divides(shape[-1], m):
+                out[-1] = "model"
+            return P(*out)
+        if name == "state":                   # (count, B, H, hd, N)
+            out = [None] * len(shape)
+            if batch_ax is not None:
+                out[1] = batch_ax
+            if _divides(shape[2], m):
+                out[2] = "model"
+            return P(*out)
+        return P()
+
+    shapes = jax.eval_shape(
+        lambda: tf.init_cache(cfg, batch, cap, src_len=src_len))
+    return jax.tree_util.tree_map_with_path(leaf, shapes)
+
+
+def input_sharding(cfg, mesh, batch: int):
+    """Spec for token / frame / embed inputs: batch over (pod, data)."""
+    dp = _batch_axes(mesh)
+    nb = 1
+    for ax in dp:
+        nb *= _axis_size(mesh, ax)
+    if _divides(batch, nb):
+        return P(dp)
+    if _divides(batch, _axis_size(mesh, "data")):
+        return P(("data",))
+    return P()
+
+
+def make_pc(cfg, mesh, moe_impl: str = "ep", aurora_rounds=None,
+            flash_block: int = 1024) -> ParallelContext:
+    """ParallelContext for this (config, mesh)."""
+    dp = _batch_axes(mesh)
+    ep = ep_axes_for(cfg, mesh)
+    token_axes = tuple(mesh.axis_names)      # pod stays out of ep collectives
+    impl = moe_impl if (cfg.moe is not None and ep is not None) else "dense"
+    return ParallelContext(
+        mesh=mesh, data_axes=dp, model_axis="model", ep_axes=ep,
+        token_axes=token_axes, aurora_rounds=aurora_rounds, moe_impl=impl,
+        flash_block=flash_block)

@@ -1,0 +1,10 @@
+"""Training substrate: optimizer, data pipeline, checkpointing, train step."""
+
+from .optim import AdamWConfig, adamw_init, adamw_update
+from .data import SyntheticLMData
+from .checkpoint import restore_checkpoint, save_checkpoint
+from .loop import TrainState, make_train_step, train_loop
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "SyntheticLMData",
+           "restore_checkpoint", "save_checkpoint", "TrainState",
+           "make_train_step", "train_loop"]

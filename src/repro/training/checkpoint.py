@@ -1,0 +1,51 @@
+"""Checkpointing: params/optimizer pytrees → .npz + a JSON treedef manifest.
+
+No external serialization deps (offline container); arrays are gathered to
+host. Restore rebuilds the exact pytree and re-shards via device_put when a
+sharding pytree is supplied.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(path: str, tree, step: int | None = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    manifest = {"treedef": str(treedef), "n_leaves": len(leaves),
+                "step": step,
+                "dtypes": [str(np.asarray(l).dtype) for l in leaves]}
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def restore_checkpoint(path: str, like_tree, shardings=None):
+    """Restore into the structure of ``like_tree`` (shape/dtype template)."""
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves, treedef = _flatten(like_tree)
+    if len(leaves) != len(data.files):
+        raise ValueError(
+            f"checkpoint has {len(data.files)} leaves, template "
+            f"has {len(leaves)}")
+    new_leaves = [data[f"leaf_{i}"] for i in range(len(leaves))]
+    tree = jax.tree.unflatten(treedef, new_leaves)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree
+
+
+def checkpoint_step(path: str) -> int | None:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f).get("step")

@@ -1,0 +1,79 @@
+"""Train step + loop.
+
+``make_train_step`` builds the jitted (params, opt, batch) → (params, opt,
+metrics) function with explicit in/out shardings on a mesh (or unsharded on
+a single device). The step is exactly what the multi-pod dry-run lowers for
+``train_4k``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model, cross_entropy
+from .optim import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: int = 0
+
+
+def make_loss_fn(model: Model, aux_weight: float = 0.01) -> Callable:
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        logits, aux = model.train_logits(params, batch)
+        # Next-token LM objective; labels are inputs shifted left.
+        tokens = batch["tokens"]
+        loss = cross_entropy(logits[:, :-1], tokens[:, 1:], cfg.vocab)
+        return loss + aux_weight * aux, {"ce": loss, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    aux_weight: float = 0.01) -> Callable:
+    loss_fn = make_loss_fn(model, aux_weight)
+
+    def train_step(params, opt, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt = adamw_update(params, grads, opt, opt_cfg)
+        metrics = dict(metrics, loss=loss)
+        return params, opt, metrics
+
+    return train_step
+
+
+def train_loop(model: Model, data, steps: int,
+               opt_cfg: AdamWConfig | None = None, jit: bool = True,
+               log_every: int = 10, params=None,
+               aux_weight: float = 0.01) -> tuple[TrainState, list[dict]]:
+    """Single-host training loop (examples / integration tests)."""
+    opt_cfg = opt_cfg or AdamWConfig()
+    if params is None:
+        params = model.init(jax.random.PRNGKey(0))
+    opt = adamw_init(params, opt_cfg)
+    step_fn = make_train_step(model, opt_cfg, aux_weight)
+    if jit:
+        step_fn = jax.jit(step_fn)
+
+    history = []
+    t0 = time.time()
+    for i, batch in zip(range(steps), data):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt, metrics = step_fn(params, opt, batch)
+        if i % log_every == 0 or i == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i
+            m["wall"] = time.time() - t0
+            history.append(m)
+    return TrainState(params=params, opt=opt, step=steps), history

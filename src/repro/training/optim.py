@@ -1,0 +1,76 @@
+"""AdamW, implemented directly in JAX (no external optimizer dep).
+
+``state_dtype`` controls the m/v moment precision: float32 by default,
+bfloat16 for >100B-parameter configs so optimizer state fits HBM on the
+production mesh (DESIGN.md §6 memory budget; the dry-run records both).
+Moments inherit the parameter sharding, so optimizer state is automatically
+ZeRO-sharded wherever parameters are sharded (experts → EP axis, etc.).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"
+    warmup_steps: int = 100
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros_like(p, dtype=dt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1),
+                       1.0)
+    return cfg.lr * warm
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    """One AdamW step with global-norm clipping. Returns (params, state)."""
+    step = state["step"] + 1
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = _schedule(cfg, step)
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    dt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        update = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        if p.ndim > 1:                       # no decay on norms/bias vectors
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * update).astype(p.dtype),
+                m32.astype(dt), v32.astype(dt))
+
+    # The params pytree itself contains tuples (stacked segments), so we
+    # flatten once rather than tree-mapping with tuple returns.
+    lp, treedef = jax.tree.flatten(params)
+    lg = jax.tree.leaves(grads)
+    lm = jax.tree.leaves(state["m"])
+    lv = jax.tree.leaves(state["v"])
+    triples = [upd(p, g, m, v) for p, g, m, v in zip(lp, lg, lm, lv)]
+    new_params = jax.tree.unflatten(treedef, [t[0] for t in triples])
+    new_m = jax.tree.unflatten(treedef, [t[1] for t in triples])
+    new_v = jax.tree.unflatten(treedef, [t[2] for t in triples])
+    return new_params, {"m": new_m, "v": new_v, "step": step}

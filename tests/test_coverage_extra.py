@@ -1,0 +1,91 @@
+"""Additional coverage: enc-dec serving with frames, sliding-window ring
+cache beyond the window, SSM long decode, and reduced-config invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import Model
+from repro.models.transformer import forward, segments_of
+from repro.serving import Request, ServingEngine
+
+
+def test_encdec_serving_with_frames():
+    cfg = get_config("seamless-m4t-large-v2").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, batch_slots=2, cache_cap=32,
+                        src_len=16)
+    frames = np.random.default_rng(0).standard_normal(
+        (2, 16, cfg.frontend_dim), dtype=np.float32)
+    reqs = [Request(prompt=[1, 2, 3], max_new_tokens=4),
+            Request(prompt=[4, 5], max_new_tokens=4)]
+    out = eng.serve(reqs, frames=frames)
+    assert all(len(r.out_tokens) == 4 for r in out)
+    assert all(0 <= t < cfg.vocab for r in out for t in r.out_tokens)
+
+
+def test_sliding_window_decode_past_window():
+    """Decoding beyond the ring-cache window must stay finite and match the
+    full-context model inside the window."""
+    cfg = get_config("gemma3-27b").reduced()  # window 16, pattern LG
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    cap = 64
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (1, 20), 0, cfg.vocab)
+    cache = model.init_cache(1, cap)
+    logits, cache = model.prefill(params, {"tokens": prompt}, cache)
+    tok = jnp.argmax(logits[:, -1:, : cfg.vocab], -1).astype(jnp.int32)
+    for _ in range(30):  # well past the local window of 16
+        logits, cache = model.decode_step(params, tok, cache)
+        assert jnp.isfinite(logits).all()
+        tok = jnp.argmax(logits[:, :, : cfg.vocab], -1).astype(jnp.int32)
+    assert int(cache["len"]) == 50
+
+
+def test_ssm_decode_matches_prefill_extension():
+    """Mamba2: decode via state recurrence == teacher-forcing via SSD scan."""
+    cfg = get_config("mamba2-1.3b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, 12), 0, cfg.vocab)
+    cache = model.init_cache(2, 16)
+    logits_p, cache = model.prefill(params, {"tokens": toks[:, :8]}, cache)
+    # decode tokens 8..11 one at a time
+    outs = []
+    for t in range(8, 12):
+        logits_d, cache = model.decode_step(params, toks[:, t:t + 1], cache)
+        outs.append(logits_d)
+    # teacher-forced reference over the full 12 tokens
+    logits_f, _, _ = forward(params, cfg, tokens=toks, mode="train")
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(logits_f[:, 8:12]),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_segment_decomposition_covers_all_layers(arch):
+    cfg = get_config(arch)
+    segs = segments_of(cfg)
+    total = sum(len(s.kinds) * s.count for s in segs)
+    assert total == cfg.n_layers, (arch, total, cfg.n_layers)
+    # Reduced variants must also decompose exactly.
+    r = cfg.reduced()
+    segs_r = segments_of(r)
+    assert sum(len(s.kinds) * s.count for s in segs_r) == r.n_layers
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_within_band(arch):
+    """Analytic parameter count is within ±40% of the name-plate size
+    (names encode the official count; vocab/frontend variance allowed)."""
+    import re
+    cfg = get_config(arch)
+    m = re.search(r"(\d+(?:\.\d+)?)b", arch)
+    if not m:
+        pytest.skip("no size in arch id")
+    plate = float(m.group(1)) * 1e9
+    got = cfg.param_count()
+    assert 0.6 * plate < got < 1.6 * plate, (arch, got / 1e9, plate / 1e9)

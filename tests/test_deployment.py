@@ -1,0 +1,170 @@
+"""Thm 5.1 assignment, Thm 6.2 colocation, and the §7.2 decoupled solution."""
+
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AuroraPlanner, Cluster, PAPER_HET_TIERS,
+                        aurora_assignment, bruteforce_colocated,
+                        bruteforce_exclusive, case1_pairing, case2_pairing,
+                        colocated_inference_time, exclusive_inference_time,
+                        heterogeneous_cluster, homogeneous_cluster,
+                        lina_packing, synthetic_trace)
+from repro.core.colocation import aggregate_traffic, send_recv_vectors
+from repro.core.traffic import strip_diagonal
+
+
+def small_trace(n, seed, tokens=1024.0, skew=0.5):
+    return synthetic_trace(f"t{seed}", n_experts=n, n_layers=1,
+                           tokens_per_device=tokens, skew=skew,
+                           ffn_per_token=0.002, ffn_fixed=2.0, seed=seed)
+
+
+def small_het_cluster(n):
+    return Cluster(devices=tuple(PAPER_HET_TIERS[i % 4] for i in range(n)))
+
+
+# ---------------------------------------------------------------------------
+# Thm 5.1: sorted assignment is optimal (vs exhaustive search)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(3, 5), st.integers(0, 10_000))
+def test_thm51_assignment_near_optimal(n, seed):
+    """Thm 5.1's swap argument assumes a single scalar load per expert.
+
+    With asymmetric send/recv loads the sorted assignment is a (very good)
+    heuristic — measured <= 1.11x over random instances (EXPERIMENTS.md
+    §Validation); we bound it at 1.20x here.
+    """
+    trace = small_trace(n, seed)
+    cl = small_het_cluster(n)
+    e2d = aurora_assignment(trace.layer(0), cl)
+    t_aurora = exclusive_inference_time(trace, 0, cl, e2d).inference_time
+    t_opt, _ = bruteforce_exclusive(trace, 0, cl)
+    assert t_aurora <= t_opt * 1.20 + 1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(3, 5), st.integers(0, 10_000))
+def test_thm51_assignment_optimal_for_symmetric_loads(n, seed):
+    """When send == recv per expert (the theorem's implicit regime), the
+    sorted assignment minimizes every max-term simultaneously — EXCEPT
+    that our comm model follows Appendix B, where flow (i, j) moves at
+    min(B_i, B_j): a heavy flow between two slow devices is charged at the
+    slow rate for BOTH endpoints, and the paper's Thm 5.1 exchange
+    argument is no longer exact (hypothesis found ~0.3% counterexamples).
+    Under the main-text normalization (row_i/B_i) sorting IS optimal. We
+    bound the Appendix-B gap at 1% (reproduction note, EXPERIMENTS.md)."""
+    import dataclasses
+    trace = small_trace(n, seed)
+    sym = dataclasses.replace(
+        trace, layers=tuple((d + d.T) / 2 for d in trace.layers))
+    cl = small_het_cluster(n)
+    e2d = aurora_assignment(sym.layer(0), cl)
+    t_aurora = exclusive_inference_time(sym, 0, cl, e2d).inference_time
+    t_opt, _ = bruteforce_exclusive(sym, 0, cl)
+    assert t_aurora <= t_opt * 1.01 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Thm 6.2 Case I: sort-pairing minimizes the max pair sum
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(2, 7), st.integers(0, 10_000))
+def test_thm62_case1_minimizes_max_pair_sum(n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.random(n) * 100
+    b = rng.random(n) * 100
+    pair = case1_pairing(a, b)
+    got = max(a[i] + b[pair[i]] for i in range(n))
+    best = min(
+        max(a[i] + b[perm[i]] for i in range(n))
+        for perm in itertools.permutations(range(n))
+    )
+    assert got == pytest.approx(best)
+
+
+# ---------------------------------------------------------------------------
+# §6.2 Case II: bottleneck matching minimizes aggregated b_max
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 5), st.integers(0, 10_000))
+def test_case2_minimizes_aggregated_bmax(n, seed):
+    da = small_trace(n, seed).layer(0)
+    db = small_trace(n, seed + 1, tokens=256.0).layer(0)
+    pair, val = case2_pairing(da, db)
+    # The bottleneck value is exactly the minimized max row/col sum.
+    sa, ra = send_recv_vectors(da)
+    sb, rb = send_recv_vectors(db)
+    best = min(
+        max(max(sa[i] + sb[p[i]], ra[i] + rb[p[i]]) for i in range(n))
+        for p in itertools.permutations(range(n))
+    )
+    assert val == pytest.approx(best)
+    got_agg = aggregate_traffic(da, db, pair)
+    got = max(got_agg.sum(1).max(), got_agg.sum(0).max())
+    # Aggregated matrix's b_max equals the matching bottleneck (diagonals of
+    # the aggregated matrix are free on-device traffic and are stripped).
+    assert got <= val + 1e-9
+
+
+def test_aggregate_traffic_indexing():
+    da = np.array([[0, 1, 2], [3, 0, 4], [5, 6, 0]], float)
+    db = np.array([[0, 10, 20], [30, 0, 40], [50, 60, 0]], float)
+    pair = [2, 0, 1]  # device0: a0+b2, device1: a1+b0, device2: a2+b1
+    agg = aggregate_traffic(da, db, pair)
+    # b-traffic b2->b0 goes device0 -> device1
+    assert agg[0, 1] == da[0, 1] + db[2, 0]
+    assert agg[1, 2] == da[1, 2] + db[0, 1]
+
+
+def test_lina_packing_merges_and_balances():
+    trace = small_trace(8, 3)
+    merged, pairs = lina_packing(trace.layer(0))
+    assert merged.shape == (4, 4)
+    flat = sorted(e for p in pairs for e in p)
+    assert flat == list(range(8))
+    # popular paired with unpopular: first pair holds the hottest expert
+    loads = trace.layer(0).sum(axis=0)
+    hottest = int(np.argmax(loads))
+    coldest = int(np.argmin(loads))
+    assert hottest in pairs[0] and coldest in pairs[0]
+    # traffic conserved up to the intra-pair (diagonal) part
+    assert merged.sum() <= trace.layer(0).sum() + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# §7.2 decoupled 3D matching: close to brute-force optimum
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_colocating_het_near_optimal(seed):
+    n = 4
+    ta = small_trace(n, seed, tokens=2048.0, skew=0.3)
+    tb = small_trace(n, seed + 10, tokens=512.0, skew=0.2)
+    cl = small_het_cluster(n)
+    plan = AuroraPlanner(cl).plan_colocated(ta, tb)
+    t = colocated_inference_time(ta, tb, 0, cl, plan.pair,
+                                 plan.expert_to_device).inference_time
+    t_opt, _, _ = bruteforce_colocated(ta, tb, 0, cl)
+    assert t >= t_opt - 1e-9  # optimum really is a lower bound
+    # paper reports 1.07x average; individual instances stay well below 1.5x
+    assert t <= t_opt * 1.5
+
+
+def test_colocating_hom_pairing_is_optimal_for_bmax(seed=0):
+    """Thm 6.1 + 6.2: on homogeneous clusters Aurora's pairing minimizes
+    inference time among all pairings."""
+    n = 5
+    ta = small_trace(n, seed, tokens=2048.0, skew=0.6)
+    tb = small_trace(n, seed + 10, tokens=512.0, skew=0.4)
+    cl = homogeneous_cluster(n)
+    plan = AuroraPlanner(cl).plan_colocated(ta, tb)
+    t_aurora = colocated_inference_time(ta, tb, 0, cl, plan.pair).inference_time
+    t_opt, _, _ = bruteforce_colocated(ta, tb, 0, cl)
+    assert t_aurora <= t_opt + 1e-6

@@ -1,0 +1,70 @@
+"""Hopcroft–Karp and bottleneck matching correctness vs brute force."""
+
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.matching import (bottleneck_perfect_matching, hopcroft_karp,
+                                 has_perfect_matching, perfect_matching)
+
+
+def brute_max_matching(adj, n_left, n_right):
+    best = 0
+    rights = list(range(n_right))
+    def rec(u, used):
+        nonlocal best
+        if u == n_left:
+            best = max(best, len(used))
+            return
+        # upper-bound prune
+        if len(used) + (n_left - u) <= best:
+            return
+        rec(u + 1, used)
+        for v in adj[u]:
+            if v not in used:
+                rec(u + 1, used | {v})
+    rec(0, frozenset())
+    return best
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 6), st.integers(0, 100_000))
+def test_hopcroft_karp_matches_bruteforce(nl, nr, seed):
+    rng = np.random.default_rng(seed)
+    adj = [sorted(rng.choice(nr, size=rng.integers(0, nr + 1), replace=False).tolist())
+           for _ in range(nl)]
+    size, match_l = hopcroft_karp(adj, nl, nr)
+    assert size == brute_max_matching(adj, nl, nr)
+    # the returned matching must be consistent
+    used = [v for v in match_l if v >= 0]
+    assert len(used) == len(set(used)) == size
+    for u, v in enumerate(match_l):
+        if v >= 0:
+            assert v in adj[u]
+
+
+def brute_bottleneck(w):
+    n = w.shape[0]
+    best = float("inf")
+    for perm in itertools.permutations(range(n)):
+        best = min(best, max(w[i, perm[i]] for i in range(n)))
+    return best
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 100_000))
+def test_bottleneck_matching_is_optimal(n, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.random((n, n)) * 100
+    match, val = bottleneck_perfect_matching(w)
+    assert val == pytest.approx(brute_bottleneck(w))
+    assert max(w[i, match[i]] for i in range(n)) == pytest.approx(val)
+    assert sorted(match) == list(range(n))
+
+
+def test_perfect_matching_none_when_impossible():
+    allowed = np.array([[True, False], [True, False]])
+    assert perfect_matching(allowed) is None
+    assert not has_perfect_matching(allowed)

@@ -1,0 +1,140 @@
+"""Property-based tests (hypothesis) on the system's invariants.
+
+Core invariants from the paper's theorems:
+  - Thm 4.2: the BvN schedule is contention-free, covers all real traffic,
+    and its total duration equals b_max exactly (the proven lower bound).
+  - Thm 5.2: same, with per-device bandwidths.
+  - No schedule (any policy) can beat b_max in the fluid model.
+  - Thm 6.2 / bottleneck matching: Aurora's pairing minimizes the aggregated
+    b_max over all pairings (checked exhaustively for small n).
+  - Dispatch invariants: capacity bucketing never duplicates a slot; the
+    dense MoE combine is a convex combination (gates sum to 1).
+"""
+
+import itertools
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (aurora_pairing, aggregate_traffic, aurora_schedule,
+                        b_max_homogeneous, fluid_comm_time, rcs_order,
+                        sjf_order)
+from repro.core.schedule import b_max_of
+from repro.core.traffic import strip_diagonal
+
+
+def traffic_matrices(max_n=6, max_val=50.0):
+    return st.integers(2, max_n).flatmap(
+        lambda n: st.lists(
+            st.lists(st.floats(0, max_val, allow_nan=False), min_size=n,
+                     max_size=n),
+            min_size=n, max_size=n).map(np.asarray))
+
+
+@settings(max_examples=60, deadline=None)
+@given(traffic_matrices())
+def test_schedule_contention_free_and_exact(d):
+    d = strip_diagonal(d)
+    sched = aurora_schedule(d)
+    # 1. Every slot is a partial permutation: receivers unique.
+    for slot in sched.slots:
+        dsts = [j for j in slot.dst if j >= 0]
+        assert len(dsts) == len(set(dsts)), "receiver contention in slot"
+    # 2. Coverage: per-pair scheduled time == traffic exactly.
+    n = d.shape[0]
+    covered = np.zeros_like(d)
+    for slot in sched.slots:
+        for i, j in enumerate(slot.dst):
+            if j >= 0:
+                covered[i, j] += slot.duration
+    assert (covered >= d - 1e-5).all(), "real traffic not fully scheduled"
+    # 3. Total duration == b_max (optimal, Thm 4.2). The scheduler cleans
+    # entries below 1e-9·b_max (they break Hall's condition numerically),
+    # so equality holds to a relative tolerance.
+    assert abs(sched.total_time - sched.b_max) < 1e-6 + 1e-6 * sched.b_max
+    assert abs(sched.b_max - b_max_homogeneous(d)) < \
+        1e-6 + 1e-6 * sched.b_max
+
+
+@settings(max_examples=30, deadline=None)
+@given(traffic_matrices(max_n=5),
+       st.lists(st.floats(0.5, 4.0), min_size=5, max_size=5))
+def test_heterogeneous_schedule_matches_thm52(d, bws):
+    d = strip_diagonal(d)
+    n = d.shape[0]
+    bw = np.asarray(bws[:n])
+    sched = aurora_schedule(d, bw)
+    assert abs(sched.total_time - sched.b_max) < 1e-6
+    assert sched.b_max <= b_max_of(d, bw) + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(traffic_matrices(max_n=5), st.integers(0, 3))
+def test_no_policy_beats_bmax(d, seed):
+    """b_max is a true lower bound: SJF/RCS under the fluid model can never
+    finish faster (Thm 4.2's optimality)."""
+    d = strip_diagonal(d)
+    if d.sum() < 1e-9:
+        return
+    lb = b_max_homogeneous(d)
+    for order in (sjf_order(d), rcs_order(d, seed=seed)):
+        t = fluid_comm_time(order, 1.0, d.shape[0])
+        assert t >= lb - 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 5), st.integers(0, 5))
+def test_aurora_pairing_minimizes_aggregated_bmax(n, seed):
+    """Thm 6.2 / bottleneck matching optimality, checked exhaustively."""
+    rng = np.random.default_rng(seed)
+    da = strip_diagonal(rng.random((n, n)) * 10)
+    db = strip_diagonal(rng.random((n, n)) * 10)
+    pair = aurora_pairing(da, db)
+    got = b_max_homogeneous(aggregate_traffic(da, db, pair))
+    best = min(
+        b_max_homogeneous(aggregate_traffic(da, db, list(p)))
+        for p in itertools.permutations(range(n)))
+    assert got <= best + 1e-6, (got, best)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 32), st.integers(1, 4), st.integers(2, 16),
+       st.integers(0, 7))
+def test_capacity_dispatch_no_slot_collisions(t, k, e, seed):
+    """Two kept assignments never land in the same (expert, slot) bucket."""
+    import jax
+    from repro.models.moe import capacity, dispatch_indices
+
+    k = min(k, e)
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, e, size=(t, k)).astype(np.int32)
+    cap = capacity(t, k, e, 1.25)
+    slot, keep = dispatch_indices(jax.numpy.asarray(idx), e, cap)
+    slot, keep = np.asarray(slot), np.asarray(keep)
+    seen = set()
+    for ti in range(t):
+        for ki in range(k):
+            if keep[ti, ki]:
+                key = (int(idx[ti, ki]), int(slot[ti, ki]))
+                assert key not in seen
+                assert slot[ti, ki] < cap
+                seen.add(key)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 3))
+def test_router_gates_normalized(seed):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import MoEConfig
+    from repro.models.moe import route
+
+    rng = jax.random.PRNGKey(seed)
+    x = jax.random.normal(rng, (16, 32))
+    for router in ("softmax", "sigmoid"):
+        moe = MoEConfig(n_experts=8, top_k=2, d_ff=16, router=router)
+        w = jax.random.normal(jax.random.PRNGKey(seed + 1), (32, 8))
+        gates, idx, aux = route(w, x, moe)
+        np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, atol=1e-3)
+        assert (np.asarray(idx) < 8).all()
+        assert np.isfinite(float(aux))

@@ -1,0 +1,136 @@
+"""Thm 4.2 / Thm 5.2 schedule properties + fluid network model."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.schedule import (aurora_schedule, augment_to_bmax, b_max_of,
+                                 comm_time, fluid_comm_time, rcs_order,
+                                 sjf_order, time_matrix)
+from repro.core.traffic import strip_diagonal
+
+
+def random_traffic(rng, n, density=1.0, scale=10.0):
+    d = rng.random((n, n)) * scale
+    mask = rng.random((n, n)) < density
+    d = d * mask
+    np.fill_diagonal(d, 0.0)
+    return d
+
+
+# ---------------------------------------------------------------------------
+# Fig 4: the paper's worked example
+# ---------------------------------------------------------------------------
+
+def test_fig4_contention_example():
+    """GPU1→{2,3}, GPU2→{1,3}: naive order takes 3 units, optimal takes 2."""
+    bad = [[(1, 1.0), (2, 1.0)], [(0, 1.0), (2, 1.0)], []]
+    good = [[(1, 1.0), (2, 1.0)], [(2, 1.0), (0, 1.0)], []]
+    assert fluid_comm_time(bad, 1.0, 3) == pytest.approx(3.0)
+    assert fluid_comm_time(good, 1.0, 3) == pytest.approx(2.0)
+    d = np.array([[0, 1, 1], [1, 0, 1], [0, 0, 0]], float)
+    sched = aurora_schedule(d)
+    assert sched.b_max == pytest.approx(2.0)
+    assert sched.total_time == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# Property tests: schedule validity (homogeneous)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(2, 10), st.integers(0, 10_000), st.floats(0.2, 1.0))
+def test_schedule_achieves_bmax_and_is_contention_free(n, seed, density):
+    rng = np.random.default_rng(seed)
+    d = random_traffic(rng, n, density)
+    sched = aurora_schedule(d)
+    bm = max(d.sum(1).max(), d.sum(0).max())
+    assert sched.b_max == pytest.approx(bm, abs=1e-8)
+    # Thm 4.2: total schedule length is exactly b_max.
+    assert sched.total_time == pytest.approx(bm, abs=1e-6)
+    sent = np.zeros_like(d)
+    for slot in sched.slots:
+        real = [j for j in slot.dst if j >= 0]
+        # contention-free: every receiver hears from at most one sender
+        assert len(real) == len(set(real))
+        for i, j in enumerate(slot.dst):
+            if j >= 0:
+                assert i != j
+                sent[i, j] += slot.duration
+    # conservation: the schedule moves at least the real traffic (slots may
+    # carry a little artificial padding when a real edge shares a slot).
+    assert (sent + 1e-6 >= d).all()
+    # and it never invents traffic on pairs that had none
+    assert (sent[d <= 1e-12] <= 1e-8).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 10_000))
+def test_schedule_heterogeneous_bmax(n, seed):
+    rng = np.random.default_rng(seed)
+    d = random_traffic(rng, n)
+    bw = rng.choice([40.0, 50.0, 80.0, 100.0], size=n)
+    sched = aurora_schedule(d, bw)
+    t = time_matrix(d, bw)
+    bm = max(t.sum(1).max(), t.sum(0).max())
+    assert sched.b_max == pytest.approx(bm, abs=1e-8)
+    assert sched.total_time == pytest.approx(bm, abs=1e-6)
+
+
+def test_augment_to_bmax_properties():
+    rng = np.random.default_rng(0)
+    d = random_traffic(rng, 6)
+    d_prime, bm = augment_to_bmax(d)
+    assert (d_prime + 1e-12 >= d).all()  # X is non-negative (Farkas)
+    np.testing.assert_allclose(d_prime.sum(1), bm, rtol=1e-9)
+    np.testing.assert_allclose(d_prime.sum(0), bm, rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Baselines can never beat the bound; Aurora always matches it
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 7), st.integers(0, 10_000))
+def test_bmax_is_a_lower_bound_for_any_order(n, seed):
+    rng = np.random.default_rng(seed)
+    d = random_traffic(rng, n)
+    bm = b_max_of(d)
+    for order in (sjf_order(d), rcs_order(d, seed)):
+        assert fluid_comm_time(order, 1.0, n) >= bm - 1e-6
+
+
+def test_comm_time_policies():
+    rng = np.random.default_rng(42)
+    d = random_traffic(rng, 6)
+    t_aurora = comm_time(d, "aurora")
+    t_sjf = comm_time(d, "sjf")
+    t_rcs = comm_time(d, "rcs", seed=1)
+    assert t_aurora <= t_sjf + 1e-9
+    assert t_aurora <= t_rcs + 1e-9
+    with pytest.raises(ValueError):
+        comm_time(d, "nope")
+
+
+def test_empty_traffic():
+    sched = aurora_schedule(np.zeros((4, 4)))
+    assert sched.total_time == 0.0
+    assert sched.n_slots == 0
+
+
+def test_transpose_symmetry():
+    """The two all-to-alls are reverses (§2.2): same optimal time."""
+    rng = np.random.default_rng(3)
+    d = random_traffic(rng, 5)
+    assert aurora_schedule(d).b_max == pytest.approx(aurora_schedule(d.T).b_max)
+
+
+def test_sender_orders_cover_traffic():
+    rng = np.random.default_rng(9)
+    d = random_traffic(rng, 5)
+    orders = aurora_schedule(d).sender_orders()
+    got = np.zeros_like(d)
+    for i, seq in enumerate(orders):
+        for j, dur in seq:
+            got[i, j] += dur
+    assert (got + 1e-6 >= strip_diagonal(d)).all()

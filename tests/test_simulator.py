@@ -1,0 +1,137 @@
+"""Table 2 / Eqn 1–4 simulator invariants and paper-claim bands."""
+
+import numpy as np
+import pytest
+
+from repro.core import (AuroraPlanner, add_noise, colocated_inference_time,
+                        exclusive_inference_time, heterogeneous_cluster,
+                        homogeneous_cluster, lina_inference_time,
+                        paper_eval_traces, random_assignment, random_pairing,
+                        synthetic_trace)
+
+
+@pytest.fixture(scope="module")
+def traces():
+    return paper_eval_traces(seed=0)
+
+
+@pytest.fixture(scope="module")
+def hom():
+    return homogeneous_cluster(8)
+
+
+@pytest.fixture(scope="module")
+def het():
+    return heterogeneous_cluster(8)
+
+
+def test_exclusive_decomposition(traces, hom):
+    b16, _ = traces
+    r = exclusive_inference_time(b16, 0, hom)
+    d = r.detail
+    assert r.inference_time == pytest.approx(
+        d["gate"] + d["N"] + d["ffn"] + d["C"] + d["agg"])
+    assert 0.0 < r.utilization < 1.0
+
+
+def test_colocated_not_faster_than_exclusive_model_a(traces, hom):
+    """Adding a second model can only extend model a's completion."""
+    b16, b32 = traces
+    pair = AuroraPlanner(hom).plan_colocated(b16, b32).pair
+    t_co = colocated_inference_time(b16, b32, 0, hom, pair).inference_time
+    t_ex = exclusive_inference_time(b16, 0, hom).inference_time
+    assert t_co >= t_ex - 1e-9
+
+
+def test_colocated_chain_is_monotone_in_policy(traces, hom):
+    b16, b32 = traces
+    pair = random_pairing(8, 0)
+    t_a = colocated_inference_time(b16, b32, 0, hom, pair, policy="aurora")
+    t_r = colocated_inference_time(b16, b32, 0, hom, pair, policy="rcs")
+    assert t_a.inference_time <= t_r.inference_time + 1e-9
+
+
+def test_heterogeneous_slows_down_uniform_deployment(traces, hom, het):
+    b16, _ = traces
+    t_hom = exclusive_inference_time(b16, 0, hom).inference_time
+    t_het = exclusive_inference_time(b16, 0, het).inference_time
+    assert t_het > t_hom  # slower tiers must hurt
+
+
+def test_utilization_bounds(traces, hom, het):
+    b16, b32 = traces
+    for cl in (hom, het):
+        plan = AuroraPlanner(cl).plan_colocated(b16, b32)
+        r = colocated_inference_time(b16, b32, 0, cl, plan.pair,
+                                     plan.expert_to_device)
+        assert 0.0 < r.utilization < 1.0
+
+
+# ---------------------------------------------------------------------------
+# Paper-claim bands (§8.2) on the synthetic production-like traces
+# ---------------------------------------------------------------------------
+
+def test_q1_scheduling_beats_sjf_and_rcs(traces, hom):
+    b16, _ = traces
+    for layer in range(4):
+        t_a = exclusive_inference_time(b16, layer, hom, policy="aurora")
+        t_s = exclusive_inference_time(b16, layer, hom, policy="sjf")
+        t_r = exclusive_inference_time(b16, layer, hom, policy="rcs")
+        assert t_a.inference_time <= t_s.inference_time + 1e-9
+        assert t_a.inference_time <= t_r.inference_time + 1e-9
+
+
+def test_q1_colocation_beats_lina(traces, hom):
+    b16, b32 = traces
+    plan = AuroraPlanner(hom).plan_colocated(b16, b32)
+    ratios = []
+    for layer in range(4):
+        t_co = colocated_inference_time(b16, b32, layer, hom, plan.pair)
+        t_li = lina_inference_time(b16, layer, hom, policy="rcs")
+        ratios.append(t_li.inference_time / t_co.inference_time)
+    # Fig 11c band: 1.25x – 2.38x
+    assert min(ratios) > 1.0
+    assert 1.25 <= float(np.mean(ratios)) <= 2.6
+
+
+def test_q2_utilization_gain(traces, hom):
+    b16, b32 = traces
+    plan = AuroraPlanner(hom).plan_colocated(b16, b32)
+    gains = []
+    for layer in range(4):
+        r_co = colocated_inference_time(b16, b32, layer, hom, plan.pair)
+        r_ex = exclusive_inference_time(b16, layer, hom)
+        gains.append(r_co.utilization / r_ex.utilization)
+    # Fig 12a band: colocation lifts utilization 1.57x – 1.72x over exclusive
+    assert 1.3 <= float(np.mean(gains)) <= 2.0
+
+
+def test_q4_noise_robustness(traces, het):
+    """Fig 14: with 75% traffic noise the plan degrades bounded (~16%)."""
+    b16, _ = traces
+    plan = AuroraPlanner(het).plan_exclusive(b16)
+    base, noisy = [], []
+    for layer in range(4):
+        base.append(exclusive_inference_time(
+            b16, layer, het, plan.expert_to_device).inference_time)
+    b16_noisy = add_noise(b16, 0.75, seed=1)
+    for layer in range(4):
+        noisy.append(exclusive_inference_time(
+            b16_noisy, layer, het, plan.expert_to_device).inference_time)
+    degradation = float(np.mean(noisy)) / float(np.mean(base))
+    assert degradation < 1.35  # bounded degradation under heavy noise
+
+
+def test_plan_exclusive_schedules_match_layers(traces, hom):
+    b16, _ = traces
+    plan = AuroraPlanner(hom).plan_exclusive(b16)
+    assert plan.n_layers == 4
+    for sched in plan.schedules:
+        assert sched.total_time == pytest.approx(sched.b_max, abs=1e-6)
+
+
+def test_unequal_expert_counts_rejected(hom):
+    a = synthetic_trace("a", n_experts=8, n_layers=1, seed=0)
+    b = synthetic_trace("b", n_experts=4, n_layers=1, seed=1)
+    with pytest.raises(ValueError):
+        colocated_inference_time(a, b, 0, hom, list(range(8)))

@@ -1,0 +1,133 @@
+"""Integration tests: training loop (loss decreases), checkpoint round-trip,
+serving engine, and the dual-model colocated engine."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.serving import ColocatedEngine, Request, ServingEngine
+from repro.serving.colocated import apply_pairing
+from repro.training import (AdamWConfig, SyntheticLMData, restore_checkpoint,
+                            save_checkpoint, train_loop)
+
+
+def test_train_loss_decreases():
+    cfg = get_config("phi4-mini-3.8b").reduced()
+    model = Model(cfg)
+    data = SyntheticLMData(cfg.vocab, seq_len=64, batch=8, seed=0)
+    state, hist = train_loop(model, data, steps=60,
+                             opt_cfg=AdamWConfig(lr=1e-3, warmup_steps=20),
+                             log_every=5)
+    first = np.mean([h["ce"] for h in hist[:3]])
+    last = np.mean([h["ce"] for h in hist[-3:]])
+    assert last < first * 0.9, f"loss did not decrease: {first} -> {last}"
+
+
+def test_moe_train_loss_decreases_with_aux():
+    cfg = get_config("phi3.5-moe-42b-a6.6b").reduced()
+    model = Model(cfg)
+    data = SyntheticLMData(cfg.vocab, seq_len=32, batch=8, seed=1)
+    state, hist = train_loop(model, data, steps=40,
+                             opt_cfg=AdamWConfig(lr=1e-3, warmup_steps=10),
+                             log_every=5)
+    assert hist[-1]["ce"] < hist[0]["ce"], hist
+    assert all(np.isfinite(h["aux"]) for h in hist)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_config("gemma-7b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    save_checkpoint(str(tmp_path / "ck"), params, step=7)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    restored = restore_checkpoint(str(tmp_path / "ck"), zeros)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_serving_engine_generates():
+    cfg = get_config("qwen3-32b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, batch_slots=4, cache_cap=64)
+    reqs = [Request(prompt=[1, 2, 3], max_new_tokens=5),
+            Request(prompt=[4, 5], max_new_tokens=5),
+            Request(prompt=[7], max_new_tokens=3),
+            Request(prompt=[8, 9, 10, 11], max_new_tokens=5)]
+    out = eng.serve(reqs)
+    assert len(out[0].out_tokens) == 5
+    assert len(out[2].out_tokens) == 3
+    for r in out:
+        assert all(0 <= t < cfg.vocab for t in r.out_tokens)
+
+
+def test_serving_decode_matches_forward():
+    """Greedy decode through the cache must equal teacher-forced forward."""
+    cfg = get_config("gemma3-27b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = jnp.array([[3, 1, 4, 1, 5, 9, 2, 6]], jnp.int32)
+    cache = model.init_cache(1, 32)
+    logits_p, cache = model.prefill(params, {"tokens": prompt}, cache)
+
+    from repro.models.transformer import forward
+    logits_f, _, _ = forward(params, cfg, tokens=prompt, mode="train")
+    np.testing.assert_allclose(np.asarray(logits_p), np.asarray(logits_f),
+                               rtol=2e-3, atol=2e-3)
+
+    # Decode one token and check against a re-run of the extended sequence.
+    tok = jnp.argmax(logits_p[:, -1:, : cfg.vocab], -1).astype(jnp.int32)
+    logits_d, cache = model.decode_step(params, tok, cache)
+    ext = jnp.concatenate([prompt, tok], axis=1)
+    logits_e, _, _ = forward(params, cfg, tokens=ext, mode="train")
+    np.testing.assert_allclose(np.asarray(logits_d[:, 0]),
+                               np.asarray(logits_e[:, -1]),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_colocated_engine_matches_separate():
+    """The dual-model engine must produce exactly the tokens each model
+    would produce alone (colocation changes scheduling, not math)."""
+    cfg_a = get_config("phi3.5-moe-42b-a6.6b").reduced()
+    cfg_b = get_config("phi4-mini-3.8b").reduced()
+    ma, mb = Model(cfg_a), Model(cfg_b)
+    pa = ma.init(jax.random.PRNGKey(0))
+    pb = mb.init(jax.random.PRNGKey(1))
+    prompts_a = jnp.array([[1, 2, 3, 4]], jnp.int32)
+    prompts_b = jnp.array([[5, 6, 7, 8]], jnp.int32)
+
+    eng = ColocatedEngine(ma, mb, pa, pb)
+    out_a, out_b = eng.serve(prompts_a, prompts_b, max_new_tokens=4,
+                             cache_cap=16)
+
+    # Solo reference for model a.
+    ca = ma.init_cache(1, 16)
+    la, ca = ma.prefill(pa, {"tokens": prompts_a}, ca)
+    toks = [jnp.argmax(la[:, -1:, : cfg_a.vocab], -1).astype(jnp.int32)]
+    for _ in range(3):
+        la, ca = ma.decode_step(pa, toks[-1], ca)
+        toks.append(jnp.argmax(la[:, :, : cfg_a.vocab], -1).astype(jnp.int32))
+    np.testing.assert_array_equal(np.asarray(out_a),
+                                  np.asarray(jnp.concatenate(toks, 1)))
+
+
+def test_apply_pairing_permutes_experts():
+    cfg = get_config("phi3.5-moe-42b-a6.6b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    e = cfg.moe.n_experts
+    pair = list(reversed(range(e)))
+    permuted = apply_pairing(params, pair, cfg)
+
+    def experts_leaf(p):
+        for si, seg in enumerate(p["segments"]):
+            for pos in seg:
+                if "moe" in pos:
+                    return pos["moe"]["experts"]["w_gate"]
+        raise AssertionError("no moe layer found")
+
+    w0 = np.asarray(experts_leaf(params))
+    w1 = np.asarray(experts_leaf(permuted))
+    np.testing.assert_array_equal(w1[:, 0], w0[:, e - 1])
