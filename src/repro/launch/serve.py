@@ -1,12 +1,18 @@
-"""Serving driver: single-model or Aurora-colocated dual-model.
+"""Serving driver: single-model or Aurora-colocated dual-model, static batch
+or continuous batching with a streaming (Poisson) arrival process.
 
   python -m repro.launch.serve --arch qwen3-32b --reduced
+  python -m repro.launch.serve --arch qwen3-32b --reduced \
+      --arrival-rate 0.5 --num-requests 12          # continuous batching
   python -m repro.launch.serve --arch phi3.5-moe-42b-a6.6b \
-      --colocate-with phi4-mini-3.8b --reduced
+      --colocate-with phi4-mini-3.8b --reduced --arrival-rate 0.5
 
-The colocated mode plans the expert pairing with AuroraPlanner from a
-synthetic routing trace, permutes model B's experts accordingly, and serves
-both batches through one interleaved XLA program (see serving/colocated.py).
+``--arrival-rate λ`` switches to the continuous engine and draws request
+inter-arrival gaps from Exp(λ) (a Poisson process), measured in decode-step
+time units — the serving-loop clock. The colocated mode plans the expert
+pairing with AuroraPlanner from a synthetic routing trace, permutes model B's
+experts accordingly, and serves both streams through one interleaved XLA
+program (see serving/colocated.py).
 """
 
 from __future__ import annotations
@@ -25,12 +31,19 @@ def main() -> int:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--cache-cap", type=int, default=64)
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    help="requests per decode step (Poisson); enables "
+                         "continuous batching")
+    ap.add_argument("--num-requests", type=int, default=12,
+                    help="stream length for --arrival-rate mode")
     args = ap.parse_args()
 
     import jax
     from repro.configs import get_config
     from repro.models import Model
-    from repro.serving import ColocatedEngine, Request, ServingEngine
+    from repro.serving import (ColocatedContinuousEngine, ColocatedEngine,
+                               ContinuousEngine, Request, ServingEngine,
+                               poisson_requests)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -40,6 +53,21 @@ def main() -> int:
     rng = np.random.default_rng(0)
 
     if args.colocate_with is None:
+        if args.arrival_rate is not None:
+            eng = ContinuousEngine(model, params, batch_slots=args.batch,
+                                   cache_cap=args.cache_cap,
+                                   prefill_len=args.prompt_len)
+            reqs = poisson_requests(
+                rng, args.num_requests, args.arrival_rate, cfg.vocab,
+                args.prompt_len, max(1, args.max_new_tokens // 2),
+                args.max_new_tokens)
+            for i, r in enumerate(eng.serve(reqs)):
+                print(f"req {i} (t={r.arrival:.1f}): {r.out_tokens}")
+            total = sum(len(r.out_tokens) for r in reqs)
+            print(f"{total} tokens in {eng.decode_steps} decode steps "
+                  f"({total / max(eng.decode_steps, 1):.2f} tok/step, "
+                  f"{args.batch} slots)")
+            return 0
         eng = ServingEngine(model, params, batch_slots=args.batch,
                             cache_cap=args.cache_cap)
         reqs = [Request(prompt=list(rng.integers(1, cfg.vocab,
@@ -74,6 +102,25 @@ def main() -> int:
         plan = AuroraPlanner(homogeneous_cluster(n)).plan_colocated(tr_a, tr_b)
         params_b = apply_pairing(params_b, plan.pair, cfg_b)
         print(f"aurora colocation pairing: {plan.pair}")
+
+    if args.arrival_rate is not None:
+        eng = ColocatedContinuousEngine(model, model_b, params, params_b,
+                                        batch_slots=args.batch,
+                                        cache_cap=args.cache_cap,
+                                        prefill_len=args.prompt_len)
+        lo = max(1, args.max_new_tokens // 2)
+        reqs_a = poisson_requests(rng, args.num_requests, args.arrival_rate,
+                                  cfg.vocab, args.prompt_len, lo,
+                                  args.max_new_tokens)
+        reqs_b = poisson_requests(rng, args.num_requests, args.arrival_rate,
+                                  cfg_b.vocab, args.prompt_len, lo,
+                                  args.max_new_tokens)
+        eng.serve(reqs_a, reqs_b)
+        for tag, reqs in (("A", reqs_a), ("B", reqs_b)):
+            total = sum(len(r.out_tokens) for r in reqs)
+            print(f"model {tag}: {total} tokens over {len(reqs)} requests")
+        print(f"{eng.decode_steps} lockstep decode steps")
+        return 0
 
     eng = ColocatedEngine(model, model_b, params, params_b)
     pa = rng.integers(1, cfg.vocab, (args.batch, args.prompt_len))

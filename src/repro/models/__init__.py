@@ -4,8 +4,8 @@ transformer stack behind the ``Model`` facade."""
 from .layers import NO_PARALLEL, ParallelContext
 from .model import Model, cross_entropy
 from .transformer import (Segment, forward, init_cache, init_params,
-                          padded_vocab, segments_of)
+                          merge_cache_slot, padded_vocab, segments_of)
 
 __all__ = ["NO_PARALLEL", "ParallelContext", "Model", "cross_entropy",
            "Segment", "forward", "init_cache", "init_params",
-           "padded_vocab", "segments_of"]
+           "merge_cache_slot", "padded_vocab", "segments_of"]

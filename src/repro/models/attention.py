@@ -47,6 +47,10 @@ def init_attn_cache(cfg, batch: int, cap: int, dtype) -> dict:
 def _cache_write(cache_arr, new, slot, pc):
     """Write one token into the cache at (traced) sequence index ``slot``.
 
+    ``slot`` may be a scalar (whole batch at one position) or a (B,) vector
+    (per-slot positions — continuous batching), in which case each batch row
+    writes at its own index via a one-hot masked update.
+
     On a mesh, a dynamic_update_slice at a traced index into the
     seq-SHARDED cache dim triggers GSPMD "involuntary full
     rematerialization" — the whole cache is all-gathered and re-sharded
@@ -54,10 +58,15 @@ def _cache_write(cache_arr, new, slot, pc):
     elementwise, stays local to each shard, and decode streams the full
     cache for attention anyway (§Perf iteration 5).
     """
+    cap = cache_arr.shape[1]
+    slot = jnp.asarray(slot)
+    if slot.ndim == 1:
+        mask = (jnp.arange(cap)[None, :] == slot[:, None]).reshape(
+            (slot.shape[0], cap) + (1,) * (cache_arr.ndim - 2))
+        return jnp.where(mask, new.astype(cache_arr.dtype), cache_arr)
     if pc is None or pc.mesh is None:
         idx = (0, slot) + (0,) * (cache_arr.ndim - 2)
         return jax.lax.dynamic_update_slice(cache_arr, new, idx)
-    cap = cache_arr.shape[1]
     mask = (jnp.arange(cap) == slot).reshape(
         (1, cap) + (1,) * (cache_arr.ndim - 2))
     return jnp.where(mask, new.astype(cache_arr.dtype), cache_arr)
@@ -245,8 +254,13 @@ def mla_block(p, x, *, cfg, pos, cache=None, length=None, mode="train",
         q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wk_b"])   # absorb W^UK
         scores = (jnp.einsum("bshr,btr->bhst", q_lat, cckv)
                   + jnp.einsum("bshk,btk->bhst", q_rope, ckr)) * scale
-        valid = (jnp.arange(cap) < jnp.minimum(length + 1, cap))
-        scores = jnp.where(valid[None, None, None], scores, -1e30)
+        vl = jnp.minimum(length + 1, cap)
+        if jnp.ndim(vl) == 1:   # per-slot fill levels (continuous batching)
+            valid = jnp.arange(cap)[None, :] < vl[:, None]       # (B, cap)
+            scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+        else:
+            valid = jnp.arange(cap) < vl
+            scores = jnp.where(valid[None, None, None], scores, -1e30)
         probs = jax.nn.softmax(scores.astype(jnp.float32), -1)
         ctx_lat = jnp.einsum("bhst,btr->bshr", probs.astype(cckv.dtype), cckv)
         out = jnp.einsum("bshr,rhk->bshk", ctx_lat, p["wv_b"])    # absorb W^UV

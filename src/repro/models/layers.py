@@ -209,7 +209,10 @@ def attention_core(q, k, v, *, causal_offset: jnp.ndarray | int | None,
     (offset = Sk - Sq for self-attention with a prefix cache; None = no
     causal mask, e.g. encoder self-attention / cross-attention).
     ``window``: additionally require j > i + offset - window.
-    ``valid_len``: keys >= valid_len are masked (cache fill level).
+    ``valid_len``: keys >= valid_len are masked (cache fill level). May be a
+    scalar (one fill level for the whole batch) or a (B,) vector (per-slot
+    fill levels — continuous batching); the vector form is only supported at
+    decode (Sq == 1).
     """
     b, sq, h, d = q.shape
     sk, hkv = k.shape[1], k.shape[2]
@@ -232,9 +235,16 @@ def attention_core(q, k, v, *, causal_offset: jnp.ndarray | int | None,
     # form partitions better there.
     if sq == 1:
         qg = q.reshape(b, sq, hkv, h // hkv, d)
-        out = plain_attention(qg, k, v, None if valid_len is None else
-                              mask_fn(jnp.arange(sq)[:, None],
-                                      jnp.arange(sk)[None, :])[None, None])
+        if valid_len is None:
+            mask = None
+        elif jnp.ndim(valid_len) == 1:
+            # Per-slot fill levels: (B, 1, Sq, Sk) mask, one row per slot.
+            mask = (jnp.arange(sk)[None, None, None, :]
+                    < valid_len[:, None, None, None])
+        else:
+            mask = mask_fn(jnp.arange(sq)[:, None],
+                           jnp.arange(sk)[None, :])[None, None]
+        out = plain_attention(qg, k, v, mask)
         return out.reshape(b, sq, h, d)
 
     k = _repeat_kv(k, h // hkv)

@@ -35,8 +35,10 @@ class Model:
     def init(self, key):
         return tf.init_params(key, self.cfg)
 
-    def init_cache(self, batch: int, cap: int, src_len: int = 0):
-        return tf.init_cache(self.cfg, batch, cap, src_len=src_len)
+    def init_cache(self, batch: int, cap: int, src_len: int = 0,
+                   per_slot_len: bool = False):
+        return tf.init_cache(self.cfg, batch, cap, src_len=src_len,
+                             per_slot_len=per_slot_len)
 
     @property
     def padded_vocab(self) -> int:
@@ -75,6 +77,20 @@ class Model:
             params, self.cfg, tokens=token, mode="decode", cache=cache,
             pc=self.pc)
         return logits, cache
+
+    def prefill_slot(self, params, inputs, cache, slot, *, cap: int,
+                     src_len: int = 0):
+        """Prefill ONE request into row ``slot`` of a multi-slot cache.
+
+        The request is run through ``prefill`` against a fresh zero batch-1
+        cache (so no state from a previous occupant of the slot can leak),
+        then written into the shared cache at the slot offset. ``cache`` must
+        be per-slot (``init_cache(..., per_slot_len=True)``); ``slot`` may be
+        traced, so one jit covers every slot. Returns (logits, cache).
+        """
+        sub = tf.init_cache(self.cfg, 1, cap, src_len=src_len)
+        logits, sub = self.prefill(params, inputs, sub)
+        return logits, tf.merge_cache_slot(cache, sub, slot)
 
 
 def cross_entropy(logits, labels, vocab: int):

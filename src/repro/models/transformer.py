@@ -164,7 +164,10 @@ def _init_layer_cache(kind: str, cfg, batch: int, cap: int, src_len: int,
 
 
 def init_cache(cfg, batch: int, cap: int, src_len: int = 0,
-               dtype=None) -> dict:
+               dtype=None, per_slot_len: bool = False) -> dict:
+    """``per_slot_len=True`` makes ``cache["len"]`` a (batch,) vector — each
+    batch row (decode slot) tracks its own sequence length, the cache layout
+    continuous batching decodes against."""
     dtype = jnp.dtype(dtype or cfg.dtype)
     segs = []
     for seg in segments_of(cfg):
@@ -174,7 +177,25 @@ def init_cache(cfg, batch: int, cap: int, src_len: int = 0,
             entries.append(jax.tree.map(
                 lambda x: jnp.broadcast_to(x, (seg.count,) + x.shape), one))
         segs.append(tuple(entries))
-    return {"len": jnp.zeros((), jnp.int32), "segments": tuple(segs)}
+    ln = (jnp.zeros((batch,), jnp.int32) if per_slot_len
+          else jnp.zeros((), jnp.int32))
+    return {"len": ln, "segments": tuple(segs)}
+
+
+def merge_cache_slot(cache, sub, slot):
+    """Write a batch-1 cache ``sub`` into row ``slot`` of a multi-slot cache.
+
+    Segment cache leaves are stacked (count, batch, ...), so the batch/slot
+    dim is axis 1. ``cache["len"]`` must be per-slot (a vector); the slot's
+    length is set to ``sub["len"]``. Used by per-slot prefill: a freshly
+    prefilled request lands in one decode slot of the shared cache.
+    """
+    segs = jax.tree.map(
+        lambda full, new: jax.lax.dynamic_update_slice_in_dim(
+            full, new.astype(full.dtype), slot, axis=1),
+        cache["segments"], sub["segments"])
+    return {"len": cache["len"].at[slot].set(sub["len"].astype(jnp.int32)),
+            "segments": segs}
 
 
 # ---------------------------------------------------------------------------
@@ -307,7 +328,10 @@ def forward(params, cfg, *, tokens=None, embeds=None, mode="train",
     b, s = x.shape[:2]
     if mode == "decode":
         length = cache["len"]
-        pos = jnp.broadcast_to(length[None, None], (b, s))
+        if length.ndim == 1:   # per-slot lengths (continuous batching)
+            pos = jnp.broadcast_to(length[:, None], (b, s))
+        else:
+            pos = jnp.broadcast_to(length[None, None], (b, s))
     else:
         length = None
         pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))

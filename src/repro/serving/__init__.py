@@ -1,6 +1,12 @@
-"""Serving: batched single-model engine + Aurora dual-model colocation."""
+"""Serving: static + continuous single-model engines, Aurora dual-model
+colocation (static + continuous)."""
 
-from .engine import Request, ServingEngine
-from .colocated import ColocatedEngine
+from .engine import (ContinuousEngine, Request, ServingEngine,
+                     poisson_requests, serve_stream)
+from .colocated import (ColocatedContinuousEngine, ColocatedEngine,
+                        apply_pairing, inverse_pair)
 
-__all__ = ["Request", "ServingEngine", "ColocatedEngine"]
+__all__ = ["Request", "ServingEngine", "ContinuousEngine",
+           "ColocatedEngine", "ColocatedContinuousEngine",
+           "apply_pairing", "inverse_pair", "poisson_requests",
+           "serve_stream"]

@@ -33,7 +33,12 @@ def apply_pairing(params_b, pair: list[int], cfg_b):
     """Permute model B's expert dimension so b-expert ``pair[k]`` lands on
     the device slot of a-expert k (the planner's colocation choice).
 
-    Expert weights live as stacked leaves (count, E, ...) under "experts".
+    Expert weights live as stacked leaves (count, E, ...) under "experts";
+    the router's output columns (count, d, E) are permuted with the SAME
+    permutation so routing follows the moved experts — placement changes
+    which device an expert sits on, never the function the model computes.
+    Applying ``inverse_pair(pair)`` afterwards round-trips to the original
+    params exactly.
     """
     perm = jnp.asarray(np.asarray(pair), jnp.int32)
 
@@ -41,9 +46,19 @@ def apply_pairing(params_b, pair: list[int], cfg_b):
         names = [p.key for p in path if hasattr(p, "key")]
         if "experts" in names:
             return jnp.take(leaf, perm, axis=1)   # (count, E, …) — E axis
+        if names and names[-1] == "router":
+            return jnp.take(leaf, perm, axis=-1)  # (count, d, E) — columns
         return leaf
 
     return jax.tree_util.tree_map_with_path(permute, params_b)
+
+
+def inverse_pair(pair: list[int]) -> list[int]:
+    """The permutation that undoes ``apply_pairing(·, pair, ·)``."""
+    inv = [0] * len(pair)
+    for slot, expert in enumerate(pair):
+        inv[expert] = slot
+    return inv
 
 
 @dataclasses.dataclass
@@ -99,3 +114,59 @@ class ColocatedEngine:
             out_a.append(tok_a)
             out_b.append(tok_b)
         return (jnp.concatenate(out_a, 1), jnp.concatenate(out_b, 1))
+
+
+class ColocatedContinuousEngine:
+    """Continuous batching for the Aurora dual-model runtime.
+
+    Two ``ContinuousEngine`` slot pools — one per model — admit from their
+    own request queues and decode in **lockstep** through one fused jitted
+    step, preserving the Fig 3(b) overlap: model A's dispatch collectives
+    and model B's compute live in the same XLA program, so the latency-
+    hiding scheduler interleaves them exactly as in ``ColocatedEngine``,
+    while each pool's slots fill and drain independently with traffic.
+    """
+
+    def __init__(self, model_a: Model, model_b: Model, params_a, params_b,
+                 batch_slots: int, cache_cap: int,
+                 prefill_len: int | None = None, jit: bool = True):
+        from .engine import ContinuousEngine
+
+        self.pool_a = ContinuousEngine(model_a, params_a, batch_slots,
+                                       cache_cap, prefill_len=prefill_len,
+                                       jit=jit)
+        self.pool_b = ContinuousEngine(model_b, params_b, batch_slots,
+                                       cache_cap, prefill_len=prefill_len,
+                                       jit=jit)
+
+        def step(params_a, params_b, tok_a, tok_b, cache_a, cache_b):
+            la, cache_a = model_a.decode_step(params_a, tok_a, cache_a)
+            lb, cache_b = model_b.decode_step(params_b, tok_b, cache_b)
+            return la, lb, cache_a, cache_b
+
+        self._step = (jax.jit(step, donate_argnums=(4, 5)) if jit else step)
+        self.decode_steps = 0
+
+    def step(self) -> bool:
+        """Admit into both pools, then one fused lockstep decode."""
+        a, b = self.pool_a, self.pool_b
+        a._admit()
+        b._admit()
+        if a.num_active == 0 and b.num_active == 0:
+            return False
+        la, lb, a.cache, b.cache = self._step(a.params, b.params,
+                                              a.tokens, b.tokens,
+                                              a.cache, b.cache)
+        self.decode_steps += 1
+        a._postdecode(la)
+        b._postdecode(lb)
+        return True
+
+    def serve(self, reqs_a, reqs_b):
+        """Run both request streams to completion (``Request.arrival`` in
+        lockstep-step units). Returns (reqs_a, reqs_b)."""
+        from .engine import serve_stream
+
+        serve_stream(self.step, [(self.pool_a, reqs_a),
+                                 (self.pool_b, reqs_b)])
+        return reqs_a, reqs_b

@@ -1,15 +1,26 @@
-"""Batched serving engine: fixed-capacity batch, prefill + greedy decode.
+"""Serving engines: static fixed-batch and continuous batching.
 
-The engine owns params and a KV/SSM cache sized ``(batch_slots, cache_cap)``
-and runs jitted ``prefill`` / ``decode_step`` functions — the same functions
-the dry-run lowers for the decode input shapes. Requests are left-padded to
-a common prompt length per batch (fixed-shape serving; continuous batching
-is out of scope for the paper, which schedules the MoE all-to-all).
+``ServingEngine`` (the original) runs one fixed-shape batch to completion:
+requests are left-padded to a common prompt length, and the whole batch
+decodes for ``max(max_new_tokens)`` steps — throughput stalls on the longest
+request, and nothing can start until the batch is done.
+
+``ContinuousEngine`` owns a request queue plus ``batch_slots`` decode slots
+over a shared, donated KV/SSM cache with **per-slot lengths**
+(``init_cache(per_slot_len=True)``). Each step the scheduler admits queued
+requests into free slots — a per-slot prefill writes one request's state into
+its slot row (``Model.prefill_slot``) — then decodes every slot in one jitted
+step and evicts finished requests, so a short request's slot is immediately
+reusable while long requests keep decoding. Same math as the static engine
+(per-row attention masking via the per-slot length vector), different
+schedule.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+from functools import partial
 from typing import Sequence
 
 import jax
@@ -23,7 +34,50 @@ from repro.models import Model
 class Request:
     prompt: Sequence[int]
     max_new_tokens: int = 16
+    arrival: float = 0.0                 # engine-step time of arrival
     out_tokens: list = dataclasses.field(default_factory=list)
+
+
+def poisson_requests(rng, n: int, rate: float, vocab: int, prompt_len: int,
+                     max_new_lo: int, max_new_hi: int) -> list[Request]:
+    """n requests with Exp(1/rate) inter-arrival gaps (a Poisson process,
+    in decode-step time units) and uniform output lengths in
+    [max_new_lo, max_new_hi]."""
+    t = 0.0
+    reqs = []
+    for _ in range(n):
+        t += float(rng.exponential(1.0 / rate)) if rate > 0 else 0.0
+        reqs.append(Request(
+            prompt=list(rng.integers(1, vocab, prompt_len)),
+            max_new_tokens=int(rng.integers(max_new_lo, max_new_hi + 1)),
+            arrival=t))
+    return reqs
+
+
+def serve_stream(step_fn, pools) -> None:
+    """Arrival-clock driver shared by the continuous engines.
+
+    ``pools``: (engine, requests) pairs — one for the single-model engine,
+    two (lockstep) for the colocated engine. Each tick admits every request
+    whose ``arrival`` has passed (same-arrival requests in list order), runs
+    one ``step_fn()``, and jumps the clock over idle gaps when nothing is
+    active but requests are still due.
+    """
+    streams = [[eng, sorted(reqs, key=lambda r: r.arrival), 0]
+               for eng, reqs in pools]
+    t = 0.0
+    while any(i < len(p) or e.queue or e.num_active for e, p, i in streams):
+        for s in streams:
+            eng, pend, i = s
+            while i < len(pend) and pend[i].arrival <= t:
+                eng.submit(pend[i])
+                i += 1
+            s[2] = i
+        due = [p[i].arrival for _, p, i in streams if i < len(p)]
+        if not step_fn() and due:
+            t = max(t + 1.0, min(due))               # jump idle gaps
+        else:
+            t += 1.0
 
 
 class ServingEngine:
@@ -40,6 +94,7 @@ class ServingEngine:
                          if jit else model.prefill)
         self._decode = (jax.jit(model.decode_step, donate_argnums=(2,))
                         if jit else model.decode_step)
+        self.decode_steps = 0            # decode invocations (for benchmarks)
 
     def _pad_prompts(self, reqs: list[Request]) -> np.ndarray:
         plen = max(len(r.prompt) for r in reqs)
@@ -67,6 +122,121 @@ class ServingEngine:
                 if len(r.out_tokens) < r.max_new_tokens:
                     r.out_tokens.append(int(tok[i, 0]))
             logits, cache = self._decode(self.params, tok, cache)
+            self.decode_steps += 1
             tok = jnp.argmax(logits[:, :, : self.model.cfg.vocab],
                              axis=-1).astype(jnp.int32)
+        return reqs
+
+
+class ContinuousEngine:
+    """Continuous-batching scheduler over ``batch_slots`` decode slots.
+
+    ``prefill_len``: fixed left-pad length for per-slot prefills (one compiled
+    prefill program). ``None`` buckets each prompt to the next power of two
+    (one compilation per bucket). A prompt padded to length P behaves exactly
+    like the static engine's batch padded to P, so outputs are
+    token-identical when the pad lengths agree.
+
+    The slot state machine lives host-side (``queue`` + ``slots``); device
+    state is the shared cache (per-slot lengths) and the (B, 1) current-token
+    buffer. Free slots keep decoding garbage rows — attention is batch-row
+    independent and the rows are overwritten at the next admission — so the
+    decode step is one fixed-shape jitted program regardless of occupancy.
+    """
+
+    def __init__(self, model: Model, params, batch_slots: int,
+                 cache_cap: int, src_len: int = 0,
+                 prefill_len: int | None = None, jit: bool = True):
+        self.model = model
+        self.params = params
+        self.batch_slots = batch_slots
+        self.cache_cap = cache_cap
+        self.src_len = src_len
+        self.prefill_len = prefill_len
+        self.cache = model.init_cache(batch_slots, cache_cap,
+                                      src_len=src_len, per_slot_len=True)
+        self.tokens = jnp.zeros((batch_slots, 1), jnp.int32)
+        self.queue: collections.deque[Request] = collections.deque()
+        self.slots: list[Request | None] = [None] * batch_slots
+        fn_p = partial(model.prefill_slot, cap=cache_cap, src_len=src_len)
+        self._prefill = (jax.jit(fn_p, donate_argnums=(2,)) if jit else fn_p)
+        self._decode = (jax.jit(model.decode_step, donate_argnums=(2,))
+                        if jit else model.decode_step)
+        self.decode_steps = 0
+
+    # -- scheduler ---------------------------------------------------------
+    @property
+    def num_active(self) -> int:
+        return sum(r is not None for r in self.slots)
+
+    def submit(self, req: Request) -> None:
+        # Final per-slot length is pad(prompt) + max_new_tokens - 1 (the
+        # last emitted token is never written back); beyond cache_cap the
+        # decode path would silently overwrite slot cap-1 every step.
+        need = self._bucket(len(req.prompt)) + max(req.max_new_tokens - 1, 0)
+        if need > self.cache_cap:
+            raise ValueError(
+                f"prompt + generation needs {need} cache slots, "
+                f"capacity is {self.cache_cap}")
+        self.queue.append(req)
+
+    def _bucket(self, n: int) -> int:
+        if self.prefill_len is not None:
+            if n > self.prefill_len:
+                raise ValueError(f"prompt len {n} > prefill_len "
+                                 f"{self.prefill_len}")
+            return self.prefill_len
+        p = 1
+        while p < n:
+            p *= 2
+        return min(p, self.cache_cap)
+
+    def _admit(self) -> None:
+        """Drain the queue into free slots (per-slot prefill each)."""
+        while self.queue and None in self.slots:
+            slot = self.slots.index(None)
+            r = self.queue.popleft()
+            p = self._bucket(len(r.prompt))
+            toks = np.zeros((1, p), np.int32)
+            toks[0, p - len(r.prompt):] = r.prompt      # left-pad with 0
+            logits, self.cache = self._prefill(
+                self.params, {"tokens": jnp.asarray(toks)}, self.cache,
+                jnp.int32(slot))
+            tok0 = int(jnp.argmax(logits[0, -1, : self.model.cfg.vocab]))
+            if r.max_new_tokens > 0:
+                r.out_tokens.append(tok0)
+            if len(r.out_tokens) < r.max_new_tokens:
+                self.slots[slot] = r
+                self.tokens = self.tokens.at[slot, 0].set(tok0)
+
+    def _postdecode(self, logits) -> None:
+        """Emit one token per occupied slot; evict finished requests."""
+        nxt = jnp.argmax(logits[:, :, : self.model.cfg.vocab],
+                         axis=-1).astype(jnp.int32)
+        self.tokens = nxt
+        host = np.asarray(nxt)
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            r.out_tokens.append(int(host[i, 0]))
+            if len(r.out_tokens) >= r.max_new_tokens:
+                self.slots[i] = None                     # slot free for reuse
+
+    def step(self) -> bool:
+        """Admit, then decode all slots once. Returns False when idle."""
+        self._admit()
+        if self.num_active == 0:
+            return False
+        logits, self.cache = self._decode(self.params, self.tokens,
+                                          self.cache)
+        self.decode_steps += 1
+        self._postdecode(logits)
+        return True
+
+    # -- driver ------------------------------------------------------------
+    def serve(self, reqs: list[Request]) -> list[Request]:
+        """Run a request stream to completion, honoring ``arrival`` times
+        (measured in engine steps; requests arriving at the same step are
+        admitted in list order)."""
+        serve_stream(self.step, [(self, reqs)])
         return reqs

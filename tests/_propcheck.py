@@ -1,0 +1,103 @@
+"""Property-testing front-end: hypothesis when installed, seeded fallback
+otherwise.
+
+The tier-1 suite must COLLECT AND RUN in a bare environment (numpy + jax +
+pytest only), so the property tests import ``given / settings / st`` from
+here instead of from ``hypothesis`` directly. With hypothesis installed this
+module re-exports the real thing — shrinking, the example database, and the
+full strategy zoo included. Without it, a minimal shim replays a fixed
+number of seeded random examples per test (deterministic per test name), so
+the core invariants — BvN schedule totals, contention-free slots, augment
+row/col sums, matching optimality — stay guarded rather than skipped.
+
+The shim implements only what these tests use: ``st.integers``,
+``st.floats``, ``st.lists``, ``.map``, ``.flatmap``, ``@settings``,
+``@given``.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import zlib
+
+    import numpy as np
+
+    _FALLBACK_MAX_EXAMPLES = 25   # cap: the shim does not shrink failures,
+    #                               so keep the bare-env runtime bounded
+
+    class _Strategy:
+        """A strategy is just ``draw(rng) -> value``."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._draw(rng)))
+
+        def flatmap(self, fn):
+            return _Strategy(lambda rng: fn(self._draw(rng)).draw(rng))
+
+    class st:  # noqa: N801 — mirrors ``strategies as st``
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=None):
+            hi = max_size if max_size is not None else min_size + 10
+
+            def draw(rng):
+                n = int(rng.integers(min_size, hi + 1))
+                return [elements.draw(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+    def settings(max_examples=None, **_kw):
+        def deco(fn):
+            if max_examples is not None:
+                fn._max_examples = min(max_examples, _FALLBACK_MAX_EXAMPLES)
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples",
+                            _FALLBACK_MAX_EXAMPLES)
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = np.random.default_rng(seed)
+                for i in range(n):
+                    drawn = tuple(s.draw(rng) for s in strategies)
+                    try:
+                        fn(*args, *drawn, **kwargs)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsified on example {i}: {drawn!r}") from e
+
+            # Hide the generated parameters from pytest's fixture resolver:
+            # functools.wraps copies __wrapped__, and inspect.signature
+            # follows it back to (n, seed, ...) — which pytest would then
+            # try to inject as fixtures.
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco

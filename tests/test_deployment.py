@@ -4,7 +4,7 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, st  # hypothesis if installed
 
 from repro.core import (AuroraPlanner, Cluster, PAPER_HET_TIERS,
                         aurora_assignment, bruteforce_colocated,

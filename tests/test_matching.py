@@ -4,7 +4,7 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, st  # hypothesis if installed
 
 from repro.core.matching import (bottleneck_perfect_matching, hopcroft_karp,
                                  has_perfect_matching, perfect_matching)

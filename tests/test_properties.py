@@ -14,7 +14,7 @@ Core invariants from the paper's theorems:
 import itertools
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, st  # hypothesis if installed
 
 from repro.core import (aurora_pairing, aggregate_traffic, aurora_schedule,
                         b_max_homogeneous, fluid_comm_time, rcs_order,

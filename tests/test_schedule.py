@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, st  # hypothesis if installed
 
 from repro.core.schedule import (aurora_schedule, augment_to_bmax, b_max_of,
                                  comm_time, fluid_comm_time, rcs_order,
