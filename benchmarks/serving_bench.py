@@ -1,85 +1,132 @@
-"""Continuous vs static batching under a streaming arrival process.
+"""Serving benchmarks: continuous batching, chunked prefill, online re-plan.
 
-  PYTHONPATH=src python -m benchmarks.serving_bench
+  PYTHONPATH=src python -m benchmarks.serving_bench             # classic
+  PYTHONPATH=src python -m benchmarks.serving_bench --chunked   # stall study
+  PYTHONPATH=src python -m benchmarks.serving_bench --drift     # + re-plan
+  PYTHONPATH=src python -m benchmarks.serving_bench --all --json BENCH_serving.json
 
-Both engines serve the SAME request stream (Poisson arrivals, mixed output
-lengths) on a reduced config. The static engine packs requests into
-fixed batches in arrival order: a batch cannot start until its last request
-has arrived and cannot retire a slot until its longest request finishes.
-The continuous engine admits each request into the first free slot and
-evicts on completion. Arrival waiting costs the static engine nothing here
-(sim-time only), so the comparison isolates the slot-stall waste — the
-serving-layer inefficiency the paper's deployment work sits on top of.
+Three sections, each a pass/fail experiment:
 
-Reports wall-clock throughput (tokens/s, post-warmup) and scheduling
-efficiency (tokens per decode step); exits non-zero if continuous batching
-loses on either metric.
+* **continuous** — continuous vs static batching on the SAME Poisson stream
+  (PR 1's experiment): continuous must win wall-clock throughput and
+  per-step efficiency.
+* **chunked** — a long prompt arrives while short requests are decoding.
+  One-shot admission absorbs the whole prompt inside one engine step,
+  stalling every active slot for that step; chunked prefill bounds per-step
+  work at ``prefill_chunk`` tokens. Compares the step-latency tail (max /
+  p95 wall per step) of the two schedulers on identical streams; chunked
+  must cut the max step latency and emit identical tokens.
+* **drift** — traffic-driven online re-planning. The colocated engine's
+  initial expert pairing is planned from a SYNTHETIC historical trace (what
+  ``repro.launch.serve`` does — the paper's §2.4 setup), then a drifting
+  Poisson stream arrives (prompts shift from one vocab region to another, so
+  live expert popularity diverges from history). The adaptive engine
+  re-pairs from live ``TrafficMonitor`` traces mid-stream; the stale engine
+  keeps the historical pairing. Both pairings are then scored by the paper's
+  Table-2 simulator ON THE SAME live trace — the adaptive placement must be
+  predicted no slower, and (placement-only invariant) both runs must emit
+  byte-identical tokens.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
 
 
-def run_static(model, params, reqs, batch_slots, cache_cap):
-    """Fixed batches in arrival order; returns (tokens, steps, wall_s)."""
-    from repro.serving import Request, ServingEngine
+# ---------------------------------------------------------------------------
+# Shared helpers
+# ---------------------------------------------------------------------------
 
-    eng = ServingEngine(model, params, batch_slots, cache_cap)
-    # Warm-up compile outside the timed region.
-    eng.serve([Request(prompt=list(r.prompt), max_new_tokens=1)
-               for r in reqs[:batch_slots]])
-    eng.decode_steps = 0
-    wall = 0.0
-    for i in range(0, len(reqs), batch_slots):
-        batch = reqs[i:i + batch_slots]
-        t0 = time.perf_counter()
-        eng.serve(batch)
-        wall += time.perf_counter() - t0
-    tokens = sum(len(r.out_tokens) for r in reqs)
-    return tokens, eng.decode_steps, wall
-
-
-def run_continuous(model, params, reqs, batch_slots, cache_cap, prefill_len):
-    from repro.serving import ContinuousEngine, Request
-
-    eng = ContinuousEngine(model, params, batch_slots, cache_cap,
-                           prefill_len=prefill_len)
-    eng.serve([Request(prompt=list(reqs[0].prompt), max_new_tokens=2)])
-    eng.decode_steps = 0
-    t0 = time.perf_counter()
-    eng.serve(reqs)
-    wall = time.perf_counter() - t0
-    tokens = sum(len(r.out_tokens) for r in reqs)
-    return tokens, eng.decode_steps, wall
-
-
-def bench(arch="qwen3-32b", n_requests=16, batch_slots=4, prompt_len=8,
-          cache_cap=48, rate=0.75, seed=0):
+def _build(arch: str, seed: int = 0):
     import jax
     from repro.configs import get_config
     from repro.models import Model
-    from repro.serving import Request, poisson_requests
 
     cfg = get_config(arch).reduced()
     model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+def _clone(reqs):
+    from repro.serving import Request
+
+    return [Request(prompt=list(r.prompt), max_new_tokens=r.max_new_tokens,
+                    arrival=r.arrival) for r in reqs]
+
+
+def _timed_serve(eng, reqs):
+    """Serve a stream, recording wall time of every engine step."""
+    from repro.serving import serve_stream
+
+    times = []
+
+    def step():
+        t0 = time.perf_counter()
+        busy = eng.step()
+        times.append(time.perf_counter() - t0)
+        return busy
+
+    serve_stream(step, [(eng, reqs)])
+    return times
+
+
+# ---------------------------------------------------------------------------
+# Section 1: continuous vs static (PR 1)
+# ---------------------------------------------------------------------------
+
+def bench(arch="qwen3-32b", n_requests=16, batch_slots=4, prompt_len=8,
+          cache_cap=48, rate=0.75, seed=0, repeats=3):
+    from repro.serving import (ContinuousEngine, Request, ServingEngine,
+                               poisson_requests)
+
+    cfg, model, params = _build(arch)
     rng = np.random.default_rng(seed)
     stream = poisson_requests(rng, n_requests, rate, cfg.vocab, prompt_len,
                               max_new_lo=4, max_new_hi=24)
 
-    clone = lambda: [Request(prompt=list(r.prompt),
-                             max_new_tokens=r.max_new_tokens,
-                             arrival=r.arrival) for r in stream]
-    s_tok, s_steps, s_wall = run_static(model, params, clone(),
-                                        batch_slots, cache_cap)
-    c_tok, c_steps, c_wall = run_continuous(model, params, clone(),
-                                            batch_slots, cache_cap,
-                                            prefill_len=prompt_len)
+    s_eng = ServingEngine(model, params, batch_slots, cache_cap)
+    s_eng.serve([Request(prompt=list(r.prompt), max_new_tokens=1)
+                 for r in stream[:batch_slots]])     # warm-up compile
+    c_eng = ContinuousEngine(model, params, batch_slots, cache_cap,
+                             prefill_len=prompt_len)
+    c_eng.serve([Request(prompt=list(stream[0].prompt), max_new_tokens=2)])
+
+    def run_static():
+        reqs = _clone(stream)
+        s_eng.decode_steps = 0
+        wall = 0.0
+        for i in range(0, len(reqs), batch_slots):
+            t0 = time.perf_counter()
+            s_eng.serve(reqs[i:i + batch_slots])
+            wall += time.perf_counter() - t0
+        return sum(len(r.out_tokens) for r in reqs), s_eng.decode_steps, wall
+
+    def run_continuous():
+        reqs = _clone(stream)
+        c_eng.decode_steps = 0
+        t0 = time.perf_counter()
+        c_eng.serve(reqs)
+        wall = time.perf_counter() - t0
+        return sum(len(r.out_tokens) for r in reqs), c_eng.decode_steps, wall
+
+    # Interleave repetitions so transient machine load hits both engines
+    # alike; gate on the median of per-rep wall ratios.
+    s_runs, c_runs = [], []
+    for _ in range(repeats):
+        s_runs.append(run_static())
+        c_runs.append(run_continuous())
+    s_tok, s_steps, _ = s_runs[-1]
+    c_tok, c_steps, _ = c_runs[-1]
     assert s_tok == c_tok, (s_tok, c_tok)
+    s_wall = float(np.median([r[2] for r in s_runs]))
+    c_wall = float(np.median([r[2] for r in c_runs]))
+    wall_ratio = float(np.median(
+        [s_runs[i][2] / c_runs[i][2] for i in range(repeats)]))
 
     rows = [("static", s_tok, s_steps, s_wall),
             ("continuous", c_tok, c_steps, c_wall)]
@@ -90,25 +137,287 @@ def bench(arch="qwen3-32b", n_requests=16, batch_slots=4, prompt_len=8,
     for name, tok, steps, wall in rows:
         print(f"{name:<12} {tok:>7} {steps:>6} {tok / steps:>9.2f} "
               f"{wall:>8.2f} {tok / wall:>9.1f}")
-    speedup = (s_wall / c_wall, (c_tok / c_steps) / (s_tok / s_steps))
-    print(f"continuous speedup: {speedup[0]:.2f}x wall, "
-          f"{speedup[1]:.2f}x per-step efficiency")
-    return {"static": rows[0], "continuous": rows[1],
-            "ok": c_tok / c_wall >= s_tok / s_wall and c_steps <= s_steps}
+    eff = (c_tok / c_steps) / (s_tok / s_steps)
+    print(f"continuous speedup: {wall_ratio:.2f}x wall (median of "
+          f"{repeats} paired reps), {eff:.2f}x per-step efficiency")
+    return {
+        "arch": arch, "n_requests": n_requests, "batch_slots": batch_slots,
+        "static": {"tokens": s_tok, "steps": s_steps, "wall_s": s_wall},
+        "continuous": {"tokens": c_tok, "steps": c_steps, "wall_s": c_wall},
+        "wall_speedup": wall_ratio, "step_efficiency": eff,
+        "ok": bool(wall_ratio >= 1.0 and c_steps <= s_steps),
+    }
 
+
+# ---------------------------------------------------------------------------
+# Section 2: chunked prefill vs one-shot admission (long-prompt stall)
+# ---------------------------------------------------------------------------
+
+def bench_chunked(arch="qwen3-32b", batch_slots=4, short_len=8, long_len=512,
+                  chunk=32, n_short=6, max_new=12, seed=0, repeats=5):
+    import gc
+
+    import jax
+    from repro.serving import ContinuousEngine, Request
+
+    # This section gates on step-latency TAILS, which drown in dispatch
+    # jitter when the process carries other sections' compiled programs and
+    # buffers — start from a clean heap.
+    jax.clear_caches()
+    gc.collect()
+
+    cfg, model, params = _build(arch)
+    cache_cap = long_len + max_new + 16
+    rng = np.random.default_rng(seed)
+
+    def stream():
+        # Short requests keep the slots busy; the long prompt lands at t=2,
+        # mid-decode — the stall scenario.
+        reqs = [Request(prompt=list(rng.integers(1, cfg.vocab, short_len)),
+                        max_new_tokens=max_new, arrival=float(i))
+                for i in range(n_short)]
+        reqs.insert(2, Request(
+            prompt=list(rng.integers(1, cfg.vocab, long_len)),
+            max_new_tokens=max_new, arrival=2.0))
+        return reqs
+
+    base = stream()
+    engines = {}
+    outs = {}
+    for name, kw in (("one-shot", {}), ("chunked", {"prefill_chunk": chunk})):
+        engines[name] = ContinuousEngine(model, params, batch_slots,
+                                         cache_cap, **kw)
+        _timed_serve(engines[name], _clone(base))    # warm-up compiles
+    # Transient machine load would sink whichever engine happens to be
+    # measured during the spike, so INTERLEAVE the repetitions and gate on
+    # the median of per-rep stall ratios — paired samples see the same
+    # load environment.
+    runs = {"one-shot": [], "chunked": []}
+    for _ in range(repeats):
+        for name in ("one-shot", "chunked"):
+            final = _clone(base)
+            runs[name].append(np.asarray(_timed_serve(engines[name], final)))
+            outs[name] = [r.out_tokens for r in final]
+    assert outs["one-shot"] == outs["chunked"], \
+        "chunked prefill changed emitted tokens"
+
+    # External load spikes only ever ADD time, so the MIN over reps of each
+    # engine's worst step is the clean estimator of its structural stall
+    # (the timeit convention); medians are reported alongside for context.
+    results = {}
+    for name, arrs in runs.items():
+        results[name] = {
+            "steps": len(arrs[-1]),
+            "wall_s": float(np.median([a.sum() for a in arrs])),
+            "max_step_ms": float(min(a.max() for a in arrs) * 1e3),
+            "max_step_ms_median": float(
+                np.median([a.max() for a in arrs]) * 1e3),
+            "p95_step_ms": float(np.median(
+                [np.percentile(a, 95) for a in arrs]) * 1e3),
+            "mean_step_ms": float(np.median(
+                [a.mean() for a in arrs]) * 1e3),
+        }
+    r1, r2 = results["one-shot"], results["chunked"]
+    stall_cut = r1["max_step_ms"] / r2["max_step_ms"]
+
+    print(f"== chunked prefill: {arch} (reduced), {long_len}-token prompt "
+          f"into a busy pool, chunk={chunk} ==")
+    print(f"{'scheduler':<10} {'steps':>6} {'max ms':>8} {'p95 ms':>8} "
+          f"{'mean ms':>8}")
+    for name in ("one-shot", "chunked"):
+        r = results[name]
+        print(f"{name:<10} {r['steps']:>6} {r['max_step_ms']:>8.2f} "
+              f"{r['p95_step_ms']:>8.2f} {r['mean_step_ms']:>8.2f}")
+    print(f"long-prompt stall (max step latency) cut {stall_cut:.2f}x "
+          f"(best-of-{repeats} reps per engine); tokens identical")
+    return {
+        "arch": arch, "long_len": long_len, "chunk": chunk,
+        "one_shot": r1, "chunked": r2, "stall_cut": stall_cut,
+        "ok": bool(stall_cut > 1.0),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Section 3: traffic drift + online re-planning
+# ---------------------------------------------------------------------------
+
+def bench_drift(arch="phi3.5-moe-42b-a6.6b", n_phase=12, batch_slots=2,
+                prompt_len=8, max_new=6, rate=0.6, interval=6,
+                cache_cap=32, halflife=16.0, seed=0):
+    from repro.core import AuroraPlanner, homogeneous_cluster, synthetic_trace
+    from repro.serving import (ColocatedContinuousEngine, OnlineReplanner,
+                               Request, apply_pairing)
+
+    import dataclasses
+
+    import jax
+    from repro.configs import get_config
+    from repro.models import Model
+
+    # reduced() clamps to 4 experts, which leaves only 4! = 24 pairings — a
+    # random historical pairing is too often near-optimal by luck. Widen to
+    # 8 experts (still tiny weights) so placement quality actually varies.
+    cfg = get_config(arch).reduced()
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, n_experts=8))
+    cfg_a = cfg_b = cfg
+    model_a, model_b = Model(cfg_a), Model(cfg_b)
+    params_a = model_a.init(jax.random.PRNGKey(0))
+    params_b = model_b.init(jax.random.PRNGKey(1))
+    n = cfg_a.moe.n_experts
+    planner = AuroraPlanner(homogeneous_cluster(n))
+
+    # Historical plan (what repro.launch.serve does today): pair from a
+    # synthetic trace. Live traffic will look nothing like it — the drift.
+    hist_a = synthetic_trace("hist-a", n_experts=n, n_layers=2, seed=seed)
+    hist_b = synthetic_trace("hist-b", n_experts=n, n_layers=2, seed=seed + 1)
+    plan0 = planner.plan_colocated(hist_a, hist_b)
+    pair0 = list(plan0.pair)
+    params_b = apply_pairing(params_b, pair0, cfg_b)
+
+    # Prompts come from NARROW vocab bands (sharply skewed expert
+    # popularity), and the band flips mid-stream — a strong popularity
+    # drift, the regime MoETuner/Huang et al. show stales out placements.
+    v = cfg_a.vocab
+    bands = [(1, 1 + v // 16), (v // 2, v // 2 + v // 16)]
+
+    def drifting_stream(rng, flip=False):
+        reqs = []
+        t = 0.0
+        for i in range(2 * n_phase):
+            t += float(rng.exponential(1.0 / rate))
+            lo, hi = bands[(i >= n_phase) ^ flip]
+            reqs.append(Request(
+                prompt=list(rng.integers(lo, hi, prompt_len)),
+                max_new_tokens=max_new, arrival=t))
+        return reqs
+
+    rng = np.random.default_rng(seed)
+    reqs_a = drifting_stream(rng)
+    reqs_b = drifting_stream(rng, flip=True)
+
+    # Static leg: historical pairing, no re-planning.
+    static = ColocatedContinuousEngine(model_a, model_b, params_a, params_b,
+                                       batch_slots, cache_cap, pair=pair0)
+    sa, sb = static.serve(_clone(reqs_a), _clone(reqs_b))
+
+    # Adaptive leg: same stream, re-planning from live routing stats. The
+    # replanner also scores the frozen historical pairing on every live
+    # trace (baseline_pair) so the two trajectories are directly comparable.
+    rp = OnlineReplanner(planner, interval=interval, threshold=0.02,
+                         warmup=interval, baseline_pair=pair0)
+    adap = ColocatedContinuousEngine(model_a, model_b, params_a, params_b,
+                                     batch_slots, cache_cap, pair=pair0,
+                                     replan=rp, monitor_halflife=halflife)
+    aa, ab = adap.serve(_clone(reqs_a), _clone(reqs_b))
+
+    assert [r.out_tokens for r in sa] == [r.out_tokens for r in aa], \
+        "re-planning changed model A tokens (placement-only violated)"
+    assert [r.out_tokens for r in sb] == [r.out_tokens for r in ab], \
+        "re-planning changed model B tokens (placement-only violated)"
+
+    # Trajectory score: at every checkpoint the engine's COMMITTED pairing
+    # (events[i].stale_time) vs the frozen historical pairing
+    # (events[i].baseline_time), both simulated on the live trace of that
+    # moment. Identical streams → identical routing, so the adaptive run's
+    # checkpoints speak for both legs.
+    events = adap.replan_events
+    applied = [e for e in events if e.applied]
+    t_static = float(np.mean([e.baseline_time for e in events]))
+    t_adapt = float(np.mean([e.stale_time for e in events]))
+
+    print(f"== drift bench: {arch} x2 (reduced), {2 * n_phase} reqs/model, "
+          f"narrow-band popularity flip, replan every {interval} steps ==")
+    print(f"historical pairing     : {pair0}")
+    print(f"final adaptive pairing : {adap.pair} "
+          f"({len(applied)} re-plan(s) applied)")
+    print(f"{'step':>6} {'historical':>11} {'committed':>10} "
+          f"{'candidate':>10}   decision")
+    for e in events:
+        tag = "APPLIED" if e.applied else "kept"
+        print(f"{e.step:>6} {e.baseline_time:>11.3f} {e.stale_time:>10.3f} "
+              f"{e.candidate_time:>10.3f}   {tag}")
+    gain = t_static / t_adapt if t_adapt > 0 else 1.0
+    print(f"mean predicted inference time over the stream: "
+          f"historical {t_static:.3f} vs adaptive {t_adapt:.3f} "
+          f"({gain:.3f}x)")
+    print("token streams identical across legs (placement-only invariant)")
+    return {
+        "arch": arch, "pair0": pair0, "pair_final": list(adap.pair),
+        "replans_applied": len(applied),
+        "events": [{"step": e.step, "historical": e.baseline_time,
+                    "committed": e.stale_time,
+                    "candidate": e.candidate_time, "applied": e.applied}
+                   for e in events],
+        "static_time": t_static, "adaptive_time": t_adapt,
+        "improvement": gain,
+        "ok": bool(len(applied) >= 1 and t_adapt <= t_static * (1 + 1e-9)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-32b")
+    ap.add_argument("--moe-arch", default="phi3.5-moe-42b-a6.6b",
+                    help="MoE arch for the drift section")
     ap.add_argument("--num-requests", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--rate", type=float, default=0.75)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--chunked", action="store_true",
+                    help="run the chunked-prefill stall section only")
+    ap.add_argument("--drift", action="store_true",
+                    help="run the re-planning drift section (includes the "
+                         "chunked stall comparison)")
+    ap.add_argument("--all", action="store_true",
+                    help="run every section")
+    ap.add_argument("--small", action="store_true",
+                    help="CI smoke sizes (fewer/shorter requests)")
+    ap.add_argument("--json", default=None,
+                    help="write section records to this JSON file")
     args = ap.parse_args()
-    rec = bench(arch=args.arch, n_requests=args.num_requests,
-                batch_slots=args.batch, rate=args.rate, seed=args.seed)
-    if not rec["ok"]:
-        print("FAIL: continuous batching did not beat static batching")
+
+    sections = {}
+    run_classic = args.all or not (args.chunked or args.drift)
+    run_chunked = args.all or args.chunked or args.drift
+    run_drift = args.all or args.drift
+
+    # The chunked section runs FIRST: it judges step-latency tails, the
+    # statistic most sensitive to heap/caches left by other sections.
+    if run_chunked:
+        # Even in --small the long prompt stays 8x the chunk AND the chunk
+        # stays big enough to amortize per-step dispatch: on tiny CPU
+        # configs the stall gap is the experiment, and an 8-token chunk's
+        # fixed overhead would drown it in scheduler noise.
+        # The 512-token prompt stays even in --small: on a quiet machine a
+        # short prompt's one-shot prefill parallelizes into the same cost
+        # band as a chunk step and the stall gap vanishes into noise — the
+        # prompt must be structurally slow for the experiment to exist.
+        kw = (dict(n_short=4, max_new=8, repeats=3) if args.small else {})
+        sections["chunked"] = bench_chunked(arch=args.arch, seed=args.seed,
+                                            **kw)
+    if run_classic:
+        n = 8 if args.small else args.num_requests
+        sections["continuous"] = bench(
+            arch=args.arch, n_requests=n, batch_slots=args.batch,
+            rate=args.rate, seed=args.seed)
+    if run_drift:
+        kw = dict(n_phase=6, max_new=4) if args.small else {}
+        sections["drift"] = bench_drift(arch=args.moe_arch, seed=args.seed,
+                                        **kw)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(sections, f, indent=2)
+        print(f"wrote {args.json}")
+
+    failed = [k for k, v in sections.items() if not v["ok"]]
+    if failed:
+        print(f"FAIL: section(s) {failed} did not meet the win condition")
         return 1
     return 0
 

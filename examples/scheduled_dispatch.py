@@ -22,6 +22,8 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+
+from repro.compat import set_mesh
 import numpy as np
 
 
@@ -50,7 +52,7 @@ def main():
         pc = ParallelContext(mesh=mesh, data_axes=(), model_axis="model",
                              ep_axes=("model",), token_axes=("model",),
                              moe_impl=impl, aurora_rounds=aurora_rounds)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             y, aux = moe_apply_ep(params, x, moe, "swiglu", pc)
         return np.asarray(y)
 

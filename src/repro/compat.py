@@ -1,0 +1,57 @@
+"""Shims over jax API drift, so one codebase spans the installed versions.
+
+- ``set_mesh(mesh)``: context manager. ``jax.set_mesh`` arrived with the
+  sharding-in-types work; on older jax a ``Mesh`` is itself a context
+  manager that installs the legacy global mesh environment.
+- ``shard_map(...)``: top-level ``jax.shard_map`` vs
+  ``jax.experimental.shard_map.shard_map``, and the ``check_vma`` →
+  ``check_rep`` keyword rename.
+- ``pallas_compiler_params(...)``: pallas TPU ``TPUCompilerParams`` →
+  ``CompilerParams`` rename.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:
+    from jax import shard_map as _shard_map        # jax >= 0.6
+except ImportError:                                # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def set_mesh(mesh):
+    """``with set_mesh(mesh):`` on any jax version."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh                                    # legacy: Mesh is a CM
+
+
+def axis_size(name) -> int:
+    """Static mesh-axis size from inside ``shard_map`` on any jax version."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    from jax._src.core import axis_frame              # 0.4.x: returns size
+    sz = axis_frame(name)
+    return sz if isinstance(sz, int) else sz.size
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    try:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=check_vma)
+    except TypeError:                              # pre-rename keyword
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)
+
+
+def pallas_compiler_params(**kwargs):
+    """Construct pallas TPU compiler params across the
+    ``TPUCompilerParams`` → ``CompilerParams`` rename."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = (getattr(pltpu, "CompilerParams", None)
+           or getattr(pltpu, "TPUCompilerParams", None))
+    if cls is None:                                # pragma: no cover
+        raise ImportError("this jax exposes neither pallas-TPU "
+                          "CompilerParams nor TPUCompilerParams")
+    return cls(**kwargs)

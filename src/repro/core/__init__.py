@@ -16,7 +16,7 @@ from .cluster import (Cluster, DeviceType, heterogeneous_cluster,
                       homogeneous_cluster, PAPER_HET_TIERS)
 from .traffic import (MoETrace, add_noise, b_max_heterogeneous,
                       b_max_homogeneous, paper_eval_traces, synthetic_trace,
-                      traffic_from_routing)
+                      trace_from_counts, traffic_from_routing)
 from .schedule import (CommSchedule, Slot, aurora_schedule, comm_time,
                        fluid_comm_time, rcs_order, sjf_order)
 from .matching import bottleneck_perfect_matching, hopcroft_karp
@@ -26,20 +26,21 @@ from .colocation import (aggregate_traffic, aurora_pairing, case1_pairing,
                          case2_pairing, lina_packing, random_pairing)
 from .simulator import (SimResult, colocated_inference_time,
                         exclusive_inference_time, lina_inference_time)
-from .planner import AuroraPlanner, Plan
+from .planner import AuroraPlanner, Plan, PlanDiff, diff_plans
 from .bruteforce import bruteforce_colocated, bruteforce_exclusive
 
 __all__ = [
     "Cluster", "DeviceType", "heterogeneous_cluster", "homogeneous_cluster",
     "PAPER_HET_TIERS", "MoETrace", "add_noise", "b_max_heterogeneous",
     "b_max_homogeneous", "paper_eval_traces", "synthetic_trace",
-    "traffic_from_routing", "CommSchedule", "Slot", "aurora_schedule",
+    "trace_from_counts", "traffic_from_routing", "CommSchedule", "Slot",
+    "aurora_schedule",
     "comm_time", "fluid_comm_time", "rcs_order", "sjf_order",
     "bottleneck_perfect_matching", "hopcroft_karp", "apply_assignment",
     "aurora_assignment", "expert_loads", "random_assignment",
     "aggregate_traffic", "aurora_pairing", "case1_pairing", "case2_pairing",
     "lina_packing", "random_pairing", "SimResult",
     "colocated_inference_time", "exclusive_inference_time",
-    "lina_inference_time", "AuroraPlanner", "Plan", "bruteforce_colocated",
-    "bruteforce_exclusive",
+    "lina_inference_time", "AuroraPlanner", "Plan", "PlanDiff", "diff_plans",
+    "bruteforce_colocated", "bruteforce_exclusive",
 ]

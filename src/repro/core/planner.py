@@ -45,6 +45,62 @@ class Plan:
         return len(self.schedules)
 
 
+@dataclasses.dataclass(frozen=True)
+class PlanDiff:
+    """What changed between two plans, and how much it is predicted to buy.
+
+    ``rel_improvement`` > 0 means the new plan is predicted faster. For an
+    apples-to-apples online decision, re-evaluate the OLD plan's placement on
+    the live trace first (``AuroraPlanner.evaluate_colocated``) — the stale
+    plan's stored prediction was computed against the historical trace it
+    was planned from, not against current traffic.
+    """
+
+    pair_changed: bool
+    assignment_changed: bool
+    old_time: float
+    new_time: float
+
+    @property
+    def placement_changed(self) -> bool:
+        return self.pair_changed or self.assignment_changed
+
+    @property
+    def rel_improvement(self) -> float:
+        if self.old_time <= 0.0:
+            return 0.0
+        return (self.old_time - self.new_time) / self.old_time
+
+
+def diff_plans(old: Plan, new: Plan,
+               old_time: float | None = None) -> PlanDiff:
+    """Compare two plans' placements and predicted inference times.
+
+    ``old_time`` overrides the stale plan's stored prediction — pass the old
+    placement re-simulated on the live trace when diffing for re-planning.
+    """
+    pair_changed = (old.pair is None) != (new.pair is None) or (
+        old.pair is not None and list(old.pair) != list(new.pair))
+    assignment_changed = not np.array_equal(
+        np.asarray(old.expert_to_device), np.asarray(new.expert_to_device))
+    return PlanDiff(
+        pair_changed=pair_changed,
+        assignment_changed=assignment_changed,
+        old_time=float(old.predicted.inference_time
+                       if old_time is None else old_time),
+        new_time=float(new.predicted.inference_time),
+    )
+
+
+def _mean_sim(sims: list[SimResult]) -> SimResult:
+    """Whole-model prediction: per-layer simulations averaged."""
+    return SimResult(
+        float(np.mean([s.inference_time for s in sims])),
+        float(np.mean([s.utilization for s in sims])),
+        {"per_layer": [s.inference_time for s in sims]},
+    )
+
+
 class AuroraPlanner:
     """Plans deployment + communication scheduling per the paper's four cases."""
 
@@ -71,15 +127,10 @@ class AuroraPlanner:
             aurora_schedule(apply_assignment(trace.layer(l), e2d), bw)
             for l in range(len(trace.layers))
         )
-        sims = [
+        pred = _mean_sim([
             exclusive_inference_time(trace, l, cl, e2d, policy="aurora")
             for l in range(len(trace.layers))
-        ]
-        pred = SimResult(
-            float(np.mean([s.inference_time for s in sims])),
-            float(np.mean([s.utilization for s in sims])),
-            {"per_layer": [s.inference_time for s in sims]},
-        )
+        ])
         return Plan(scenario, e2d, None, schedules, pred)
 
     # -- scenarios 3 & 4 ----------------------------------------------------
@@ -127,15 +178,29 @@ class AuroraPlanner:
                 bw)
             for l in range(len(trace_a.layers))
         )
-        sims = [
-            colocated_inference_time(trace_a, trace_b, l, cl, pair, s2d,
-                                     policy="aurora")
-            for l in range(len(trace_a.layers))
-        ]
-        pred = SimResult(
-            float(np.mean([s.inference_time for s in sims])),
-            float(np.mean([s.utilization for s in sims])),
-            {"per_layer": [s.inference_time for s in sims]},
-        )
+        pred = self.evaluate_colocated(trace_a, trace_b, pair,
+                                       None if cl.homogeneous else s2d)
         return Plan(scenario, np.arange(n) if cl.homogeneous else s2d,
                     pair, schedules, pred)
+
+    # -- plan evaluation (re-planning support) ------------------------------
+    def evaluate_colocated(self, trace_a: MoETrace, trace_b: MoETrace,
+                           pair: list[int],
+                           slot_to_device: np.ndarray | None = None
+                           ) -> SimResult:
+        """Predicted inference time of an EXISTING pairing on (possibly new)
+        traces — the simulator leg of ``plan_colocated`` without re-planning.
+
+        This is how online re-planning scores a stale plan against live
+        traffic: evaluate the current pairing and a fresh plan on the SAME
+        live trace, and switch only when the fresh plan wins by a margin.
+        """
+        cl = self.cluster
+        n = trace_a.n
+        s2d = (np.arange(n) if slot_to_device is None
+               else np.asarray(slot_to_device))
+        return _mean_sim([
+            colocated_inference_time(trace_a, trace_b, l, cl, list(pair),
+                                     s2d, policy="aurora")
+            for l in range(len(trace_a.layers))
+        ])

@@ -154,6 +154,46 @@ def synthetic_trace(
                     ffn_per_token=ffn_per_token, agg=agg, ffn_fixed=ffn_fixed)
 
 
+def trace_from_counts(
+    name: str,
+    counts: np.ndarray,
+    tokens_per_device: float = 1024.0,
+    gate: float = 0.08,
+    ffn_per_token: float = 0.004,
+    agg: float = 0.05,
+    ffn_fixed: float = 0.0,
+) -> MoETrace:
+    """Build a ``MoETrace`` from live per-layer expert routing counts.
+
+    ``counts``: (n_layers, E) routed-choice counts (or rates) per expert, as
+    harvested by ``repro.serving.monitor.TrafficMonitor`` from engine steps.
+    Each expert sits on its own device (identity placement, n = E — the same
+    convention the planner's traces use). Token sources are modeled as
+    uniform across devices — the §2.1 return all-to-all restores ~uniform
+    resident token counts every layer, so only the receive side carries the
+    popularity skew: ``d[src, dst] = pop[dst] * tokens_per_device``.
+
+    Layers whose counts are all zero (not yet observed) fall back to uniform
+    popularity. Absolute scale is set by ``tokens_per_device`` so live traces
+    are comparable with ``synthetic_trace`` outputs.
+    """
+    counts = np.asarray(counts, dtype=np.float64)
+    if counts.ndim != 2:
+        raise ValueError(f"counts must be (n_layers, E), got {counts.shape}")
+    if (counts < 0).any():
+        raise ValueError("routing counts must be non-negative")
+    n_layers, n = counts.shape
+    layers = []
+    for l in range(n_layers):
+        total = counts[l].sum()
+        pop = counts[l] / total if total > 0 else np.full(n, 1.0 / n)
+        d = np.tile(pop * tokens_per_device, (n, 1))
+        layers.append(strip_diagonal(d))
+    return MoETrace(name=name, layers=tuple(layers), gate=gate,
+                    ffn_per_token=ffn_per_token, agg=agg,
+                    ffn_fixed=ffn_fixed)
+
+
 def paper_eval_traces(seed: int = 0) -> tuple[MoETrace, MoETrace]:
     """The two-model setup of §8.1: LIMoE B/16 and B/32, 8 experts, 4 layers.
 

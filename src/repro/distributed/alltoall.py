@@ -28,8 +28,9 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import axis_size, shard_map
 
 
 # ---------------------------------------------------------------------------
@@ -104,7 +105,7 @@ def _exchange_rounds(buf, axis_names, rounds) -> jnp.ndarray:
     n = buf.shape[0]
     me = jnp.zeros((), jnp.int32)
     for ax in axis_names:
-        me = me * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        me = me * axis_size(ax) + jax.lax.axis_index(ax)
     axis_name = tuple(axis_names) if len(axis_names) > 1 else axis_names[0]
     # Row n is a scratch slot for rounds in which this device receives nothing.
     out = jnp.zeros((n + 1,) + buf.shape[1:], buf.dtype)
@@ -151,7 +152,7 @@ def _local_dispatch_combine(xt, valid, router_w, experts, moe, act,
     t_loc, d = xt.shape
     n_ep = 1
     for ax in ep_axes:
-        n_ep *= jax.lax.axis_size(ax)
+        n_ep *= axis_size(ax)
     e = moe.n_experts
     epd = e // n_ep                                  # experts per device
 

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import pallas_compiler_params
+
 _NEG_INF = -1e30
 
 
@@ -103,7 +105,7 @@ def decode_attn(q, k, v, valid_len, *, block_s: int = 512,
             pltpu.VMEM((h, 1), jnp.float32),     # running sum
             pltpu.VMEM((h, d), jnp.float32),     # context accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(valid_len, q, k, v)

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import pallas_compiler_params
+
 
 def _kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref, *, act: str,
             n_f: int):
@@ -80,7 +82,7 @@ def moe_gmm(x, w_gate, w_up, w_down, *, act: str = "swiglu",
         out_specs=pl.BlockSpec((1, bc, d), lambda e_, c_, f_: (e_, c_, 0)),
         out_shape=jax.ShapeDtypeStruct((e, c, d), x.dtype),
         scratch_shapes=[pltpu.VMEM((bc, d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w_gate, w_up, w_down)

@@ -34,6 +34,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             moe_impl: str = "ep", out_dir: str | None = None,
             calibrate: bool = True) -> dict:
     import jax
+    from repro.compat import set_mesh
     from repro.configs import SHAPES, get_config
     from repro.launch.mesh import make_production_mesh
     from repro.launch import specs as S
@@ -52,7 +53,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
 
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         step_fn, args = S.lowering_args(cfg, shape, mesh, moe_impl=moe_impl)
         # Donation: train aliases params+opt in place, serving aliases the
         # KV/SSM cache — no full-state copy per step (§Perf iteration 1).

@@ -36,6 +36,21 @@ def main() -> int:
                          "continuous batching")
     ap.add_argument("--num-requests", type=int, default=12,
                     help="stream length for --arrival-rate mode")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill: absorb at most N prompt tokens "
+                         "per engine step (continuous engines)")
+    ap.add_argument("--step-budget", type=int, default=None,
+                    help="per-step token budget: decode always runs, "
+                         "leftover feeds at most one prefill chunk")
+    ap.add_argument("--bucket-policy", default="pow2",
+                    help="prefill pad-length policy: pow2 | exact | step:K")
+    ap.add_argument("--replan-interval", type=int, default=None,
+                    help="colocated continuous mode: re-plan the expert "
+                         "pairing from live routing stats every N decode "
+                         "steps")
+    ap.add_argument("--replan-threshold", type=float, default=0.02,
+                    help="min relative predicted-time improvement before a "
+                         "re-plan is applied")
     args = ap.parse_args()
 
     import jax
@@ -56,7 +71,10 @@ def main() -> int:
         if args.arrival_rate is not None:
             eng = ContinuousEngine(model, params, batch_slots=args.batch,
                                    cache_cap=args.cache_cap,
-                                   prefill_len=args.prompt_len)
+                                   prefill_len=args.prompt_len,
+                                   prefill_chunk=args.prefill_chunk,
+                                   step_token_budget=args.step_budget,
+                                   bucket_policy=args.bucket_policy)
             reqs = poisson_requests(
                 rng, args.num_requests, args.arrival_rate, cfg.vocab,
                 args.prompt_len, max(1, args.max_new_tokens // 2),
@@ -91,6 +109,7 @@ def main() -> int:
 
     # Plan the expert pairing from synthetic routing statistics (§2.4:
     # historical traces drive the optimization).
+    plan = planner = None
     if cfg.moe is not None and cfg_b.moe is not None and \
             cfg.moe.n_experts == cfg_b.moe.n_experts:
         from repro.core import AuroraPlanner, homogeneous_cluster, \
@@ -99,15 +118,30 @@ def main() -> int:
         n = cfg.moe.n_experts
         tr_a = synthetic_trace("a", n_experts=n, n_layers=2, seed=0)
         tr_b = synthetic_trace("b", n_experts=n, n_layers=2, seed=1)
-        plan = AuroraPlanner(homogeneous_cluster(n)).plan_colocated(tr_a, tr_b)
+        planner = AuroraPlanner(homogeneous_cluster(n))
+        plan = planner.plan_colocated(tr_a, tr_b)
         params_b = apply_pairing(params_b, plan.pair, cfg_b)
         print(f"aurora colocation pairing: {plan.pair}")
 
     if args.arrival_rate is not None:
+        replan = None
+        if args.replan_interval is not None:
+            if plan is None:
+                raise SystemExit("--replan-interval needs two MoE models "
+                                 "with equal expert counts")
+            from repro.serving import OnlineReplanner
+            replan = OnlineReplanner(planner, interval=args.replan_interval,
+                                     threshold=args.replan_threshold)
         eng = ColocatedContinuousEngine(model, model_b, params, params_b,
                                         batch_slots=args.batch,
                                         cache_cap=args.cache_cap,
-                                        prefill_len=args.prompt_len)
+                                        prefill_len=args.prompt_len,
+                                        prefill_chunk=args.prefill_chunk,
+                                        step_token_budget=args.step_budget,
+                                        bucket_policy=args.bucket_policy,
+                                        pair=(list(plan.pair) if plan
+                                              else None),
+                                        replan=replan)
         lo = max(1, args.max_new_tokens // 2)
         reqs_a = poisson_requests(rng, args.num_requests, args.arrival_rate,
                                   cfg.vocab, args.prompt_len, lo,
@@ -120,6 +154,12 @@ def main() -> int:
             total = sum(len(r.out_tokens) for r in reqs)
             print(f"model {tag}: {total} tokens over {len(reqs)} requests")
         print(f"{eng.decode_steps} lockstep decode steps")
+        for e in eng.replan_events:
+            tag = "APPLIED" if e.applied else "kept"
+            print(f"replan @ step {e.step}: current {e.stale_time:.3f} vs "
+                  f"candidate {e.candidate_time:.3f} -> {tag}")
+        if eng.replan_events:
+            print(f"final pairing: {eng.pair}")
         return 0
 
     eng = ColocatedEngine(model, model_b, params, params_b)

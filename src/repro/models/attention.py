@@ -132,7 +132,9 @@ def attn_block(p, x, *, cfg, pos, window=None, cache=None, length=None,
     if mode == "train":
         out = attention_core(q, k, v, causal_offset=offset, window=window,
                              valid_len=None, flash_block=flash_block)
-    elif mode == "prefill":
+    elif mode == "prefill" and length is None:
+        # Fresh one-shot prefill: attend the s chunk keys only (O(s^2), not
+        # O(s*cap)) and write from offset 0 — the pre-chunking fast path.
         cap = cache["k"].shape[1]
         out = attention_core(q, k, v, causal_offset=offset, window=window,
                              valid_len=None, flash_block=flash_block)
@@ -149,6 +151,27 @@ def attn_block(p, x, *, cfg, pos, window=None, cache=None, length=None,
                     cache["k"], k, (0, 0, 0, 0)),
                 "v": jax.lax.dynamic_update_slice(
                     cache["v"], v, (0, 0, 0, 0))}
+    elif mode == "prefill":
+        # Chunked CONTINUATION: the chunk's keys land at the current fill
+        # level ``length`` and queries attend the cached prefix plus the
+        # causal part of the chunk. causal_offset = start makes query i see
+        # key j iff j <= start + i; valid_len covers the Sq == 1 single-
+        # token-chunk case, where attention_core ignores causal_offset.
+        # Wrapped rings can't continue (slot positions become ambiguous);
+        # Model.supports_chunked_prefill gates those shapes out upstream.
+        cap = cache["k"].shape[1]
+        if cap < s:
+            raise ValueError("chunked prefill continuation into a cache "
+                             f"smaller than the chunk ({cap} < {s})")
+        start = length.astype(jnp.int32)
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, start, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, start, 0, 0))
+        out = attention_core(q, ck, cv, causal_offset=start,
+                             window=window, valid_len=start + s,
+                             flash_block=flash_block)
+        new_cache = {"k": ck, "v": cv}
     else:  # decode: s == 1, absolute position == length
         cap = cache["k"].shape[1]
         if window is not None and cap <= window:

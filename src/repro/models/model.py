@@ -52,45 +52,117 @@ class Model:
         enc_out = None
         if cfg.is_encoder_decoder:
             enc_out = tf.encode(params, cfg, batch["frames"], self.pc)
-        logits, _, aux = tf.forward(
+        logits, _, aux, _ = tf.forward(
             params, cfg, tokens=batch.get("tokens"),
             embeds=batch.get("embeds"), mode="train", pc=self.pc,
             enc_out=enc_out, remat=remat)
         return logits, aux
 
     # -- serving -----------------------------------------------------------
-    def prefill(self, params, inputs, cache):
-        """inputs: {"tokens"} | {"embeds"} | {"frames", "tokens"}."""
+    def prefill(self, params, inputs, cache, collect_moe_stats: bool = False,
+                continuation: bool = False):
+        """inputs: {"tokens"} | {"embeds"} | {"frames", "tokens"}.
+
+        ``continuation=True`` (static) resumes a chunked prefill at the
+        cache's scalar fill level: positions and cache writes start at the
+        offset, so absorbing a prompt chunk-by-chunk over the same cache
+        equals one-shot prefill (``supports_chunked_prefill`` gates eligible
+        arch/shape combos). Returns (logits, cache) — plus
+        (n_moe_layers, B, S, E) per-position routing counts when
+        ``collect_moe_stats`` (mask left-pad positions before aggregating).
+        """
         cfg = self.cfg
         enc_out = None
         if cfg.is_encoder_decoder:
             enc_out = tf.encode(params, cfg, inputs["frames"], self.pc)
-        logits, cache, _ = tf.forward(
+        logits, cache, _, stats = tf.forward(
             params, cfg, tokens=inputs.get("tokens"),
             embeds=inputs.get("embeds"), mode="prefill", cache=cache,
-            pc=self.pc, enc_out=enc_out)
+            pc=self.pc, enc_out=enc_out, collect_moe_stats=collect_moe_stats,
+            continuation=continuation)
+        if collect_moe_stats:
+            return logits, cache, stats
         return logits, cache
 
     def decode_step(self, params, token, cache):
         """token: (B, 1) int32. Returns (logits (B,1,V), cache)."""
-        logits, cache, _ = tf.forward(
+        logits, cache, _, _ = tf.forward(
             params, self.cfg, tokens=token, mode="decode", cache=cache,
             pc=self.pc)
         return logits, cache
 
+    def decode_step_stats(self, params, token, cache):
+        """``decode_step`` that also returns (n_moe_layers, B, E) float32
+        per-slot routed-choice counts (the live traffic signal for
+        ``repro.serving.monitor.TrafficMonitor``)."""
+        logits, cache, _, stats = tf.forward(
+            params, self.cfg, tokens=token, mode="decode", cache=cache,
+            pc=self.pc, collect_moe_stats=True)
+        return logits, cache, stats[:, :, 0, :]      # S == 1 at decode
+
     def prefill_slot(self, params, inputs, cache, slot, *, cap: int,
-                     src_len: int = 0):
+                     src_len: int = 0, collect_moe_stats: bool = False):
         """Prefill ONE request into row ``slot`` of a multi-slot cache.
 
         The request is run through ``prefill`` against a fresh zero batch-1
         cache (so no state from a previous occupant of the slot can leak),
         then written into the shared cache at the slot offset. ``cache`` must
         be per-slot (``init_cache(..., per_slot_len=True)``); ``slot`` may be
-        traced, so one jit covers every slot. Returns (logits, cache).
+        traced, so one jit covers every slot. Returns (logits, cache)
+        (+ per-position (n_moe_layers, 1, S, E) routing counts when
+        ``collect_moe_stats`` — mask left-pad positions before aggregating).
         """
         sub = tf.init_cache(self.cfg, 1, cap, src_len=src_len)
+        if collect_moe_stats:
+            logits, sub, stats = self.prefill(params, inputs, sub,
+                                              collect_moe_stats=True)
+            return logits, tf.merge_cache_slot(cache, sub, slot), stats
         logits, sub = self.prefill(params, inputs, sub)
         return logits, tf.merge_cache_slot(cache, sub, slot)
+
+    def merge_slot(self, cache, sub, slot):
+        """Write a completed batch-1 prefill cache into row ``slot`` of the
+        shared per-slot cache (the final step of a chunked prefill)."""
+        return tf.merge_cache_slot(cache, sub, slot)
+
+    def prefill_merge_slot(self, params, inputs, sub, cache, slot,
+                           collect_moe_stats: bool = False):
+        """Final chunk of a chunked prefill FUSED with the slot merge — one
+        dispatch on the admission critical path, mirroring how
+        ``prefill_slot`` fuses prefill+merge for one-shot admission.
+        Returns (logits, merged_cache) (+ per-position routing counts)."""
+        if collect_moe_stats:
+            logits, sub, stats = self.prefill(
+                params, inputs, sub, collect_moe_stats=True,
+                continuation=True)
+            return logits, tf.merge_cache_slot(cache, sub, slot), stats
+        logits, sub = self.prefill(params, inputs, sub, continuation=True)
+        return logits, tf.merge_cache_slot(cache, sub, slot)
+
+    @property
+    def n_moe_layers(self) -> int:
+        """MoE layer count, in the canonical routing-stats order."""
+        return tf.moe_layer_count(self.cfg)
+
+    def supports_chunked_prefill(self, total_len: int, cache_cap: int) -> bool:
+        """Whether a ``total_len``-token prompt may be absorbed in chunks.
+
+        Chunked continuation needs cache writes at a traced offset, which
+        rules out: MLA (prefill writes the latent at offset 0 only),
+        encoder-decoder (the encoder would re-run per chunk), and
+        sliding-window ring buffers that wrap within the prompt (slot
+        positions become ambiguous mid-prefill). SSM state and global GQA
+        caches continue exactly.
+        """
+        cfg = self.cfg
+        if cfg.mla is not None or cfg.is_encoder_decoder:
+            return False
+        kinds = {k for seg in tf.segments_of(cfg) for k in seg.kinds}
+        if "L" in kinds:
+            ring = min(cache_cap, cfg.sliding_window)
+            if total_len > ring:
+                return False
+        return True
 
 
 def cross_entropy(logits, labels, vocab: int):

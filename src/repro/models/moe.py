@@ -110,8 +110,13 @@ def _experts_ffn(experts, xb, act: str):
 # ---------------------------------------------------------------------------
 
 def moe_apply_dense(p, x, moe, act: str,
-                    pc: ParallelContext = NO_PARALLEL):
-    """Reference MoE layer. x: (..., d) → (y, aux)."""
+                    pc: ParallelContext = NO_PARALLEL,
+                    return_counts: bool = False):
+    """Reference MoE layer. x: (..., d) → (y, aux).
+
+    ``return_counts=True`` appends a (..., E) float32 per-token histogram of
+    routed expert choices (capacity drops included — it measures OFFERED
+    dispatch traffic, the quantity the deployment planner consumes)."""
     shape = x.shape
     d = shape[-1]
     xt = x.reshape(-1, d)                                # (T, d)
@@ -137,6 +142,11 @@ def moe_apply_dense(p, x, moe, act: str,
         picked * gates.reshape(-1)[:, None])
     if "shared" in p:
         y = y + ffn_apply(p["shared"], xt, act, pc)
+    if return_counts:
+        counts = jax.nn.one_hot(idx, moe.n_experts,
+                                dtype=jnp.float32).sum(axis=1)   # (T, E)
+        return (y.reshape(shape), aux,
+                counts.reshape(shape[:-1] + (moe.n_experts,)))
     return y.reshape(shape), aux
 
 
@@ -166,7 +176,12 @@ def moe_apply_ep(p, x, moe, act: str, pc: ParallelContext):
     return y.reshape(shape), aux
 
 
-def moe_apply(p, x, moe, act: str, pc: ParallelContext = NO_PARALLEL):
+def moe_apply(p, x, moe, act: str, pc: ParallelContext = NO_PARALLEL,
+              return_counts: bool = False):
     if pc.moe_impl in ("ep", "aurora") and pc.ep_axes:
+        if return_counts:
+            raise NotImplementedError(
+                "routing-count collection requires the dense dispatch path "
+                "(the serving monitor runs single-host)")
         return moe_apply_ep(p, x, moe, act, pc)
-    return moe_apply_dense(p, x, moe, act, pc)
+    return moe_apply_dense(p, x, moe, act, pc, return_counts=return_counts)

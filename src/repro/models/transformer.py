@@ -71,6 +71,13 @@ def padded_vocab(cfg) -> int:
     return -(-cfg.vocab // 256) * 256
 
 
+def moe_layer_count(cfg) -> int:
+    """Number of MoE layers, in the canonical stats order (segment-major,
+    kind-major, block-major — the order ``forward(collect_moe_stats=True)``
+    stacks per-layer routing counts in)."""
+    return sum(seg.count * seg.kinds.count("E") for seg in segments_of(cfg))
+
+
 # ---------------------------------------------------------------------------
 # Parameter init
 # ---------------------------------------------------------------------------
@@ -203,8 +210,13 @@ def merge_cache_slot(cache, sub, slot):
 # ---------------------------------------------------------------------------
 
 def _apply_layer(kind, p, x, entry, *, cfg, pc, mode, pos, pos3, length,
-                 shared, enc_out=None):
-    """One layer. Returns (x, new_cache_entry, aux).
+                 shared, enc_out=None, collect_stats=False):
+    """One layer. Returns (x, new_cache_entry, aux, moe_counts).
+
+    ``moe_counts`` is None unless ``collect_stats`` and the layer is MoE, in
+    which case it is a (B, S, E) float32 per-position count of routed
+    (token, k) choices — the live traffic signal harvested by the serving
+    monitor (positions kept separate so callers can mask left-padding).
 
     Note: no blanket activation constraint here — an explicit per-layer
     P(data, …) pin was tried (§Perf it-3) and REFUTED: neutral for dense
@@ -218,9 +230,12 @@ def _apply_layer(kind, p, x, entry, *, cfg, pc, mode, pos, pos3, length,
         if mode == "decode":
             y, nc = ssm_mod.mamba_decode(p["mamba"], h, cfg, entry)
         else:
+            # Prefill reads conv/SSD state from the cache entry and writes
+            # the final state back, so a chunked continuation (non-zero
+            # initial state) is the same code path as a fresh prefill.
             y, nc = ssm_mod.mamba_block(
                 p["mamba"], h, cfg, entry if mode == "prefill" else None)
-        return x + y, nc, aux
+        return x + y, nc, aux, None
 
     pp = shared if kind == "A" else p
     h = rmsnorm(pp["ln1"], x, cfg.norm_eps)
@@ -250,16 +265,26 @@ def _apply_layer(kind, p, x, entry, *, cfg, pc, mode, pos, pos3, length,
             nc = dict(nc, xk=kv["k"], xv=kv["v"])
 
     h2 = rmsnorm(pp["ln2"], x, cfg.norm_eps)
+    counts = None
     if kind == "E":
-        y2, aux = moe_apply(p["moe"], h2, cfg.moe, cfg.act, pc)
+        if collect_stats:
+            y2, aux, counts = moe_apply(p["moe"], h2, cfg.moe, cfg.act, pc,
+                                        return_counts=True)   # (B, S, E)
+        else:
+            y2, aux = moe_apply(p["moe"], h2, cfg.moe, cfg.act, pc)
     else:
         y2 = ffn_apply(pp["ffn"], h2, cfg.act, pc)
-    return x + y2, nc, aux
+    return x + y2, nc, aux, counts
 
 
 def _run_segment(seg, seg_params, seg_cache, x, *, cfg, pc, mode, pos, pos3,
-                 length, shared, enc_out=None, remat=False):
-    """Scan one segment over its ``count`` blocks."""
+                 length, shared, enc_out=None, remat=False,
+                 collect_stats=False):
+    """Scan one segment over its ``count`` blocks.
+
+    Returns (x, new_cache, stats, aux). ``stats`` is a tuple with one
+    (count, B, S, E) array per MoE kind position when ``collect_stats``,
+    else an empty tuple."""
     with_cache = mode != "train"
 
     def block(carry, xs):
@@ -267,14 +292,18 @@ def _run_segment(seg, seg_params, seg_cache, x, *, cfg, pc, mode, pos, pos3,
         params = xs[0] if with_cache else xs
         cache = xs[1] if with_cache else (None,) * len(seg.kinds)
         new_entries = []
+        stats = []
         for i, kind in enumerate(seg.kinds):
-            x, nc, a = _apply_layer(
+            x, nc, a, cnt = _apply_layer(
                 kind, params[i], x, cache[i], cfg=cfg, pc=pc, mode=mode,
                 pos=pos, pos3=pos3, length=length, shared=shared,
-                enc_out=enc_out)
+                enc_out=enc_out, collect_stats=collect_stats)
             aux = aux + a
             new_entries.append(nc)
-        return (x, aux), (tuple(new_entries) if with_cache else None)
+            if cnt is not None:
+                stats.append(cnt)
+        return (x, aux), (tuple(new_entries) if with_cache else None,
+                          tuple(stats))
 
     if remat:
         block = jax.checkpoint(block)
@@ -287,12 +316,11 @@ def _run_segment(seg, seg_params, seg_cache, x, *, cfg, pc, mode, pos, pos3,
             carry, y = block(carry, xs_b)
             ys.append(y)
         (x, aux) = carry
-        new_cache = (jax.tree.map(lambda *ls: jnp.stack(ls), *ys)
-                     if with_cache else None)
-        return x, new_cache, aux
-    (x, aux), new_cache = jax.lax.scan(block, (x, jnp.zeros((), jnp.float32)),
-                                       xs, length=seg.count)
-    return x, new_cache, aux
+        new_cache, stats = jax.tree.map(lambda *ls: jnp.stack(ls), *ys)
+        return x, new_cache if with_cache else None, stats, aux
+    (x, aux), (new_cache, stats) = jax.lax.scan(
+        block, (x, jnp.zeros((), jnp.float32)), xs, length=seg.count)
+    return x, new_cache, stats, aux
 
 
 # ---------------------------------------------------------------------------
@@ -304,7 +332,7 @@ def encode(params, cfg, frames, pc: ParallelContext = NO_PARALLEL):
     x = frames @ params["frontend_proj"]
     pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
     enc_seg = Segment(("B",), cfg.n_encoder_layers)
-    x, _, _ = _run_segment(
+    x, _, _, _ = _run_segment(
         enc_seg, params["encoder"]["segments"][0], None, x, cfg=cfg, pc=pc,
         mode="train", pos=pos, pos3=None, length=None, shared=None)
     return rmsnorm(params["encoder"]["final_norm"], x, cfg.norm_eps)
@@ -312,13 +340,26 @@ def encode(params, cfg, frames, pc: ParallelContext = NO_PARALLEL):
 
 def forward(params, cfg, *, tokens=None, embeds=None, mode="train",
             cache=None, pc: ParallelContext = NO_PARALLEL, pos3=None,
-            enc_out=None, remat=False):
+            enc_out=None, remat=False, collect_moe_stats=False,
+            continuation=False):
     """Run the decoder stack.
 
-    mode "train"/"prefill": tokens (B, S) or embeds (B, S, F).
+    mode "train"/"prefill": tokens (B, S) or embeds (B, S, F). With
+    ``continuation=True`` (a STATIC flag) a prefill resumes at the cache's
+    fill level ``cache["len"]``: positions and cache writes start at the
+    offset and queries attend the cached prefix, so a prompt absorbed in
+    chunks is mathematically identical to one-shot prefill (scalar ``len``
+    only; ring-buffer sliding-window caches support one-shot prefill only —
+    see ``Model.supports_chunked_prefill``). Fresh prefills keep the cheap
+    chunk-local attention (O(S^2), not O(S*cap)).
     mode "decode": tokens (B, 1), cache required (reads cache["len"]).
     enc_out: encoder output for encoder-decoder archs (train / prefill).
-    Returns (logits (B, S, padded_vocab), new_cache | None, aux_loss).
+    Returns (logits (B, S, padded_vocab), new_cache | None, aux_loss,
+    moe_stats) where moe_stats is a (n_moe_layers, B, S, E) float32 array of
+    per-position routed-choice counts (segment-major, kind-major,
+    block-major layer order — ``moe_layer_count``) when
+    ``collect_moe_stats``, else None. Callers mask pad positions before
+    aggregating traffic from prefill stats.
     """
     if cfg.is_encoder_decoder or cfg.input_mode == "text" or embeds is None:
         x = jnp.take(params["embed"], tokens, axis=0)
@@ -332,6 +373,16 @@ def forward(params, cfg, *, tokens=None, embeds=None, mode="train",
             pos = jnp.broadcast_to(length[:, None], (b, s))
         else:
             pos = jnp.broadcast_to(length[None, None], (b, s))
+    elif mode == "prefill" and continuation:
+        if cache is None:
+            raise ValueError("prefill continuation requires a cache")
+        length = cache["len"]
+        if length.ndim == 1:
+            raise NotImplementedError(
+                "prefill writes a scalar-length cache (per-slot caches are "
+                "filled through Model.prefill_slot / merge_cache_slot)")
+        pos = length[None, None] + jnp.broadcast_to(jnp.arange(s)[None],
+                                                    (b, s))
     else:
         length = None
         pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
@@ -339,14 +390,16 @@ def forward(params, cfg, *, tokens=None, embeds=None, mode="train",
     shared = params.get("shared")
     aux_total = jnp.zeros((), jnp.float32)
     new_segs = []
+    stats_parts = []
     for si, seg in enumerate(segments_of(cfg)):
         seg_cache = cache["segments"][si] if cache is not None else None
-        x, nc, aux = _run_segment(
+        x, nc, stats, aux = _run_segment(
             seg, params["segments"][si], seg_cache, x, cfg=cfg, pc=pc,
             mode=mode, pos=pos, pos3=pos3, length=length, shared=shared,
-            enc_out=enc_out, remat=remat)
+            enc_out=enc_out, remat=remat, collect_stats=collect_moe_stats)
         aux_total = aux_total + aux
         new_segs.append(nc)
+        stats_parts.extend(stats)
 
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
@@ -355,4 +408,8 @@ def forward(params, cfg, *, tokens=None, embeds=None, mode="train",
     if mode != "train" and cache is not None:
         inc = jnp.asarray(s if mode == "prefill" else 1, jnp.int32)
         new_cache = {"len": cache["len"] + inc, "segments": tuple(new_segs)}
-    return logits, new_cache, aux_total
+    moe_stats = None
+    if collect_moe_stats:
+        moe_stats = (jnp.concatenate(stats_parts, axis=0) if stats_parts
+                     else jnp.zeros((0, b, s, 0), jnp.float32))
+    return logits, new_cache, aux_total, moe_stats

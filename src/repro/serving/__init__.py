@@ -1,12 +1,15 @@
 """Serving: static + continuous single-model engines, Aurora dual-model
-colocation (static + continuous)."""
+colocation (static + continuous), live traffic monitoring + online
+re-planning."""
 
 from .engine import (ContinuousEngine, Request, ServingEngine,
-                     poisson_requests, serve_stream)
+                     make_bucketer, poisson_requests, serve_stream)
 from .colocated import (ColocatedContinuousEngine, ColocatedEngine,
                         apply_pairing, inverse_pair)
+from .monitor import OnlineReplanner, ReplanEvent, TrafficMonitor
 
 __all__ = ["Request", "ServingEngine", "ContinuousEngine",
            "ColocatedEngine", "ColocatedContinuousEngine",
-           "apply_pairing", "inverse_pair", "poisson_requests",
-           "serve_stream"]
+           "apply_pairing", "inverse_pair", "make_bucketer",
+           "poisson_requests", "serve_stream", "TrafficMonitor",
+           "OnlineReplanner", "ReplanEvent"]

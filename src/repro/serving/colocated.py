@@ -125,41 +125,124 @@ class ColocatedContinuousEngine:
     and model B's compute live in the same XLA program, so the latency-
     hiding scheduler interleaves them exactly as in ``ColocatedEngine``,
     while each pool's slots fill and drain independently with traffic.
+
+    With ``replan=OnlineReplanner(...)`` the engine closes the paper's
+    §2.4 loop online: both pools harvest live per-layer routing counts into
+    ``TrafficMonitor``s, and every ``replan.interval`` lockstep decodes the
+    planner re-pairs from the live traces. An adopted plan is applied IN
+    PLACE by un-permuting model B's experts with ``inverse_pair`` and
+    re-permuting with the new pairing — placement-only, so a mid-stream
+    re-plan never changes any emitted token.
     """
 
     def __init__(self, model_a: Model, model_b: Model, params_a, params_b,
                  batch_slots: int, cache_cap: int,
-                 prefill_len: int | None = None, jit: bool = True):
+                 prefill_len: int | None = None, jit: bool = True,
+                 prefill_chunk: int | None = None,
+                 step_token_budget: int | None = None,
+                 bucket_policy="pow2", pair: list[int] | None = None,
+                 replan=None, monitor_halflife: float = 128.0):
         from .engine import ContinuousEngine
+        from .monitor import TrafficMonitor
 
+        self.model_a, self.model_b = model_a, model_b
+        self.replan = replan
+        self.monitor_a = self.monitor_b = None
+        if replan is not None:
+            ca, cb = model_a.cfg, model_b.cfg
+            if (ca.moe is None or cb.moe is None
+                    or ca.moe.n_experts != cb.moe.n_experts):
+                raise ValueError(
+                    "online re-planning needs two MoE models with equal "
+                    "expert counts (the pairing is expert<->expert)")
+            self.monitor_a = TrafficMonitor(
+                ca.moe.n_experts, model_a.n_moe_layers, name=ca.arch_id,
+                halflife=monitor_halflife)
+            self.monitor_b = TrafficMonitor(
+                cb.moe.n_experts, model_b.n_moe_layers, name=cb.arch_id,
+                halflife=monitor_halflife)
+        # The pairing currently REALIZED in pool_b's params (identity unless
+        # the caller already applied a plan) — what a re-plan must undo.
+        n_e = model_b.cfg.moe.n_experts if model_b.cfg.moe else 0
+        self.pair = list(pair) if pair is not None else list(range(n_e))
+        self.plan = None                        # last adopted online plan
+        if self.monitor_b is not None:
+            # Pool B's routing stats arrive in SLOT space (apply_pairing
+            # permuted the router columns); the monitor translates them
+            # back to original expert ids so the planner's traces and the
+            # candidate pairings stay in one frame.
+            self.monitor_b.slot_to_expert = list(self.pair)
+
+        kw = dict(prefill_len=prefill_len, jit=jit,
+                  prefill_chunk=prefill_chunk,
+                  step_token_budget=step_token_budget,
+                  bucket_policy=bucket_policy)
         self.pool_a = ContinuousEngine(model_a, params_a, batch_slots,
-                                       cache_cap, prefill_len=prefill_len,
-                                       jit=jit)
+                                       cache_cap, monitor=self.monitor_a,
+                                       **kw)
         self.pool_b = ContinuousEngine(model_b, params_b, batch_slots,
-                                       cache_cap, prefill_len=prefill_len,
-                                       jit=jit)
+                                       cache_cap, monitor=self.monitor_b,
+                                       **kw)
 
-        def step(params_a, params_b, tok_a, tok_b, cache_a, cache_b):
-            la, cache_a = model_a.decode_step(params_a, tok_a, cache_a)
-            lb, cache_b = model_b.decode_step(params_b, tok_b, cache_b)
-            return la, lb, cache_a, cache_b
+        if replan is not None:
+            def step(params_a, params_b, tok_a, tok_b, cache_a, cache_b):
+                la, cache_a, sa = model_a.decode_step_stats(
+                    params_a, tok_a, cache_a)
+                lb, cache_b, sb = model_b.decode_step_stats(
+                    params_b, tok_b, cache_b)
+                return la, lb, cache_a, cache_b, sa, sb
+        else:
+            def step(params_a, params_b, tok_a, tok_b, cache_a, cache_b):
+                la, cache_a = model_a.decode_step(params_a, tok_a, cache_a)
+                lb, cache_b = model_b.decode_step(params_b, tok_b, cache_b)
+                return la, lb, cache_a, cache_b
 
         self._step = (jax.jit(step, donate_argnums=(4, 5)) if jit else step)
         self.decode_steps = 0
 
+    @property
+    def replan_events(self) -> list:
+        return [] if self.replan is None else self.replan.events
+
+    def _maybe_replan(self) -> None:
+        new = self.replan.maybe_replan(self.decode_steps, self.monitor_a,
+                                       self.monitor_b, self.pair)
+        if new is None:
+            return
+        # Placement-only re-pair: undo the realized permutation, apply the
+        # new one. Params shapes are unchanged, so the jitted step does not
+        # recompile and in-flight token streams are unaffected.
+        restored = apply_pairing(self.pool_b.params, inverse_pair(self.pair),
+                                 self.model_b.cfg)
+        self.pool_b.params = apply_pairing(restored, list(new.pair),
+                                           self.model_b.cfg)
+        self.pair = list(new.pair)
+        self.monitor_b.slot_to_expert = list(new.pair)
+        self.plan = new
+
     def step(self) -> bool:
         """Admit into both pools, then one fused lockstep decode."""
         a, b = self.pool_a, self.pool_b
-        a._admit()
-        b._admit()
+        worked_a = a._admit_tick()
+        worked_b = b._admit_tick()
         if a.num_active == 0 and b.num_active == 0:
-            return False
-        la, lb, a.cache, b.cache = self._step(a.params, b.params,
-                                              a.tokens, b.tokens,
-                                              a.cache, b.cache)
+            return worked_a or worked_b
+        if self.replan is not None:
+            mask_a = np.array([r is not None for r in a.slots], bool)
+            mask_b = np.array([r is not None for r in b.slots], bool)
+            la, lb, a.cache, b.cache, sa, sb = self._step(
+                a.params, b.params, a.tokens, b.tokens, a.cache, b.cache)
+            self.monitor_a.observe(sa, mask_a)
+            self.monitor_b.observe(sb, mask_b)
+        else:
+            la, lb, a.cache, b.cache = self._step(a.params, b.params,
+                                                  a.tokens, b.tokens,
+                                                  a.cache, b.cache)
         self.decode_steps += 1
         a._postdecode(la)
         b._postdecode(lb)
+        if self.replan is not None:
+            self._maybe_replan()
         return True
 
     def serve(self, reqs_a, reqs_b):

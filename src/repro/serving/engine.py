@@ -14,6 +14,19 @@ step and evicts finished requests, so a short request's slot is immediately
 reusable while long requests keep decoding. Same math as the static engine
 (per-row attention masking via the per-slot length vector), different
 schedule.
+
+**Chunked prefill** (``prefill_chunk=C``): instead of absorbing a whole
+prompt in one admission step — stalling every active slot's decode behind a
+long prefill — the prompt is consumed ``C`` tokens per engine step against a
+private batch-1 cache and merged into its slot only when complete. Each step
+runs under a token budget: decode always runs; leftover budget feeds at most
+ONE prefill chunk (``step_token_budget``). Token streams are identical to
+one-shot admission (prefill continuation is exact — see
+``models.transformer.forward``); only the schedule changes.
+
+**Live routing stats** (``monitor=TrafficMonitor(...)``): decode steps and
+prefills report per-layer expert routing counts, feeding the traffic-driven
+re-planner (``repro.serving.monitor``).
 """
 
 from __future__ import annotations
@@ -21,13 +34,42 @@ from __future__ import annotations
 import collections
 import dataclasses
 from functools import partial
-from typing import Sequence
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import Model
+
+
+def make_bucketer(policy) -> Callable[[int], int]:
+    """Resolve a prefill bucketing policy to ``fn(prompt_len) -> pad_len``.
+
+    Policies (ROADMAP follow-up: beyond hardcoded powers of two):
+      "pow2"     next power of two — few compiled prefill programs (default)
+      "exact"    no padding — one compilation per distinct prompt length
+      "step:K"   round up to a multiple of K — linear compile count, less pad
+      callable   custom ``fn(n) -> >= n``
+    """
+    if callable(policy):
+        return policy
+    if policy == "pow2":
+        def pow2(n: int) -> int:
+            p = 1
+            while p < n:
+                p *= 2
+            return p
+        return pow2
+    if policy == "exact":
+        return lambda n: n
+    if isinstance(policy, str) and policy.startswith("step:"):
+        k = int(policy.split(":", 1)[1])
+        if k <= 0:
+            raise ValueError(f"bucket step must be positive, got {k}")
+        return lambda n: -(-n // k) * k
+    raise ValueError(f"unknown bucket policy {policy!r} "
+                     "(expected 'pow2', 'exact', 'step:K', or a callable)")
 
 
 @dataclasses.dataclass
@@ -66,7 +108,8 @@ def serve_stream(step_fn, pools) -> None:
     streams = [[eng, sorted(reqs, key=lambda r: r.arrival), 0]
                for eng, reqs in pools]
     t = 0.0
-    while any(i < len(p) or e.queue or e.num_active for e, p, i in streams):
+    while any(i < len(p) or e.queue or e.num_active or e.num_pending
+              for e, p, i in streams):
         for s in streams:
             eng, pend, i = s
             while i < len(pend) and pend[i].arrival <= t:
@@ -146,22 +189,48 @@ class ContinuousEngine:
 
     def __init__(self, model: Model, params, batch_slots: int,
                  cache_cap: int, src_len: int = 0,
-                 prefill_len: int | None = None, jit: bool = True):
+                 prefill_len: int | None = None, jit: bool = True,
+                 prefill_chunk: int | None = None,
+                 step_token_budget: int | None = None,
+                 bucket_policy="pow2", monitor=None):
         self.model = model
         self.params = params
         self.batch_slots = batch_slots
         self.cache_cap = cache_cap
         self.src_len = src_len
         self.prefill_len = prefill_len
+        if prefill_chunk is not None and prefill_chunk <= 0:
+            raise ValueError("prefill_chunk must be a positive token count")
+        if step_token_budget is not None and prefill_chunk is None:
+            raise ValueError(
+                "step_token_budget only gates CHUNKED prefill scheduling — "
+                "one-shot admission absorbs whole prompts regardless; set "
+                "prefill_chunk to give the budget something to schedule")
+        self.prefill_chunk = prefill_chunk
+        self.step_token_budget = step_token_budget
+        self._bucketer = make_bucketer(bucket_policy)
+        self.monitor = monitor
         self.cache = model.init_cache(batch_slots, cache_cap,
                                       src_len=src_len, per_slot_len=True)
         self.tokens = jnp.zeros((batch_slots, 1), jnp.int32)
         self.queue: collections.deque[Request] = collections.deque()
         self.slots: list[Request | None] = [None] * batch_slots
-        fn_p = partial(model.prefill_slot, cap=cache_cap, src_len=src_len)
+        self._pending = None        # in-flight chunked prefill (at most one)
+        stats = monitor is not None
+        fn_p = partial(model.prefill_slot, cap=cache_cap, src_len=src_len,
+                       collect_moe_stats=stats)
         self._prefill = (jax.jit(fn_p, donate_argnums=(2,)) if jit else fn_p)
-        self._decode = (jax.jit(model.decode_step, donate_argnums=(2,))
-                        if jit else model.decode_step)
+        fn_c = partial(model.prefill, collect_moe_stats=stats,
+                       continuation=True)
+        self._chunk = (jax.jit(fn_c, donate_argnums=(2,)) if jit else fn_c)
+        # Final chunk + slot merge fused into one program. The batch-1 sub
+        # cache is donated but cannot alias the batch-N outputs, so only
+        # the shared cache (arg 3) aliases in place.
+        fn_m = partial(model.prefill_merge_slot, collect_moe_stats=stats)
+        self._chunk_merge = (jax.jit(fn_m, donate_argnums=(3,))
+                             if jit else fn_m)
+        fn_d = model.decode_step_stats if stats else model.decode_step
+        self._decode = jax.jit(fn_d, donate_argnums=(2,)) if jit else fn_d
         self.decode_steps = 0
 
     # -- scheduler ---------------------------------------------------------
@@ -169,15 +238,28 @@ class ContinuousEngine:
     def num_active(self) -> int:
         return sum(r is not None for r in self.slots)
 
+    @property
+    def num_pending(self) -> int:
+        """In-flight chunked prefills (0 or 1)."""
+        return int(self._pending is not None)
+
     def submit(self, req: Request) -> None:
         # Final per-slot length is pad(prompt) + max_new_tokens - 1 (the
         # last emitted token is never written back); beyond cache_cap the
         # decode path would silently overwrite slot cap-1 every step.
-        need = self._bucket(len(req.prompt)) + max(req.max_new_tokens - 1, 0)
+        p = self._bucket(len(req.prompt))
+        need = p + max(req.max_new_tokens - 1, 0)
         if need > self.cache_cap:
             raise ValueError(
                 f"prompt + generation needs {need} cache slots, "
                 f"capacity is {self.cache_cap}")
+        if (self.prefill_chunk is not None
+                and not self.model.supports_chunked_prefill(
+                    p, self.cache_cap)):
+            raise ValueError(
+                f"{self.model.cfg.arch_id}: a {p}-token prefill cannot be "
+                "chunked (MLA / encoder-decoder / wrapped sliding-window "
+                "ring) — use prefill_chunk=None for this engine")
         self.queue.append(req)
 
     def _bucket(self, n: int) -> int:
@@ -186,28 +268,113 @@ class ContinuousEngine:
                 raise ValueError(f"prompt len {n} > prefill_len "
                                  f"{self.prefill_len}")
             return self.prefill_len
-        p = 1
-        while p < n:
-            p *= 2
+        p = self._bucketer(n)
+        if p < n:
+            raise ValueError(f"bucket policy shrank {n} to {p}")
         return min(p, self.cache_cap)
 
+    def _free_slot(self) -> int | None:
+        """First free slot not reserved by the in-flight prefill."""
+        reserved = self._pending[1] if self._pending is not None else -1
+        for i, r in enumerate(self.slots):
+            if r is None and i != reserved:
+                return i
+        return None
+
+    def _finish_admission(self, r: Request, slot: int, logits) -> None:
+        """Shared tail of one-shot and chunked admission: emit the first
+        token and occupy the slot (unless the request is already done)."""
+        tok0 = int(jnp.argmax(logits[0, -1, : self.model.cfg.vocab]))
+        if r.max_new_tokens > 0:
+            r.out_tokens.append(tok0)
+        if len(r.out_tokens) < r.max_new_tokens:
+            self.slots[slot] = r
+            self.tokens = self.tokens.at[slot, 0].set(tok0)
+
     def _admit(self) -> None:
-        """Drain the queue into free slots (per-slot prefill each)."""
+        """Drain the queue into free slots (one-shot per-slot prefill each)."""
         while self.queue and None in self.slots:
             slot = self.slots.index(None)
             r = self.queue.popleft()
             p = self._bucket(len(r.prompt))
             toks = np.zeros((1, p), np.int32)
             toks[0, p - len(r.prompt):] = r.prompt      # left-pad with 0
-            logits, self.cache = self._prefill(
+            out = self._prefill(
                 self.params, {"tokens": jnp.asarray(toks)}, self.cache,
                 jnp.int32(slot))
-            tok0 = int(jnp.argmax(logits[0, -1, : self.model.cfg.vocab]))
-            if r.max_new_tokens > 0:
-                r.out_tokens.append(tok0)
-            if len(r.out_tokens) < r.max_new_tokens:
-                self.slots[slot] = r
-                self.tokens = self.tokens.at[slot, 0].set(tok0)
+            if self.monitor is not None:
+                logits, self.cache, stats = out
+                self._observe_prefill(stats, pad=p - len(r.prompt))
+            else:
+                logits, self.cache = out
+            self._finish_admission(r, slot, logits)
+
+    def _admit_tick(self) -> bool:
+        """One scheduler tick of admission work. Returns True iff chunked
+        prefill progressed (one-shot admissions surface via num_active)."""
+        if self.prefill_chunk is None:
+            self._admit()
+            return False
+        return self._prefill_tick()
+
+    def _prefill_tick(self) -> bool:
+        """Budgeted chunked admission: start or advance the single in-flight
+        prefill by at most one ``prefill_chunk``-token chunk."""
+        if self._pending is None:
+            slot = self._free_slot()
+            if not self.queue or slot is None:
+                return False
+            r = self.queue.popleft()
+            p = self._bucket(len(r.prompt))
+            toks = np.zeros((1, p), np.int32)
+            toks[0, p - len(r.prompt):] = r.prompt      # left-pad with 0
+            sub = self.model.init_cache(1, self.cache_cap,
+                                        src_len=self.src_len)
+            self._pending = [r, slot, sub, toks, 0]
+        r, slot, sub, toks, done = self._pending
+        c = min(self.prefill_chunk, toks.shape[1] - done)
+        if self.step_token_budget is not None and self.num_active > 0:
+            # Decode always runs and eats num_active tokens of the budget;
+            # the chunk only proceeds on leftover budget. Progress is
+            # guaranteed: decode drains slots, so num_active falls and the
+            # leftover eventually covers a chunk (or the pool empties and
+            # the budget gate is bypassed entirely).
+            if self.step_token_budget - self.num_active < c:
+                return False
+        chunk_toks = {"tokens": jnp.asarray(toks[:, done:done + c])}
+        last = done + c == toks.shape[1]
+        if last:
+            # Final chunk: one fused program consumes the chunk AND merges
+            # the completed batch-1 cache into the slot row; its last
+            # position's logits give the first generated token.
+            out = self._chunk_merge(self.params, chunk_toks, sub, self.cache,
+                                    jnp.int32(slot))
+        else:
+            out = self._chunk(self.params, chunk_toks, sub)
+        if self.monitor is not None:
+            logits, merged, stats = out
+            # The chunk covers padded positions [done, done+c); left-pad
+            # spans [0, total - len(prompt)) of the padded prompt.
+            self._observe_prefill(
+                stats, pad=(toks.shape[1] - len(r.prompt)) - done)
+        else:
+            logits, merged = out
+        if not last:
+            self._pending = [r, slot, merged, toks, done + c]
+            return True
+        self.cache = merged
+        self._pending = None
+        self._finish_admission(r, slot, logits)
+        return True
+
+    def _observe_prefill(self, stats, pad: int) -> None:
+        """Fold prefill routing counts into the monitor, dropping the first
+        ``pad`` positions (left-padding routes token id 0 every time and
+        would skew the popularity estimate toward phantom traffic)."""
+        arr = np.asarray(stats)                      # (L, 1, S, E)
+        real = arr[:, :, max(pad, 0):, :]
+        if real.shape[2]:
+            self.monitor.observe(real.sum(axis=2))
 
     def _postdecode(self, logits) -> None:
         """Emit one token per occupied slot; evict finished requests."""
@@ -222,13 +389,25 @@ class ContinuousEngine:
             if len(r.out_tokens) >= r.max_new_tokens:
                 self.slots[i] = None                     # slot free for reuse
 
+    def _decode_all(self):
+        """One fixed-shape decode over every slot (stats-aware)."""
+        if self.monitor is not None:
+            mask = np.array([r is not None for r in self.slots], bool)
+            logits, self.cache, stats = self._decode(self.params, self.tokens,
+                                                     self.cache)
+            self.monitor.observe(stats, mask)
+        else:
+            logits, self.cache = self._decode(self.params, self.tokens,
+                                              self.cache)
+        return logits
+
     def step(self) -> bool:
-        """Admit, then decode all slots once. Returns False when idle."""
-        self._admit()
+        """Admit (whole prefills, or one budgeted chunk), then decode all
+        slots once. Returns False when idle."""
+        worked = self._admit_tick()
         if self.num_active == 0:
-            return False
-        logits, self.cache = self._decode(self.params, self.tokens,
-                                          self.cache)
+            return worked
+        logits = self._decode_all()
         self.decode_steps += 1
         self._postdecode(logits)
         return True

@@ -1,0 +1,153 @@
+"""Live traffic monitoring + online re-planning for the serving loop.
+
+Aurora's plans (pairing, GPU assignment, BvN schedules) are computed from
+HISTORICAL traffic matrices (§3, Table 1), but the continuous engines observe
+every request's live routing. ``TrafficMonitor`` folds the per-step routing
+counts harvested by ``Model.decode_step_stats`` / ``prefill(collect_moe_stats)``
+into an exponentially-weighted per-layer expert-popularity estimate and turns
+it into a ``MoETrace`` on demand; ``OnlineReplanner`` periodically re-runs
+``AuroraPlanner`` on that live trace and recommends a new plan when it beats
+the current placement — re-simulated on the SAME live trace — by a margin.
+
+Re-planning is placement-only: applying a new pairing permutes model B's
+expert weights and router columns (``apply_pairing``), never the function
+either model computes, so a mid-stream re-plan cannot change emitted tokens.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.planner import AuroraPlanner, Plan, PlanDiff
+from repro.core.traffic import MoETrace, trace_from_counts
+
+
+class TrafficMonitor:
+    """EWMA accumulator of per-layer expert routing counts.
+
+    ``observe`` takes the (n_layers, B, E) count arrays the stats model
+    methods return, masks out inactive slots, and folds the per-step totals
+    into a decayed sum with a matching decayed weight (bias-corrected EWMA:
+    ``rates = counts / weight`` is a tokens-per-observation estimate from the
+    first step on). ``halflife`` is measured in observations.
+    """
+
+    def __init__(self, n_experts: int, n_layers: int,
+                 halflife: float = 128.0, name: str = "live"):
+        if n_layers <= 0:
+            raise ValueError("TrafficMonitor needs a model with MoE layers")
+        self.n_experts = n_experts
+        self.n_layers = n_layers
+        self.name = name
+        self.decay = 0.5 ** (1.0 / float(halflife))
+        self.counts = np.zeros((n_layers, n_experts), np.float64)
+        self.weight = 0.0
+        self.observations = 0
+        # Expert-index frame: routing stats from a model whose experts were
+        # physically permuted (``apply_pairing``) arrive in SLOT space —
+        # column k is original expert slot_to_expert[k]. The monitor
+        # translates every observation back to original-expert space, so
+        # the EWMA stays frame-consistent across re-plans and the planner/
+        # simulator (which index traces by original expert id) read it
+        # directly. None = identity (unpermuted model).
+        self.slot_to_expert: list[int] | None = None
+
+    def observe(self, stats, mask=None) -> None:
+        """stats: (n_layers, B, E) routed-choice counts for one engine step;
+        mask: (B,) truthy for rows that hold a real request (None = all)."""
+        arr = np.asarray(stats, np.float64)
+        if arr.shape[0] != self.n_layers or arr.shape[-1] != self.n_experts:
+            raise ValueError(f"stats shape {arr.shape} does not match "
+                             f"({self.n_layers}, B, {self.n_experts})")
+        if mask is not None:
+            arr = arr * np.asarray(mask, np.float64)[None, :, None]
+        if self.slot_to_expert is not None:
+            orig = np.empty_like(arr)
+            orig[..., np.asarray(self.slot_to_expert)] = arr
+            arr = orig
+        self.counts = self.decay * self.counts + arr.sum(axis=1)
+        self.weight = self.decay * self.weight + 1.0
+        self.observations += 1
+
+    @property
+    def rates(self) -> np.ndarray:
+        """(n_layers, E) EWMA routed tokens per observation."""
+        return self.counts / max(self.weight, 1e-12)
+
+    def trace(self, tokens_per_device: float = 1024.0, **times) -> MoETrace:
+        """Live ``MoETrace`` from the current popularity estimate. ``times``
+        forwards gate/ffn_per_token/agg/ffn_fixed to ``trace_from_counts``."""
+        return trace_from_counts(self.name, self.rates,
+                                 tokens_per_device=tokens_per_device, **times)
+
+
+@dataclasses.dataclass
+class ReplanEvent:
+    """One re-plan decision point (kept on ``OnlineReplanner.events``)."""
+
+    step: int
+    stale_time: float          # current pairing re-simulated on live trace
+    candidate_time: float      # fresh plan's prediction on the same trace
+    pair: list[int]            # candidate pairing
+    applied: bool
+    baseline_time: float | None = None   # frozen baseline_pair on same trace
+
+
+class OnlineReplanner:
+    """Traffic-driven re-planning policy for the colocated engine.
+
+    Every ``interval`` decode steps (once both monitors have at least
+    ``warmup`` observations), plan fresh from the live traces and compare
+    against the CURRENT pairing evaluated on the same traces. Recommend the
+    switch only when the placement actually changes and the predicted
+    inference time improves by at least ``threshold`` (relative) — hysteresis
+    against replanning churn on noisy traffic.
+    """
+
+    def __init__(self, planner: AuroraPlanner, interval: int = 64,
+                 threshold: float = 0.02, warmup: int | None = None,
+                 tokens_per_device: float = 1024.0,
+                 baseline_pair: list[int] | None = None):
+        if interval <= 0:
+            raise ValueError("interval must be positive")
+        self.planner = planner
+        self.interval = interval
+        self.threshold = threshold
+        self.warmup = interval if warmup is None else warmup
+        self.tokens_per_device = tokens_per_device
+        # Optional frozen reference placement (e.g. the historical plan):
+        # scored on the live trace at every checkpoint, so a benchmark can
+        # compare the adaptive trajectory against never-replanning at all.
+        self.baseline_pair = (None if baseline_pair is None
+                              else list(baseline_pair))
+        self.events: list[ReplanEvent] = []
+
+    def maybe_replan(self, step: int, monitor_a: TrafficMonitor,
+                     monitor_b: TrafficMonitor,
+                     current_pair: list[int]) -> Plan | None:
+        """Returns the new plan to apply, or None to keep the current one."""
+        if step == 0 or step % self.interval:
+            return None
+        if min(monitor_a.observations, monitor_b.observations) < self.warmup:
+            return None
+        tr_a = monitor_a.trace(tokens_per_device=self.tokens_per_device)
+        tr_b = monitor_b.trace(tokens_per_device=self.tokens_per_device)
+        stale = self.planner.evaluate_colocated(tr_a, tr_b, current_pair)
+        cand = self.planner.plan_colocated(tr_a, tr_b)
+        diff = PlanDiff(
+            pair_changed=list(cand.pair) != list(current_pair),
+            assignment_changed=False,     # homogeneous pairing re-plan only
+            old_time=stale.inference_time,
+            new_time=cand.predicted.inference_time)
+        apply = diff.pair_changed and diff.rel_improvement > self.threshold
+        base_t = None
+        if self.baseline_pair is not None:
+            base_t = self.planner.evaluate_colocated(
+                tr_a, tr_b, self.baseline_pair).inference_time
+        self.events.append(ReplanEvent(
+            step=step, stale_time=stale.inference_time,
+            candidate_time=cand.predicted.inference_time,
+            pair=list(cand.pair), applied=apply, baseline_time=base_t))
+        return cand if apply else None

@@ -59,7 +59,7 @@ def test_ssm_decode_matches_prefill_extension():
         logits_d, cache = model.decode_step(params, toks[:, t:t + 1], cache)
         outs.append(logits_d)
     # teacher-forced reference over the full 12 tokens
-    logits_f, _, _ = forward(params, cfg, tokens=toks, mode="train")
+    logits_f, _, _, _ = forward(params, cfg, tokens=toks, mode="train")
     got = jnp.concatenate(outs, axis=1)
     np.testing.assert_allclose(np.asarray(got), np.asarray(logits_f[:, 8:12]),
                                rtol=2e-2, atol=2e-2)

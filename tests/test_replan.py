@@ -1,0 +1,201 @@
+"""Traffic monitor, trace-from-counts, plan diffing, and the online
+re-planning loop's placement-only invariant."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (AuroraPlanner, diff_plans, homogeneous_cluster,
+                        synthetic_trace, trace_from_counts)
+from repro.models import Model
+from repro.serving import (ColocatedContinuousEngine, ContinuousEngine,
+                           OnlineReplanner, Request, TrafficMonitor)
+
+
+def _model(arch, seed=0):
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+def _requests(n=5, seed=0, max_new=5):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=list(rng.integers(1, 500, 6)),
+                    max_new_tokens=max_new, arrival=float(i))
+            for i in range(n)]
+
+
+# -- trace_from_counts ------------------------------------------------------
+
+def test_trace_from_counts_shape_and_popularity():
+    counts = np.array([[10.0, 30.0, 40.0, 20.0],
+                       [0.0, 0.0, 0.0, 0.0]])       # layer 1: unobserved
+    tr = trace_from_counts("t", counts, tokens_per_device=100.0)
+    assert tr.n == 4 and len(tr.layers) == 2
+    d0 = tr.layer(0)
+    assert np.all(np.diag(d0) == 0.0)               # self-traffic stripped
+    # receive-side popularity proportional to counts (off-diagonal sums)
+    recv = d0.sum(axis=0)
+    assert recv[2] > recv[1] > recv[3] > recv[0]
+    # unobserved layer falls back to uniform popularity
+    d1 = tr.layer(1)
+    off = d1[~np.eye(4, dtype=bool)]
+    np.testing.assert_allclose(off, off[0])
+
+
+def test_trace_from_counts_validates():
+    with pytest.raises(ValueError):
+        trace_from_counts("t", np.ones((2, 3, 4)))
+    with pytest.raises(ValueError):
+        trace_from_counts("t", -np.ones((2, 3)))
+
+
+# -- TrafficMonitor ---------------------------------------------------------
+
+def test_monitor_ewma_and_mask():
+    mon = TrafficMonitor(n_experts=4, n_layers=2, halflife=8.0)
+    stats = np.zeros((2, 3, 4))
+    stats[:, 0, 1] = 2.0                            # slot 0 -> expert 1
+    stats[:, 2, 3] = 2.0                            # slot 2 -> expert 3
+    mon.observe(stats, mask=np.array([True, False, False]))
+    assert mon.observations == 1
+    np.testing.assert_allclose(mon.rates[:, 1], 2.0)
+    np.testing.assert_allclose(mon.rates[:, 3], 0.0)   # masked out
+    mon.observe(stats)                               # unmasked this time
+    assert mon.rates[0, 3] > 0.0
+    tr = mon.trace()
+    assert tr.n == 4 and len(tr.layers) == 2
+    with pytest.raises(ValueError):
+        mon.observe(np.zeros((3, 1, 4)))            # wrong layer count
+    with pytest.raises(ValueError):
+        TrafficMonitor(n_experts=4, n_layers=0)
+
+
+def test_monitor_harvests_engine_routing():
+    """A monitored engine's counts must reflect real routed volume:
+    top_k choices per active row per MoE layer per observation."""
+    cfg, model, params = _model("phi3.5-moe-42b-a6.6b")
+    mon = TrafficMonitor(cfg.moe.n_experts, model.n_moe_layers)
+    eng = ContinuousEngine(model, params, 2, 48, prefill_chunk=2,
+                           monitor=mon)
+    eng.serve(_requests())
+    assert mon.observations > 0
+    # Every observation routes <= batch_slots * top_k per layer (decode) and
+    # exactly chunk * top_k for prefill chunks; rates land in that envelope.
+    assert np.all(mon.rates.sum(axis=1) > 0.0)
+    assert np.all(mon.rates.sum(axis=1) <= 2 * 2 * cfg.moe.top_k + 1e-9)
+
+
+# -- planner additions ------------------------------------------------------
+
+def test_evaluate_colocated_matches_plan_prediction():
+    tr_a = synthetic_trace("a", n_experts=4, n_layers=2, seed=0)
+    tr_b = synthetic_trace("b", n_experts=4, n_layers=2, seed=1)
+    planner = AuroraPlanner(homogeneous_cluster(4))
+    plan = planner.plan_colocated(tr_a, tr_b)
+    ev = planner.evaluate_colocated(tr_a, tr_b, plan.pair)
+    assert ev.inference_time == pytest.approx(plan.predicted.inference_time)
+
+
+def test_diff_plans():
+    tr_a = synthetic_trace("a", n_experts=4, n_layers=2, seed=0)
+    tr_b = synthetic_trace("b", n_experts=4, n_layers=2, seed=1)
+    planner = AuroraPlanner(homogeneous_cluster(4))
+    p1 = planner.plan_colocated(tr_a, tr_b)
+    d_same = diff_plans(p1, p1)
+    assert not d_same.placement_changed
+    assert d_same.rel_improvement == pytest.approx(0.0)
+    p2 = planner.plan_colocated(tr_b, tr_a)          # different traffic
+    d = diff_plans(p1, p2, old_time=10.0)
+    assert d.old_time == 10.0
+    assert d.rel_improvement == pytest.approx(
+        (10.0 - p2.predicted.inference_time) / 10.0)
+
+
+# -- online re-planning -----------------------------------------------------
+
+def test_replan_never_changes_tokens():
+    """The placement-only invariant end to end: a colocated stream served
+    with aggressive re-planning emits exactly the tokens of a run that
+    never re-plans — across BOTH pools, including chunked admissions."""
+    cfg_a, ma, pa = _model("phi3.5-moe-42b-a6.6b", seed=0)
+    cfg_b, mb, pb = _model("phi3.5-moe-42b-a6.6b", seed=1)
+    planner = AuroraPlanner(homogeneous_cluster(cfg_a.moe.n_experts))
+
+    mk_a = lambda: _requests(5, seed=3)
+    mk_b = lambda: _requests(4, seed=4)
+    ref = ColocatedContinuousEngine(ma, mb, pa, pb, 2, 48, prefill_chunk=2)
+    ra0, rb0 = ref.serve(mk_a(), mk_b())
+
+    # threshold < 0 applies EVERY candidate whose pairing differs — the
+    # most churn the loop can produce, the strongest invariant check.
+    rp = OnlineReplanner(planner, interval=3, threshold=-1.0, warmup=1)
+    eng = ColocatedContinuousEngine(ma, mb, pa, pb, 2, 48, prefill_chunk=2,
+                                    replan=rp)
+    ra1, rb1 = eng.serve(mk_a(), mk_b())
+    assert [r.out_tokens for r in ra0] == [r.out_tokens for r in ra1]
+    assert [r.out_tokens for r in rb0] == [r.out_tokens for r in rb1]
+    applied = [e for e in eng.replan_events if e.applied]
+    assert applied, "forced re-planning never fired"
+    assert eng.pair == applied[-1].pair
+
+
+def test_replan_hysteresis_keeps_plan():
+    """An unreachable improvement threshold must never swap the pairing."""
+    cfg_a, ma, pa = _model("phi3.5-moe-42b-a6.6b", seed=0)
+    cfg_b, mb, pb = _model("phi3.5-moe-42b-a6.6b", seed=1)
+    planner = AuroraPlanner(homogeneous_cluster(cfg_a.moe.n_experts))
+    rp = OnlineReplanner(planner, interval=3, threshold=10.0, warmup=1)
+    eng = ColocatedContinuousEngine(ma, mb, pa, pb, 2, 48, replan=rp)
+    pair0 = list(eng.pair)
+    eng.serve(_requests(4, seed=5), _requests(4, seed=6))
+    assert eng.pair == pair0
+    assert eng.replan_events and not any(e.applied for e in eng.replan_events)
+
+
+def test_monitor_slot_to_expert_translation():
+    """Observations from a permuted model translate back to original-expert
+    space: slot k's counts are credited to expert slot_to_expert[k]."""
+    mon = TrafficMonitor(n_experts=4, n_layers=1, halflife=8.0)
+    mon.slot_to_expert = [2, 0, 3, 1]
+    stats = np.zeros((1, 1, 4))
+    stats[0, 0] = [5.0, 0.0, 1.0, 0.0]     # slots 0 and 2 routed
+    mon.observe(stats)
+    np.testing.assert_allclose(mon.rates[0], [0.0, 0.0, 5.0, 1.0])
+
+
+def test_paired_pool_traffic_lands_in_original_expert_frame():
+    """End to end: model B served PAIRED must report the same original-
+    expert traffic as the identical stream through the unpaired model —
+    otherwise the re-planner would optimize a permuted phantom trace."""
+    cfg_a, ma, pa = _model("phi3.5-moe-42b-a6.6b", seed=0)
+    cfg_b, mb, pb = _model("phi3.5-moe-42b-a6.6b", seed=1)
+    from repro.serving import apply_pairing
+
+    planner = AuroraPlanner(homogeneous_cluster(cfg_a.moe.n_experts))
+    pair0 = [2, 0, 3, 1]
+    rp = OnlineReplanner(planner, interval=10_000)   # monitors only
+    mk = lambda s: _requests(4, seed=s)
+
+    paired = ColocatedContinuousEngine(
+        ma, mb, pa, apply_pairing(pb, pair0, cfg_b), 2, 48,
+        pair=pair0, replan=rp)
+    paired.serve(mk(1), mk(2))
+
+    rp2 = OnlineReplanner(planner, interval=10_000)
+    ident = ColocatedContinuousEngine(ma, mb, pa, pb, 2, 48, replan=rp2)
+    ident.serve(mk(1), mk(2))
+
+    np.testing.assert_allclose(paired.monitor_b.rates,
+                               ident.monitor_b.rates, atol=1e-9)
+
+
+def test_replan_requires_matching_moe():
+    cfg_a, ma, pa = _model("phi3.5-moe-42b-a6.6b", seed=0)
+    cfg_d, md, pd = _model("qwen3-32b", seed=1)       # dense model
+    planner = AuroraPlanner(homogeneous_cluster(cfg_a.moe.n_experts))
+    rp = OnlineReplanner(planner, interval=4)
+    with pytest.raises(ValueError, match="MoE"):
+        ColocatedContinuousEngine(ma, md, pa, pd, 2, 32, replan=rp)

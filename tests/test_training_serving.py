@@ -73,7 +73,7 @@ def test_serving_decode_matches_forward():
     logits_p, cache = model.prefill(params, {"tokens": prompt}, cache)
 
     from repro.models.transformer import forward
-    logits_f, _, _ = forward(params, cfg, tokens=prompt, mode="train")
+    logits_f, _, _, _ = forward(params, cfg, tokens=prompt, mode="train")
     np.testing.assert_allclose(np.asarray(logits_p), np.asarray(logits_f),
                                rtol=2e-3, atol=2e-3)
 
@@ -81,7 +81,7 @@ def test_serving_decode_matches_forward():
     tok = jnp.argmax(logits_p[:, -1:, : cfg.vocab], -1).astype(jnp.int32)
     logits_d, cache = model.decode_step(params, tok, cache)
     ext = jnp.concatenate([prompt, tok], axis=1)
-    logits_e, _, _ = forward(params, cfg, tokens=ext, mode="train")
+    logits_e, _, _, _ = forward(params, cfg, tokens=ext, mode="train")
     np.testing.assert_allclose(np.asarray(logits_d[:, 0]),
                                np.asarray(logits_e[:, -1]),
                                rtol=2e-2, atol=2e-2)
