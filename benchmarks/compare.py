@@ -1,0 +1,172 @@
+"""Bench trend gate: diff two serving-bench JSON records across CI runs.
+
+  PYTHONPATH=src python -m benchmarks.compare BASELINE.json NEW.json \
+      [--threshold 0.2] [--summary trend.md]
+
+Reads two ``BENCH_serving.json`` files (``serving_bench.py --json`` output),
+extracts a fixed set of named metrics, prints a trend table, and — for the
+metrics marked *gated* (absolute throughputs) — exits non-zero when any one
+regressed by more than ``--threshold`` (default 20%). Ratio metrics
+(speedups, stall cuts, predicted-time gains) are reported but not gated:
+they compare two legs measured in the same process and are already
+machine-normalized, while run-to-run throughput is the trajectory the
+ROADMAP wants guarded.
+
+The markdown table is appended to ``--summary`` when given, else to
+``$GITHUB_STEP_SUMMARY`` when set (the Actions job summary).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _get(record: dict, path: str):
+    """Fetch a dotted path from nested dicts; None when any hop is missing."""
+    cur = record
+    for key in path.split("."):
+        if not isinstance(cur, dict) or key not in cur:
+            return None
+        cur = cur[key]
+    return cur
+
+
+def _tok_per_s(section: str, engine_key: str):
+    def extract(record: dict):
+        tok = _get(record, f"{section}.{engine_key}.tokens")
+        wall = _get(record, f"{section}.{engine_key}.wall_s")
+        if tok is None or wall is None or wall <= 0:
+            return None
+        return tok / wall
+    return extract
+
+
+# (name, extractor, higher_is_better, gated). Gated metrics are absolute
+# throughputs — the regression the CI gate exists to catch.
+METRICS = [
+    ("continuous tok/s", _tok_per_s("continuous", "continuous"), True, True),
+    ("static tok/s", _tok_per_s("continuous", "static"), True, False),
+    ("continuous wall speedup",
+     lambda r: _get(r, "continuous.wall_speedup"), True, False),
+    ("continuous step efficiency",
+     lambda r: _get(r, "continuous.step_efficiency"), True, False),
+    ("chunked stall cut", lambda r: _get(r, "chunked.stall_cut"), True, False),
+    ("drift adaptive gain", lambda r: _get(r, "drift.improvement"),
+     True, False),
+] + [
+    (f"multi N={n} tok/s",
+     lambda r, n=n: _get(r, f"multi.tenants.{n}.engine.tok_per_s"),
+     True, True)
+    for n in (2, 3, 4)
+] + [
+    (f"multi N={n} aurora-vs-random gain",
+     lambda r, n=n: _get(r, f"multi.tenants.{n}.gain"), True, False)
+    for n in (2, 3, 4)
+]
+
+
+def compare(baseline: dict, new: dict, threshold: float):
+    """Returns (rows, regressions). rows: (name, old, new, delta, status)."""
+    rows, regressions = [], []
+    for name, extract, higher_better, gated in METRICS:
+        old_v, new_v = extract(baseline), extract(new)
+        if old_v is None and new_v is None:
+            continue
+        if old_v is None:
+            rows.append((name, None, new_v, None, "new"))
+            continue
+        if new_v is None:
+            rows.append((name, old_v, None, None, "gone"))
+            continue
+        if old_v <= 0:
+            # A non-positive baseline makes the relative delta meaningless
+            # (sign flips); report the values without a trend verdict.
+            rows.append((name, old_v, new_v, None, "n/a (baseline <= 0)"))
+            continue
+        delta = (new_v - old_v) / old_v
+        change = delta if higher_better else -delta
+        status = "ok"
+        if gated and change < -threshold:
+            status = "REGRESSED"
+            regressions.append((name, old_v, new_v, delta))
+        elif change < -threshold:
+            status = "down (not gated)"
+        rows.append((name, old_v, new_v, delta, status))
+    return rows, regressions
+
+
+def _fmt(v, width=10):
+    return f"{'—':>{width}}" if v is None else f"{v:>{width}.3f}"
+
+
+def render_text(rows) -> str:
+    lines = [f"{'metric':<32} {'baseline':>10} {'current':>10} "
+             f"{'Δ':>8}  status"]
+    for name, old_v, new_v, delta, status in rows:
+        d = "—" if delta is None else f"{delta:+.1%}"
+        lines.append(f"{name:<32} {_fmt(old_v)} {_fmt(new_v)} {d:>8}  "
+                     f"{status}")
+    return "\n".join(lines)
+
+
+def render_markdown(rows, threshold: float, regressions) -> str:
+    lines = ["## Serving bench trend",
+             "",
+             f"Gate: >{threshold:.0%} regression on throughput metrics "
+             "fails the job.",
+             "",
+             "| metric | baseline | current | Δ | status |",
+             "|---|---:|---:|---:|---|"]
+    for name, old_v, new_v, delta, status in rows:
+        o = "—" if old_v is None else f"{old_v:.3f}"
+        n = "—" if new_v is None else f"{new_v:.3f}"
+        d = "—" if delta is None else f"{delta:+.1%}"
+        badge = "❌" if status == "REGRESSED" else "✅" if status == "ok" \
+            else "ℹ️"
+        lines.append(f"| {name} | {o} | {n} | {d} | {badge} {status} |")
+    lines.append("")
+    lines.append("**FAIL**: throughput regression past the gate."
+                 if regressions else "**PASS**: no gated regression.")
+    return "\n".join(lines) + "\n"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="previous run's BENCH_serving.json")
+    ap.add_argument("new", help="this run's BENCH_serving.json")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="relative throughput drop that fails the gate "
+                         "(default 0.2 = 20%%)")
+    ap.add_argument("--summary", default=None,
+                    help="append the markdown table to this file "
+                         "(default: $GITHUB_STEP_SUMMARY when set)")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+
+    rows, regressions = compare(baseline, new, args.threshold)
+    print(render_text(rows))
+
+    summary_path = args.summary or os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        with open(summary_path, "a") as f:
+            f.write(render_markdown(rows, args.threshold, regressions))
+
+    if regressions:
+        print(f"\nFAIL: {len(regressions)} throughput metric(s) regressed "
+              f"past {args.threshold:.0%}:")
+        for name, old_v, new_v, delta in regressions:
+            print(f"  {name}: {old_v:.3f} -> {new_v:.3f} ({delta:+.1%})")
+        return 1
+    print(f"\nPASS: no gated metric regressed past {args.threshold:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,11 +1,13 @@
-"""Serving benchmarks: continuous batching, chunked prefill, online re-plan.
+"""Serving benchmarks: continuous batching, chunked prefill, online re-plan,
+multi-tenant colocation.
 
   PYTHONPATH=src python -m benchmarks.serving_bench             # classic
   PYTHONPATH=src python -m benchmarks.serving_bench --chunked   # stall study
   PYTHONPATH=src python -m benchmarks.serving_bench --drift     # + re-plan
+  PYTHONPATH=src python -m benchmarks.serving_bench --multi     # N tenants
   PYTHONPATH=src python -m benchmarks.serving_bench --all --json BENCH_serving.json
 
-Three sections, each a pass/fail experiment:
+Four sections, each a pass/fail experiment:
 
 * **continuous** — continuous vs static batching on the SAME Poisson stream
   (PR 1's experiment): continuous must win wall-clock throughput and
@@ -26,6 +28,15 @@ Three sections, each a pass/fail experiment:
   Table-2 simulator ON THE SAME live trace — the adaptive placement must be
   predicted no slower, and (placement-only invariant) both runs must emit
   byte-identical tokens.
+* **multi** — N-tenant colocation (N ∈ {2, 3, 4}). For each tenant count:
+  plan a k-way expert grouping with ``AuroraPlanner.plan_multi`` (greedy
+  repeated bottleneck matching) and score it against random grouping (REC
+  baseline, mean over seeds) with the N-way phase simulator — aurora must
+  predict a no-slower inference time at every N. Then serve N Poisson
+  streams through ``MultiTenantContinuousEngine`` under the aurora grouping
+  (tenant params physically permuted) and under identity placement: token
+  streams must be identical (grouping is placement-only), and the fused
+  N-tenant engine's measured throughput is recorded for the trend gate.
 """
 
 from __future__ import annotations
@@ -356,6 +367,105 @@ def bench_drift(arch="phi3.5-moe-42b-a6.6b", n_phase=12, batch_slots=2,
 
 
 # ---------------------------------------------------------------------------
+# Section 4: multi-tenant colocation (N > 2), aurora vs random grouping
+# ---------------------------------------------------------------------------
+
+def bench_multi(arch="phi3.5-moe-42b-a6.6b", tenant_counts=(2, 3, 4),
+                n_experts=8, n_reqs=6, batch_slots=2, prompt_len=8,
+                max_new=5, rate=0.6, cache_cap=32, rand_seeds=6, seed=0):
+    import dataclasses
+
+    import jax
+    from repro.configs import get_config
+    from repro.core import (AuroraPlanner, group_pairs, homogeneous_cluster,
+                            random_grouping, synthetic_trace)
+    from repro.models import Model
+    from repro.serving import (MultiTenantContinuousEngine, Request,
+                               apply_pairing, poisson_requests)
+
+    # Same widening as the drift section: reduced() clamps to 4 experts,
+    # where the grouping space is too small for placement quality to vary.
+    cfg = get_config(arch).reduced()
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, n_experts=n_experts))
+    max_t = max(tenant_counts)
+    models = [Model(cfg) for _ in range(max_t)]
+    params = [m.init(jax.random.PRNGKey(t)) for t, m in enumerate(models)]
+    planner = AuroraPlanner(homogeneous_cluster(n_experts))
+
+    print(f"== multi-tenant bench: {arch} (reduced, {n_experts} experts), "
+          f"N ∈ {list(tenant_counts)}, aurora vs random grouping ==")
+    print(f"{'N':>2} {'aurora t':>9} {'random t':>9} {'gain':>6} "
+          f"{'aurora util':>11} {'random util':>11} {'tok/s':>8}")
+    per_n = {}
+    rng = np.random.default_rng(seed)
+    for nt in tenant_counts:
+        # Tenants differ in popularity skew — the complementarity k-way
+        # grouping exploits (one tenant's hot expert rides with others'
+        # cold ones).
+        traces = [synthetic_trace(f"tenant{t}", n_experts=n_experts,
+                                  n_layers=2, skew=0.3 + 0.5 * t,
+                                  seed=seed + 17 * t)
+                  for t in range(nt)]
+        plan = planner.plan_multi(traces)
+        t_aurora = plan.predicted.inference_time
+        u_aurora = plan.predicted.utilization
+        rand = [planner.evaluate_multi(
+                    traces, random_grouping(n_experts, nt, seed=s))
+                for s in range(rand_seeds)]
+        t_rand = float(np.mean([r.inference_time for r in rand]))
+        u_rand = float(np.mean([r.utilization for r in rand]))
+
+        # Engine leg: identical Poisson streams under identity placement and
+        # under the aurora grouping (params permuted per tenant) — grouping
+        # must be placement-only; throughput measured on the aurora run.
+        streams = [poisson_requests(rng, n_reqs, rate, cfg.vocab, prompt_len,
+                                    max_new_lo=2, max_new_hi=max_new)
+                   for _ in range(nt)]
+        ident = MultiTenantContinuousEngine(
+            models[:nt], params[:nt], batch_slots, cache_cap,
+            prefill_len=prompt_len)
+        out_i = ident.serve([_clone(s) for s in streams])
+
+        perms = group_pairs(list(plan.groups))
+        grouped_params = [params[0]] + [
+            apply_pairing(params[t], perms[t], cfg) for t in range(1, nt)]
+        eng = MultiTenantContinuousEngine(
+            models[:nt], grouped_params, batch_slots, cache_cap,
+            prefill_len=prompt_len, groups=list(plan.groups))
+        eng.serve([_clone(s) for s in streams])          # warm-up compile
+        eng.decode_steps = 0
+        final = [_clone(s) for s in streams]
+        t0 = time.perf_counter()
+        out_a = eng.serve(final)
+        wall = time.perf_counter() - t0
+        for t in range(nt):
+            assert ([r.out_tokens for r in out_a[t]]
+                    == [r.out_tokens for r in out_i[t]]), \
+                f"grouping changed tenant {t} tokens (placement-only violated)"
+        tokens = sum(len(r.out_tokens) for s in out_a for r in s)
+
+        gain = t_rand / t_aurora if t_aurora > 0 else 1.0
+        print(f"{nt:>2} {t_aurora:>9.3f} {t_rand:>9.3f} {gain:>5.2f}x "
+              f"{u_aurora:>11.3f} {u_rand:>11.3f} {tokens / wall:>8.1f}")
+        per_n[str(nt)] = {
+            "aurora_time": t_aurora, "random_time": t_rand, "gain": gain,
+            "aurora_util": u_aurora, "random_util": u_rand,
+            "groups": [list(g) for g in plan.groups],
+            "engine": {"tokens": tokens, "steps": eng.decode_steps,
+                       "wall_s": wall, "tok_per_s": tokens / wall},
+        }
+    ok = all(v["aurora_time"] <= v["random_time"] * (1 + 1e-9)
+             for v in per_n.values())
+    print("aurora grouping no slower than random at every N; token streams "
+          "identical across placements" if ok else
+          "FAIL: random grouping beat aurora")
+    return {"arch": arch, "n_experts": n_experts,
+            "tenant_counts": list(tenant_counts), "tenants": per_n,
+            "ok": bool(ok)}
+
+
+# ---------------------------------------------------------------------------
 # Driver
 # ---------------------------------------------------------------------------
 
@@ -373,6 +483,8 @@ def main() -> int:
     ap.add_argument("--drift", action="store_true",
                     help="run the re-planning drift section (includes the "
                          "chunked stall comparison)")
+    ap.add_argument("--multi", action="store_true",
+                    help="run the N-tenant colocation section")
     ap.add_argument("--all", action="store_true",
                     help="run every section")
     ap.add_argument("--small", action="store_true",
@@ -382,9 +494,10 @@ def main() -> int:
     args = ap.parse_args()
 
     sections = {}
-    run_classic = args.all or not (args.chunked or args.drift)
+    run_classic = args.all or not (args.chunked or args.drift or args.multi)
     run_chunked = args.all or args.chunked or args.drift
     run_drift = args.all or args.drift
+    run_multi = args.all or args.multi
 
     # The chunked section runs FIRST: it judges step-latency tails, the
     # statistic most sensitive to heap/caches left by other sections.
@@ -408,6 +521,10 @@ def main() -> int:
     if run_drift:
         kw = dict(n_phase=6, max_new=4) if args.small else {}
         sections["drift"] = bench_drift(arch=args.moe_arch, seed=args.seed,
+                                        **kw)
+    if run_multi:
+        kw = (dict(n_reqs=4, max_new=4, rand_seeds=4) if args.small else {})
+        sections["multi"] = bench_multi(arch=args.moe_arch, seed=args.seed,
                                         **kw)
 
     if args.json:

@@ -10,8 +10,6 @@ Runs on CPU in under a minute:
 Usage: PYTHONPATH=src python examples/quickstart.py
 """
 
-import numpy as np
-
 from repro.core import (AuroraPlanner, heterogeneous_cluster,
                         homogeneous_cluster, paper_eval_traces)
 

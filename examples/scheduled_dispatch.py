@@ -18,8 +18,6 @@ if "xla_force_host_platform_device_count" not in os.environ.get(
         "XLA_FLAGS", ""):
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 

@@ -11,9 +11,8 @@ Usage: PYTHONPATH=src python examples/serve_colocated.py
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import (AuroraPlanner, colocated_inference_time,
-                        homogeneous_cluster, lina_inference_time,
-                        paper_eval_traces)
+from repro.core import (AuroraPlanner, homogeneous_cluster,
+                        lina_inference_time, paper_eval_traces)
 from repro.models import Model
 from repro.serving import ColocatedEngine
 from repro.serving.colocated import apply_pairing

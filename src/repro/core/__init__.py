@@ -22,10 +22,13 @@ from .schedule import (CommSchedule, Slot, aurora_schedule, comm_time,
 from .matching import bottleneck_perfect_matching, hopcroft_karp
 from .assignment import (apply_assignment, aurora_assignment, expert_loads,
                          random_assignment)
-from .colocation import (aggregate_traffic, aurora_pairing, case1_pairing,
-                         case2_pairing, lina_packing, random_pairing)
+from .colocation import (aggregate_traffic, aggregate_traffic_multi,
+                         aurora_grouping, aurora_pairing, case1_pairing,
+                         case2_pairing, group_pairs, lina_packing,
+                         random_grouping, random_pairing)
 from .simulator import (SimResult, colocated_inference_time,
-                        exclusive_inference_time, lina_inference_time)
+                        exclusive_inference_time, lina_inference_time,
+                        multi_colocated_inference_time)
 from .planner import AuroraPlanner, Plan, PlanDiff, diff_plans
 from .bruteforce import bruteforce_colocated, bruteforce_exclusive
 
@@ -38,9 +41,11 @@ __all__ = [
     "comm_time", "fluid_comm_time", "rcs_order", "sjf_order",
     "bottleneck_perfect_matching", "hopcroft_karp", "apply_assignment",
     "aurora_assignment", "expert_loads", "random_assignment",
-    "aggregate_traffic", "aurora_pairing", "case1_pairing", "case2_pairing",
-    "lina_packing", "random_pairing", "SimResult",
+    "aggregate_traffic", "aggregate_traffic_multi", "aurora_grouping",
+    "aurora_pairing", "case1_pairing", "case2_pairing", "group_pairs",
+    "lina_packing", "random_grouping", "random_pairing", "SimResult",
     "colocated_inference_time", "exclusive_inference_time",
-    "lina_inference_time", "AuroraPlanner", "Plan", "PlanDiff", "diff_plans",
+    "lina_inference_time", "multi_colocated_inference_time",
+    "AuroraPlanner", "Plan", "PlanDiff", "diff_plans",
     "bruteforce_colocated", "bruteforce_exclusive",
 ]

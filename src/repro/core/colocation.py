@@ -92,6 +92,91 @@ def aggregate_traffic(
     return da + db_dev
 
 
+# -- multi-tenant (N > 2) grouping -----------------------------------------
+#
+# Nothing in Thm 6.1/6.2 is specific to two models: colocating one expert of
+# each of N tenants per device aggregates their traffic, and minimizing the
+# aggregated b_max still minimizes inference time on homogeneous clusters.
+# The N-way assignment problem (an N-dimensional matching, NP-hard for N>=3)
+# is decoupled exactly like §7.2 decouples case 4: fold tenants in one at a
+# time, bottleneck-matching the next tenant's experts against the groups
+# built so far. Each fold is the paper's case-I/case-II pairing with the
+# current aggregate playing the role of "model a".
+
+def aurora_grouping(traffics: list[np.ndarray],
+                    use_case1: bool = True) -> list[tuple[int, ...]]:
+    """Greedy k-way expert grouping over N tenants' traffic matrices.
+
+    Returns ``groups`` with ``groups[g][t]`` = the tenant-t expert hosted on
+    device slot g; tenant 0 anchors the slots (``groups[g][0] == g``). Each
+    fold uses the Thm 6.2 sort-pairing fast path when send == recv for both
+    the aggregate and the incoming tenant (``use_case1``), else bottleneck
+    matching with the case-II weight. For two tenants this reproduces
+    ``aurora_pairing`` exactly.
+    """
+    if not traffics:
+        raise ValueError("aurora_grouping needs at least one tenant")
+    mats = [strip_diagonal(d) for d in traffics]
+    n = mats[0].shape[0]
+    for d in mats:
+        if d.shape != (n, n):
+            raise ValueError("all tenants must have equal expert counts "
+                             f"(got {[m.shape[0] for m in mats]})")
+    groups = [[g] for g in range(n)]
+    agg = mats[0].copy()
+    for dt in mats[1:]:
+        s_agg, r_agg = agg.sum(axis=1), agg.sum(axis=0)
+        s_t, r_t = dt.sum(axis=1), dt.sum(axis=0)
+        if (use_case1 and np.allclose(s_agg, r_agg)
+                and np.allclose(s_t, r_t)):
+            pair = case1_pairing(s_agg, s_t)
+        else:
+            w = np.maximum(s_agg[:, None] + s_t[None, :],
+                           r_agg[:, None] + r_t[None, :])
+            pair, _ = bottleneck_perfect_matching(w)
+        p = np.asarray(pair)
+        agg = agg + dt[np.ix_(p, p)]
+        for g in range(n):
+            groups[g].append(int(pair[g]))
+    return [tuple(g) for g in groups]
+
+
+def random_grouping(n: int, n_tenants: int,
+                    seed: int = 0) -> list[tuple[int, ...]]:
+    """REC baseline generalized: tenant 0 anchors slots, every other tenant's
+    experts land on uniformly random slots."""
+    rng = np.random.default_rng(seed)
+    perms = [np.arange(n)] + [rng.permutation(n)
+                              for _ in range(n_tenants - 1)]
+    return [tuple(int(perms[t][g]) for t in range(n_tenants))
+            for g in range(n)]
+
+
+def group_pairs(groups: list[tuple[int, ...]]) -> list[list[int]]:
+    """Per-tenant slot->expert permutations of a grouping: ``out[t][g]`` is
+    the tenant-t expert on slot g (``out[0]`` is the identity anchor)."""
+    if not groups:
+        return []
+    return [[g[t] for g in groups] for t in range(len(groups[0]))]
+
+
+def aggregate_traffic_multi(traffics: list[np.ndarray],
+                            groups: list[tuple[int, ...]]) -> np.ndarray:
+    """Device-level traffic aggregated over N colocated tenants.
+
+    Slot g hosts expert ``groups[g][t]`` of each tenant t; every tenant's
+    matrix is re-indexed into slot space and summed. For two tenants with
+    ``groups[g] == (g, pair[g])`` this equals ``aggregate_traffic``.
+    """
+    mats = [strip_diagonal(d) for d in traffics]
+    n = mats[0].shape[0]
+    agg = np.zeros((n, n))
+    for t, dt in enumerate(mats):
+        p = np.asarray([g[t] for g in groups])
+        agg += dt[np.ix_(p, p)]
+    return agg
+
+
 def lina_packing(d: np.ndarray) -> tuple[np.ndarray, list[tuple[int, int]]]:
     """Lina-style same-model packing: two experts of ONE model per device.
 

@@ -23,11 +23,13 @@ import numpy as np
 
 from .assignment import aurora_assignment, expert_loads
 from .cluster import Cluster
-from .colocation import aurora_pairing, aggregate_traffic, case2_pairing
+from .colocation import (aurora_grouping, aurora_pairing, aggregate_traffic,
+                         aggregate_traffic_multi, case2_pairing, group_pairs)
 from .matching import bottleneck_perfect_matching
 from .schedule import CommSchedule, aurora_schedule
 from .simulator import (SimResult, colocated_inference_time,
-                        exclusive_inference_time)
+                        exclusive_inference_time,
+                        multi_colocated_inference_time)
 from .traffic import MoETrace
 from .assignment import apply_assignment
 
@@ -39,10 +41,20 @@ class Plan:
     pair: list[int] | None                    # b-expert colocated per slot
     schedules: tuple[CommSchedule, ...]       # per layer, dispatch phase
     predicted: SimResult
+    # N-tenant plans (scenario "multi+..."): groups[g][t] = tenant-t expert
+    # on slot g, tenant 0 the identity anchor. For two tenants this carries
+    # the same information as ``pair`` (groups[g] == (g, pair[g])).
+    groups: tuple[tuple[int, ...], ...] | None = None
 
     @property
     def n_layers(self) -> int:
         return len(self.schedules)
+
+    @property
+    def n_tenants(self) -> int:
+        if self.groups is not None:
+            return len(self.groups[0])
+        return 2 if self.pair is not None else 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -203,4 +215,83 @@ class AuroraPlanner:
             colocated_inference_time(trace_a, trace_b, l, cl, list(pair),
                                      s2d, policy="aurora")
             for l in range(len(trace_a.layers))
+        ])
+
+    # -- multi-tenant colocation (N >= 2) ------------------------------------
+    def plan_multi(self, traces: list[MoETrace]) -> Plan:
+        """N-tenant colocation plan: greedy k-way grouping (§7.2 decoupling
+        applied tenant-by-tenant), then — heterogeneous only — group↔device
+        bottleneck matching with the same inference-time edge weight as
+        scenario 4. For two tenants this reproduces ``plan_colocated``.
+        """
+        cl = self.cluster
+        nt = len(traces)
+        if nt < 2:
+            raise ValueError("plan_multi needs at least two tenants "
+                             "(use plan_exclusive for one)")
+        n = traces[0].n
+        if any(tr.n != n for tr in traces):
+            raise ValueError("all tenants must have equal expert counts")
+        means = [np.mean([tr.layer(l) for l in range(len(tr.layers))], axis=0)
+                 for tr in traces]
+        if cl.homogeneous:
+            scenario = "multi+homogeneous"
+            groups = aurora_grouping(means)
+            s2d = np.arange(n)
+        else:
+            scenario = "multi+heterogeneous"
+            groups = aurora_grouping(means, use_case1=False)
+            # Group↔device matching: the group's inference-time contribution
+            # on a device is its combined compute (all tenants' gate + agg +
+            # token-scaled FFN) over the device's compute, plus its send/recv
+            # bottleneck over the device's bandwidth — scenario 4's weight
+            # with the pair replaced by the k-group.
+            d_agg = aggregate_traffic_multi(means, groups)
+            send = d_agg.sum(axis=1)
+            recv = d_agg.sum(axis=0)
+            perms = group_pairs(groups)
+            comp_fixed = sum(tr.gate + tr.agg for tr in traces)
+            comp_tok = sum(
+                traces[t].ffn_per_token
+                * expert_loads(means[t])[np.asarray(perms[t])]
+                for t in range(nt))
+            w = np.empty((n, n))
+            for k in range(n):
+                for dev in range(n):
+                    dt = cl.devices[dev]
+                    w[k, dev] = ((comp_fixed + comp_tok[k]) / dt.compute
+                                 + max(send[k], recv[k]) / dt.bandwidth)
+            match, _ = bottleneck_perfect_matching(w)
+            s2d = np.asarray(match)
+        bw = np.asarray(cl.bandwidths, float)
+        schedules = tuple(
+            aurora_schedule(
+                apply_assignment(
+                    aggregate_traffic_multi(
+                        [tr.layer(l) for tr in traces], groups),
+                    s2d),
+                bw)
+            for l in range(len(traces[0].layers))
+        )
+        pred = self.evaluate_multi(traces, groups,
+                                   None if cl.homogeneous else s2d)
+        pair = [g[1] for g in groups] if nt == 2 else None
+        return Plan(scenario, np.arange(n) if cl.homogeneous else s2d,
+                    pair, schedules, pred, groups=tuple(groups))
+
+    def evaluate_multi(self, traces: list[MoETrace],
+                       groups: list[tuple[int, ...]],
+                       slot_to_device: np.ndarray | None = None) -> SimResult:
+        """Predicted inference time of an EXISTING grouping on (possibly new)
+        traces — ``evaluate_colocated`` generalized to N tenants; the scoring
+        leg of online re-grouping."""
+        cl = self.cluster
+        n = traces[0].n
+        s2d = (np.arange(n) if slot_to_device is None
+               else np.asarray(slot_to_device))
+        return _mean_sim([
+            multi_colocated_inference_time(traces, l, cl,
+                                           [tuple(g) for g in groups],
+                                           s2d, policy="aurora")
+            for l in range(len(traces[0].layers))
         ])

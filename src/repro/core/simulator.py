@@ -30,7 +30,7 @@ import numpy as np
 
 from .assignment import apply_assignment
 from .cluster import Cluster
-from .colocation import aggregate_traffic, lina_packing
+from .colocation import aggregate_traffic, aggregate_traffic_multi, lina_packing
 from .schedule import comm_time
 from .traffic import MoETrace, strip_diagonal
 
@@ -151,6 +151,121 @@ def colocated_inference_time(
     return SimResult(t, util, dict(
         Na=na, Nb=nb, Nagg=n_agg, Ca=ca, Cb=cb,
         E_Fa=e_fa, E_Fb=e_fb, E_Ab=e_ab,
+    ))
+
+
+def multi_colocated_inference_time(
+    traces: list[MoETrace],
+    layer: int,
+    cluster: Cluster,
+    groups: list[tuple[int, ...]],
+    slot_to_device: np.ndarray | None = None,
+    policy: str = "aurora",
+    seed: int = 0,
+) -> SimResult:
+    """N tenants colocated, one expert of each per device.
+
+    The Table-2 recurrence generalizes phase-by-phase. Tenants are indexed
+    m = 0..T-1 in interleave order; slot g hosts expert ``groups[g][m]`` of
+    tenant m. On the shared network, dispatches serialize and the §6.2
+    merged-traffic law gives ``End(N^m) = |overline{N^0+..+N^m}|`` (prefix
+    aggregates), floored by the producing gate plus the tenant's own
+    dispatch; the return all-to-alls likewise complete at
+    ``End(N^{T-1}) + |overline{C^0+..+C^m}|``, floored by their producing
+    FFN and the previous combine. On the shared compute, gates of tenants
+    1..T-1 run during tenant 0's dispatch, then FFNs and aggregations chain
+    in tenant order — the T-fold version of "one model computes while the
+    others communicate". For T == 2 this reduces term-for-term to
+    ``colocated_inference_time`` (exactly equal under deterministic
+    policies; the seeded ``rcs`` policy draws its random orders from a
+    different seed layout).
+    """
+    tmats = [tr.layer(layer) for tr in traces]
+    nt = len(traces)
+    if nt < 1:
+        raise ValueError("need at least one tenant")
+    n = tmats[0].shape[0]
+    for d in tmats:
+        if d.shape[0] != n:
+            raise ValueError(
+                "colocated tenants must have equal expert counts (§6 fn 3)")
+    if cluster.n != n:
+        raise ValueError("one device per expert group required")
+    if len(groups) != n or any(len(g) != nt for g in groups):
+        raise ValueError(f"groups must be {n} tuples of {nt} experts")
+    s2d = (np.arange(n) if slot_to_device is None
+           else np.asarray(slot_to_device))
+    bw, comp = _device_arrays(cluster)
+
+    # Per-tenant device-space matrices and their prefix aggregates.
+    devs, prefixes = [], []
+    run = np.zeros((n, n))
+    for m in range(nt):
+        p = np.asarray([g[m] for g in groups])
+        d_dev = apply_assignment(tmats[m][np.ix_(p, p)], s2d)
+        devs.append(d_dev)
+        run = run + d_dev
+        prefixes.append(run.copy())
+
+    n_own = [comm_time(devs[m], policy, bw, seed=seed + 2 * m)
+             for m in range(nt)]
+    c_own = [comm_time(devs[m].T, policy, bw, seed=seed + 2 * m + 1)
+             for m in range(nt)]
+    # prefixes[0] IS devs[0]: reuse its times so stochastic policies (rcs)
+    # don't draw two different samples of the same all-to-all.
+    n_pref = [n_own[0]] + [
+        comm_time(prefixes[m], policy, bw, seed=seed + 2 * nt + m)
+        for m in range(1, nt)]
+    c_pref = [c_own[0]] + [
+        comm_time(prefixes[m].T, policy, bw, seed=seed + 3 * nt + m)
+        for m in range(1, nt)]
+
+    # Per-device compute times (reference-device times scaled by 1/compute).
+    gate = [tr.gate / comp for tr in traces]
+    ffn = [traces[m].ffn_time(strip_diagonal(devs[m]).sum(axis=0)) / comp
+           for m in range(nt)]
+    agg_t = [tr.agg / comp for tr in traces]
+    g_max = [float(g.max()) for g in gate]
+    f_max = [float(f.max()) for f in ffn]
+    a_max = [float(a.max()) for a in agg_t]
+
+    # Gates of tenants 1.. chain on the shared compute during N^0.
+    e_g = [0.0] * nt
+    for m in range(1, nt):
+        e_g[m] = e_g[m - 1] + g_max[m]
+    # Dispatches: prefix-aggregated completion, floored by the gate producer.
+    e_n = [max(n_pref[m], e_g[m] + n_own[m]) for m in range(nt)]
+    # FFNs chain after the last gate, each gated on its own dispatch.
+    e_f = [0.0] * nt
+    prev = e_g[nt - 1]
+    for m in range(nt):
+        e_f[m] = max(prev, e_n[m]) + f_max[m]
+        prev = e_f[m]
+    # Combines: network frees at End(N^{T-1}); prefix-aggregated, floored by
+    # the producing FFN and ordered after the previous combine.
+    e_c = [0.0] * nt
+    prev = 0.0
+    for m in range(nt):
+        e_c[m] = max(e_n[nt - 1] + c_pref[m], e_f[m] + c_own[m], prev)
+        prev = e_c[m]
+    # Aggregations chain after the last FFN, each gated on its own combine.
+    e_a = [0.0] * nt
+    prev = e_f[nt - 1]
+    for m in range(nt):
+        e_a[m] = max(prev, e_c[m]) + a_max[m]
+        prev = e_a[m]
+    t = e_a[nt - 1] + g_max[0]        # Eqn 4: + |G^0| of the next round
+
+    busy = np.zeros(n)
+    for m in range(nt):
+        busy = busy + gate[m] + ffn[m] + agg_t[m]
+    util = float(np.mean(busy / t)) if t > 0 else 1.0
+    agg_all = aggregate_traffic_multi(tmats, groups)
+    return SimResult(t, util, dict(
+        n_tenants=nt, N=n_own, C=c_own, N_prefix=n_pref, C_prefix=c_pref,
+        E_N=e_n, E_F=e_f, E_C=e_c, E_A=e_a,
+        agg_bmax=comm_time(apply_assignment(agg_all, s2d), policy, bw,
+                           seed=seed + 4 * nt),
     ))
 
 

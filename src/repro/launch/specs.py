@@ -114,7 +114,6 @@ def make_step_fns(cfg, mesh, moe_impl: str = "ep", aurora_rounds=None,
         pc = _dc.replace(pc, unroll_segments=True)
     model = Model(cfg, pc)
     from repro.training.loop import make_train_step
-    from repro.models import cross_entropy
 
     opt_cfg = opt_config_for(cfg)
     train_step = make_train_step(model, opt_cfg)

@@ -8,7 +8,6 @@ dicts of ``jnp.ndarray``; an optional ``ParallelContext`` adds
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable
 
 import jax

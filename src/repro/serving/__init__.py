@@ -1,15 +1,17 @@
-"""Serving: static + continuous single-model engines, Aurora dual-model
-colocation (static + continuous), live traffic monitoring + online
-re-planning."""
+"""Serving: static + continuous single-model engines, Aurora colocation
+(dual-model static + continuous, N-tenant continuous), live traffic
+monitoring + online re-planning/re-grouping."""
 
 from .engine import (ContinuousEngine, Request, ServingEngine,
                      make_bucketer, poisson_requests, serve_stream)
 from .colocated import (ColocatedContinuousEngine, ColocatedEngine,
-                        apply_pairing, inverse_pair)
+                        MultiTenantContinuousEngine, apply_pairing,
+                        build_lockstep_step, inverse_pair)
 from .monitor import OnlineReplanner, ReplanEvent, TrafficMonitor
 
 __all__ = ["Request", "ServingEngine", "ContinuousEngine",
            "ColocatedEngine", "ColocatedContinuousEngine",
-           "apply_pairing", "inverse_pair", "make_bucketer",
+           "MultiTenantContinuousEngine", "apply_pairing",
+           "build_lockstep_step", "inverse_pair", "make_bucketer",
            "poisson_requests", "serve_stream", "TrafficMonitor",
            "OnlineReplanner", "ReplanEvent"]

@@ -61,6 +61,33 @@ def inverse_pair(pair: list[int]) -> list[int]:
     return inv
 
 
+def build_lockstep_step(models: list[Model], collect_stats: bool,
+                        jit: bool = True):
+    """One fused decode step over N tenants — the Fig 3(b) interleave for
+    any tenant count: every tenant's dispatch collectives and every other
+    tenant's compute live in the same XLA program, so the latency-hiding
+    scheduler overlaps them.
+
+    Returns ``step(params_list, tokens_list, caches_list)`` yielding
+    ``(logits_list, caches_list)`` — plus a per-tenant routing-stats list
+    when ``collect_stats`` (the live traffic signal for re-planning). The
+    caches list is donated; the compiled program is shared by the dual-model
+    and N-tenant engines.
+    """
+    if collect_stats:
+        def step(params, tokens, caches):
+            outs = [m.decode_step_stats(p, t, c)
+                    for m, p, t, c in zip(models, params, tokens, caches)]
+            return ([o[0] for o in outs], [o[1] for o in outs],
+                    [o[2] for o in outs])
+    else:
+        def step(params, tokens, caches):
+            outs = [m.decode_step(p, t, c)
+                    for m, p, t, c in zip(models, params, tokens, caches)]
+            return [o[0] for o in outs], [o[1] for o in outs]
+    return jax.jit(step, donate_argnums=(2,)) if jit else step
+
+
 @dataclasses.dataclass
 class ColocatedEngine:
     """Serve two models on one mesh with interleaved steps."""
@@ -155,6 +182,10 @@ class ColocatedContinuousEngine:
                 raise ValueError(
                     "online re-planning needs two MoE models with equal "
                     "expert counts (the pairing is expert<->expert)")
+            if model_a.n_moe_layers != model_b.n_moe_layers:
+                raise ValueError(
+                    "online re-planning needs equal MoE layer counts "
+                    "(the planner simulates the traces layer-by-layer)")
             self.monitor_a = TrafficMonitor(
                 ca.moe.n_experts, model_a.n_moe_layers, name=ca.arch_id,
                 halflife=monitor_halflife)
@@ -184,20 +215,9 @@ class ColocatedContinuousEngine:
                                        cache_cap, monitor=self.monitor_b,
                                        **kw)
 
-        if replan is not None:
-            def step(params_a, params_b, tok_a, tok_b, cache_a, cache_b):
-                la, cache_a, sa = model_a.decode_step_stats(
-                    params_a, tok_a, cache_a)
-                lb, cache_b, sb = model_b.decode_step_stats(
-                    params_b, tok_b, cache_b)
-                return la, lb, cache_a, cache_b, sa, sb
-        else:
-            def step(params_a, params_b, tok_a, tok_b, cache_a, cache_b):
-                la, cache_a = model_a.decode_step(params_a, tok_a, cache_a)
-                lb, cache_b = model_b.decode_step(params_b, tok_b, cache_b)
-                return la, lb, cache_a, cache_b
-
-        self._step = (jax.jit(step, donate_argnums=(4, 5)) if jit else step)
+        self._step = build_lockstep_step([model_a, model_b],
+                                         collect_stats=replan is not None,
+                                         jit=jit)
         self.decode_steps = 0
 
     @property
@@ -230,14 +250,15 @@ class ColocatedContinuousEngine:
         if self.replan is not None:
             mask_a = np.array([r is not None for r in a.slots], bool)
             mask_b = np.array([r is not None for r in b.slots], bool)
-            la, lb, a.cache, b.cache, sa, sb = self._step(
-                a.params, b.params, a.tokens, b.tokens, a.cache, b.cache)
+            (la, lb), (a.cache, b.cache), (sa, sb) = self._step(
+                [a.params, b.params], [a.tokens, b.tokens],
+                [a.cache, b.cache])
             self.monitor_a.observe(sa, mask_a)
             self.monitor_b.observe(sb, mask_b)
         else:
-            la, lb, a.cache, b.cache = self._step(a.params, b.params,
-                                                  a.tokens, b.tokens,
-                                                  a.cache, b.cache)
+            (la, lb), (a.cache, b.cache) = self._step(
+                [a.params, b.params], [a.tokens, b.tokens],
+                [a.cache, b.cache])
         self.decode_steps += 1
         a._postdecode(la)
         b._postdecode(lb)
@@ -253,3 +274,178 @@ class ColocatedContinuousEngine:
         serve_stream(self.step, [(self.pool_a, reqs_a),
                                  (self.pool_b, reqs_b)])
         return reqs_a, reqs_b
+
+
+class MultiTenantContinuousEngine:
+    """Continuous batching over N >= 2 colocated tenants.
+
+    The dual-model engine generalized: one ``ContinuousEngine`` slot pool per
+    tenant, each admitting from its own queue under the shared chunked-
+    prefill budget scheduler, all decoding in lockstep through ONE fused
+    jitted step (``build_lockstep_step``) — N tenants' collectives and
+    compute in a single XLA program, so any tenant's dispatch overlaps the
+    others' FFNs (the paper's §6 insight, N-fold).
+
+    ``groups[g] = (e_0, .., e_{N-1})`` is the planner's k-way colocation
+    choice (``AuroraPlanner.plan_multi``): tenant t's expert ``groups[g][t]``
+    occupies device slot g, tenant 0 anchoring the slots
+    (``groups[g][0] == g``). The grouping is REALIZED by the caller permuting
+    tenant t's params with ``apply_pairing(params_t, [g[t] for g in groups])``
+    for t >= 1 — placement-only, so any grouping serves identical tokens.
+
+    With ``replan=OnlineReplanner(...)`` every tenant harvests live routing
+    counts into its own ``TrafficMonitor`` and the planner periodically
+    re-groups from the N live traces (``OnlineReplanner.maybe_regroup``);
+    an adopted grouping is applied in place per tenant via
+    ``inverse_pair`` + ``apply_pairing`` — again placement-only, token
+    streams provably unchanged.
+    """
+
+    def __init__(self, models: list[Model], params: list, batch_slots: int,
+                 cache_cap: int, prefill_len: int | None = None,
+                 jit: bool = True, prefill_chunk: int | None = None,
+                 step_token_budget: int | None = None,
+                 bucket_policy="pow2",
+                 groups: list[tuple[int, ...]] | None = None,
+                 replan=None, monitor_halflife: float = 128.0):
+        from .engine import ContinuousEngine
+        from .monitor import TrafficMonitor
+
+        if len(models) < 2:
+            raise ValueError("MultiTenantContinuousEngine needs >= 2 tenants "
+                             "(use ContinuousEngine for one)")
+        if len(params) != len(models):
+            raise ValueError("one params tree per model required")
+        self.models = list(models)
+        self.n_tenants = len(models)
+        self.replan = replan
+        self.monitors = None
+        if replan is not None:
+            cfgs = [m.cfg for m in models]
+            if (any(c.moe is None for c in cfgs)
+                    or len({c.moe.n_experts for c in cfgs}) != 1):
+                raise ValueError(
+                    "online re-grouping needs MoE tenants with equal expert "
+                    "counts (the grouping is expert<->expert)")
+            if len({m.n_moe_layers for m in models}) != 1:
+                raise ValueError(
+                    "online re-grouping needs equal MoE layer counts "
+                    "(the planner simulates the traces layer-by-layer)")
+            self.monitors = [
+                TrafficMonitor(c.moe.n_experts, m.n_moe_layers,
+                               name=f"{c.arch_id}#{t}",
+                               halflife=monitor_halflife)
+                for t, (m, c) in enumerate(zip(models, cfgs))]
+        # The grouping currently REALIZED in the tenants' params (identity
+        # unless the caller already applied a plan) — what a re-group must
+        # undo, per tenant.
+        n_e = models[0].cfg.moe.n_experts if models[0].cfg.moe else 0
+        if groups is None:
+            groups = [(g,) * self.n_tenants for g in range(n_e)]
+        self.groups = [tuple(g) for g in groups]
+        if n_e and len(self.groups) != n_e:
+            raise ValueError(f"{len(self.groups)} groups for {n_e} experts "
+                             "(one device slot per expert group)")
+        for g, grp in enumerate(self.groups):
+            if len(grp) != self.n_tenants:
+                raise ValueError(f"group {g} has {len(grp)} entries for "
+                                 f"{self.n_tenants} tenants")
+            if grp[0] != g:
+                raise ValueError("tenant 0 anchors the slots: "
+                                 f"groups[{g}][0] must be {g}, got {grp[0]}")
+        for t in range(1, self.n_tenants):
+            if sorted(g[t] for g in self.groups) != list(
+                    range(len(self.groups))):
+                raise ValueError(f"tenant {t}'s column is not a permutation "
+                                 "of the expert ids (each expert must sit "
+                                 "on exactly one slot)")
+        self.plan = None                        # last adopted online plan
+        if self.monitors is not None:
+            # Permuted tenants' routing stats arrive in SLOT space; each
+            # monitor translates back to original expert ids (tenant 0 is
+            # the identity anchor and needs no translation).
+            for t in range(1, self.n_tenants):
+                self.monitors[t].slot_to_expert = [g[t] for g in self.groups]
+
+        kw = dict(prefill_len=prefill_len, jit=jit,
+                  prefill_chunk=prefill_chunk,
+                  step_token_budget=step_token_budget,
+                  bucket_policy=bucket_policy)
+        self.pools = [
+            ContinuousEngine(m, p, batch_slots, cache_cap,
+                             monitor=(self.monitors[t] if self.monitors
+                                      else None), **kw)
+            for t, (m, p) in enumerate(zip(models, params))]
+        self._step = build_lockstep_step(self.models,
+                                         collect_stats=replan is not None,
+                                         jit=jit)
+        self.decode_steps = 0
+
+    @property
+    def replan_events(self) -> list:
+        return [] if self.replan is None else self.replan.events
+
+    def tenant_pair(self, t: int) -> list[int]:
+        """Slot->expert permutation realized for tenant t."""
+        return [g[t] for g in self.groups]
+
+    def _maybe_regroup(self) -> None:
+        new = self.replan.maybe_regroup(self.decode_steps, self.monitors,
+                                        self.groups)
+        if new is None:
+            return
+        # Placement-only re-group: per tenant, undo the realized permutation
+        # and apply the new one. Param shapes are unchanged, so the fused
+        # step does not recompile and in-flight token streams are unaffected.
+        new_groups = [tuple(g) for g in new.groups]
+        for t in range(1, self.n_tenants):
+            old_p = self.tenant_pair(t)
+            new_p = [g[t] for g in new_groups]
+            if old_p == new_p:
+                continue
+            cfg = self.models[t].cfg
+            restored = apply_pairing(self.pools[t].params,
+                                     inverse_pair(old_p), cfg)
+            self.pools[t].params = apply_pairing(restored, new_p, cfg)
+            self.monitors[t].slot_to_expert = new_p
+        self.groups = new_groups
+        self.plan = new
+
+    def step(self) -> bool:
+        """Admit into every pool, then one fused lockstep decode."""
+        worked = [p._admit_tick() for p in self.pools]
+        if all(p.num_active == 0 for p in self.pools):
+            return any(worked)
+        if self.replan is not None:
+            masks = [np.array([r is not None for r in p.slots], bool)
+                     for p in self.pools]
+            logits, caches, stats = self._step(
+                [p.params for p in self.pools],
+                [p.tokens for p in self.pools],
+                [p.cache for p in self.pools])
+            for mon, s, mask in zip(self.monitors, stats, masks):
+                mon.observe(s, mask)
+        else:
+            logits, caches = self._step(
+                [p.params for p in self.pools],
+                [p.tokens for p in self.pools],
+                [p.cache for p in self.pools])
+        for p, c in zip(self.pools, caches):
+            p.cache = c
+        self.decode_steps += 1
+        for p, lg in zip(self.pools, logits):
+            p._postdecode(lg)
+        if self.replan is not None:
+            self._maybe_regroup()
+        return True
+
+    def serve(self, streams: list[list]) -> list[list]:
+        """Run one request stream per tenant to completion
+        (``Request.arrival`` in lockstep-step units)."""
+        from .engine import serve_stream
+
+        if len(streams) != self.n_tenants:
+            raise ValueError(f"{self.n_tenants} tenants need "
+                             f"{self.n_tenants} request streams")
+        serve_stream(self.step, list(zip(self.pools, streams)))
+        return streams

@@ -88,11 +88,14 @@ class ReplanEvent:
     """One re-plan decision point (kept on ``OnlineReplanner.events``)."""
 
     step: int
-    stale_time: float          # current pairing re-simulated on live trace
+    stale_time: float          # current placement re-simulated on live trace
     candidate_time: float      # fresh plan's prediction on the same trace
-    pair: list[int]            # candidate pairing
+    pair: list[int]            # candidate pairing (2-tenant view)
     applied: bool
-    baseline_time: float | None = None   # frozen baseline_pair on same trace
+    baseline_time: float | None = None   # frozen baseline on same trace
+    # N-tenant re-grouping events carry the full candidate grouping
+    # (groups[g][t] = tenant-t expert on slot g); None for pair events.
+    groups: list[tuple[int, ...]] | None = None
 
 
 class OnlineReplanner:
@@ -109,7 +112,8 @@ class OnlineReplanner:
     def __init__(self, planner: AuroraPlanner, interval: int = 64,
                  threshold: float = 0.02, warmup: int | None = None,
                  tokens_per_device: float = 1024.0,
-                 baseline_pair: list[int] | None = None):
+                 baseline_pair: list[int] | None = None,
+                 baseline_groups: list[tuple[int, ...]] | None = None):
         if interval <= 0:
             raise ValueError("interval must be positive")
         self.planner = planner
@@ -120,8 +124,12 @@ class OnlineReplanner:
         # Optional frozen reference placement (e.g. the historical plan):
         # scored on the live trace at every checkpoint, so a benchmark can
         # compare the adaptive trajectory against never-replanning at all.
+        # ``baseline_pair`` for the 2-tenant pairing loop, ``baseline_groups``
+        # for the N-tenant re-grouping loop.
         self.baseline_pair = (None if baseline_pair is None
                               else list(baseline_pair))
+        self.baseline_groups = (None if baseline_groups is None
+                                else [tuple(g) for g in baseline_groups])
         self.events: list[ReplanEvent] = []
 
     def maybe_replan(self, step: int, monitor_a: TrafficMonitor,
@@ -150,4 +158,44 @@ class OnlineReplanner:
             step=step, stale_time=stale.inference_time,
             candidate_time=cand.predicted.inference_time,
             pair=list(cand.pair), applied=apply, baseline_time=base_t))
+        return cand if apply else None
+
+    def maybe_regroup(self, step: int, monitors: list[TrafficMonitor],
+                      current_groups: list[tuple[int, ...]]) -> Plan | None:
+        """N-tenant ``maybe_replan``: plan a fresh k-way grouping from the N
+        live traces and compare it against the CURRENT grouping evaluated on
+        the same traces. Returns the new plan to apply, or None to keep."""
+        if step == 0 or step % self.interval:
+            return None
+        if min(m.observations for m in monitors) < self.warmup:
+            return None
+        traces = [m.trace(tokens_per_device=self.tokens_per_device)
+                  for m in monitors]
+        cur = [tuple(g) for g in current_groups]
+        stale = self.planner.evaluate_multi(traces, cur)
+        cand = self.planner.plan_multi(traces)
+        cand_groups = [tuple(g) for g in cand.groups]
+        # Score the candidate under the IDENTITY slot->device assignment —
+        # what the engine actually realizes (re-grouping is placement-only;
+        # it never re-matches groups to devices). On homogeneous clusters
+        # this equals cand.predicted; on heterogeneous ones cand.predicted
+        # includes an unapplied device re-matching and would let phantom
+        # improvement defeat the hysteresis.
+        cand_time = self.planner.evaluate_multi(
+            traces, cand_groups).inference_time
+        diff = PlanDiff(
+            pair_changed=cand_groups != cur,
+            assignment_changed=False,     # placement-only re-grouping
+            old_time=stale.inference_time,
+            new_time=cand_time)
+        apply = diff.pair_changed and diff.rel_improvement > self.threshold
+        base_t = None
+        if self.baseline_groups is not None:
+            base_t = self.planner.evaluate_multi(
+                traces, self.baseline_groups).inference_time
+        self.events.append(ReplanEvent(
+            step=step, stale_time=stale.inference_time,
+            candidate_time=cand_time,
+            pair=list(cand.pair) if cand.pair is not None else [],
+            applied=apply, baseline_time=base_t, groups=cand_groups))
         return cand if apply else None

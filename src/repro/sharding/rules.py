@@ -25,8 +25,7 @@ every rule is divisibility-checked against actual leaf shapes.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.models import transformer as tf
 from repro.models.layers import ParallelContext

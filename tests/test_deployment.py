@@ -10,10 +10,9 @@ from repro.core import (AuroraPlanner, Cluster, PAPER_HET_TIERS,
                         aurora_assignment, bruteforce_colocated,
                         bruteforce_exclusive, case1_pairing, case2_pairing,
                         colocated_inference_time, exclusive_inference_time,
-                        heterogeneous_cluster, homogeneous_cluster,
+                        homogeneous_cluster,
                         lina_packing, synthetic_trace)
 from repro.core.colocation import aggregate_traffic, send_recv_vectors
-from repro.core.traffic import strip_diagonal
 
 
 def small_trace(n, seed, tokens=1024.0, skew=0.5):

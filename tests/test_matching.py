@@ -12,7 +12,6 @@ from repro.core.matching import (bottleneck_perfect_matching, hopcroft_karp,
 
 def brute_max_matching(adj, n_left, n_right):
     best = 0
-    rights = list(range(n_right))
     def rec(u, used):
         nonlocal best
         if u == n_left:

@@ -1,0 +1,281 @@
+"""Multi-tenant (N > 2) colocation: k-way grouping, the N-way phase
+simulator, plan_multi, the MultiTenantContinuousEngine, and the
+placement-only re-grouping invariant.
+
+The anchor property throughout: at N = 2 every multi-tenant code path must
+reduce EXACTLY to the existing pair path (same grouping, same predicted
+times, token-identical streams) — the generalization adds scenarios, never
+changes the ones the paper validates.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (AuroraPlanner, aggregate_traffic,
+                        aggregate_traffic_multi, aurora_grouping,
+                        aurora_pairing, colocated_inference_time,
+                        group_pairs, homogeneous_cluster,
+                        multi_colocated_inference_time, random_grouping,
+                        synthetic_trace)
+from repro.core.cluster import Cluster, V50G, V100G
+from repro.models import Model
+from repro.serving import (ColocatedContinuousEngine, ContinuousEngine,
+                           MultiTenantContinuousEngine, OnlineReplanner,
+                           Request, apply_pairing)
+
+
+def _model(arch, seed=0):
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+def _requests(n=4, seed=0, max_new=4):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=list(rng.integers(1, 500, 6)),
+                    max_new_tokens=max_new, arrival=float(i))
+            for i in range(n)]
+
+
+def _traces(k, n_experts=6, seed=0):
+    return [synthetic_trace(f"t{i}", n_experts=n_experts, n_layers=2,
+                            skew=0.3 + 0.4 * i, seed=seed + 13 * i)
+            for i in range(k)]
+
+
+# -- grouping ---------------------------------------------------------------
+
+def test_grouping_n2_reduces_to_pairing():
+    ta, tb = _traces(2)
+    ma, mb = np.mean(ta.layers, axis=0), np.mean(tb.layers, axis=0)
+    groups = aurora_grouping([ma, mb])
+    pair = aurora_pairing(ma, mb)
+    assert [g[0] for g in groups] == list(range(ta.n))
+    assert [g[1] for g in groups] == list(pair)
+    np.testing.assert_allclose(aggregate_traffic_multi([ma, mb], groups),
+                               aggregate_traffic(ma, mb, pair))
+
+
+def test_grouping_structure_and_validation():
+    mats = [np.mean(t.layers, axis=0) for t in _traces(3)]
+    groups = aurora_grouping(mats)
+    n = mats[0].shape[0]
+    assert len(groups) == n and all(len(g) == 3 for g in groups)
+    # Each tenant's experts form a permutation across the groups.
+    for t in range(3):
+        assert sorted(g[t] for g in groups) == list(range(n))
+    perms = group_pairs(groups)
+    assert perms[0] == list(range(n))
+    with pytest.raises(ValueError):
+        aurora_grouping([])
+    with pytest.raises(ValueError):
+        aurora_grouping([mats[0], mats[1][:4, :4]])
+
+
+def test_random_grouping_anchors_tenant0():
+    groups = random_grouping(6, 4, seed=1)
+    assert [g[0] for g in groups] == list(range(6))
+    for t in range(4):
+        assert sorted(g[t] for g in groups) == list(range(6))
+
+
+# -- N-way simulator --------------------------------------------------------
+
+def test_multi_sim_n2_matches_colocated():
+    ta, tb = _traces(2)
+    cl = homogeneous_cluster(ta.n)
+    pair = aurora_pairing(np.mean(ta.layers, axis=0),
+                          np.mean(tb.layers, axis=0))
+    groups = [(g, pair[g]) for g in range(ta.n)]
+    for layer in range(2):
+        r2 = colocated_inference_time(ta, tb, layer, cl, pair)
+        rm = multi_colocated_inference_time([ta, tb], layer, cl, groups)
+        assert rm.inference_time == pytest.approx(r2.inference_time)
+        assert rm.utilization == pytest.approx(r2.utilization)
+
+
+def test_multi_sim_more_tenants_cost_more_but_overlap():
+    """Adding a tenant adds its traffic and compute, so time grows — but by
+    less than the tenant's standalone cost (the overlap is real)."""
+    traces = _traces(3)
+    cl = homogeneous_cluster(traces[0].n)
+    g2 = aurora_grouping([np.mean(t.layers, axis=0) for t in traces[:2]])
+    g3 = aurora_grouping([np.mean(t.layers, axis=0) for t in traces])
+    t2 = multi_colocated_inference_time(traces[:2], 0, cl, g2).inference_time
+    t3 = multi_colocated_inference_time(traces, 0, cl, g3).inference_time
+    solo = multi_colocated_inference_time(
+        [traces[2]], 0, cl, [(g,) for g in range(traces[2].n)]).inference_time
+    assert t3 > t2
+    assert t3 < t2 + solo
+
+
+def test_multi_sim_validates():
+    traces = _traces(2)
+    cl = homogeneous_cluster(traces[0].n)
+    with pytest.raises(ValueError):
+        multi_colocated_inference_time([], 0, cl, [])
+    with pytest.raises(ValueError):        # wrong group arity
+        multi_colocated_inference_time(
+            traces, 0, cl, [(g,) for g in range(traces[0].n)])
+
+
+# -- planner ----------------------------------------------------------------
+
+def test_plan_multi_n2_matches_plan_colocated_homogeneous():
+    ta, tb = _traces(2)
+    planner = AuroraPlanner(homogeneous_cluster(ta.n))
+    p_co = planner.plan_colocated(ta, tb)
+    p_mu = planner.plan_multi([ta, tb])
+    assert p_mu.scenario == "multi+homogeneous"
+    assert list(p_mu.pair) == list(p_co.pair)
+    assert [g[1] for g in p_mu.groups] == list(p_co.pair)
+    assert p_mu.predicted.inference_time == pytest.approx(
+        p_co.predicted.inference_time)
+    assert p_mu.n_tenants == 2
+
+
+def test_plan_multi_n2_matches_plan_colocated_heterogeneous():
+    ta, tb = _traces(2)
+    cl = Cluster(devices=(V100G,) * 3 + (V50G,) * 3)
+    planner = AuroraPlanner(cl)
+    p_co = planner.plan_colocated(ta, tb)
+    p_mu = planner.plan_multi([ta, tb])
+    assert p_mu.scenario == "multi+heterogeneous"
+    assert list(p_mu.pair) == list(p_co.pair)
+    np.testing.assert_array_equal(p_mu.expert_to_device,
+                                  p_co.expert_to_device)
+    assert p_mu.predicted.inference_time == pytest.approx(
+        p_co.predicted.inference_time)
+
+
+def test_plan_multi_beats_random_grouping_n3():
+    """The bench gate's configuration: on skew-diverse tenants the greedy
+    grouping must predict faster than the random-grouping mean. (Greedy is
+    a heuristic — on near-uniform traffic a lucky random draw can match it,
+    so this pins the skewed regime the paper targets.)"""
+    traces = [synthetic_trace(f"tenant{t}", n_experts=8, n_layers=2,
+                              skew=0.3 + 0.5 * t, seed=17 * t)
+              for t in range(3)]
+    planner = AuroraPlanner(homogeneous_cluster(8))
+    plan = planner.plan_multi(traces)
+    rand = [planner.evaluate_multi(traces, random_grouping(8, 3, seed=s))
+            .inference_time for s in range(6)]
+    assert plan.predicted.inference_time <= np.mean(rand) + 1e-9
+    # evaluate_multi on the planned grouping reproduces the prediction
+    ev = planner.evaluate_multi(traces, list(plan.groups))
+    assert ev.inference_time == pytest.approx(plan.predicted.inference_time)
+
+
+def test_plan_multi_validates():
+    planner = AuroraPlanner(homogeneous_cluster(6))
+    with pytest.raises(ValueError):
+        planner.plan_multi([_traces(1)[0]])
+
+
+# -- engine -----------------------------------------------------------------
+
+def test_multi_engine_n2_token_identical_to_colocated():
+    """The satellite equivalence: N=2 MultiTenantContinuousEngine under the
+    planner's grouping emits exactly the dual-model engine's streams."""
+    cfg_a, ma, pa = _model("phi3.5-moe-42b-a6.6b", seed=0)
+    cfg_b, mb, pb = _model("phi3.5-moe-42b-a6.6b", seed=1)
+    pair0 = [2, 0, 3, 1]
+    pb_paired = apply_pairing(pb, pair0, cfg_b)
+    mk = lambda s, n: _requests(n, seed=s)
+
+    co = ColocatedContinuousEngine(ma, mb, pa, pb_paired, 2, 32,
+                                   prefill_len=6, pair=pair0)
+    ca, cb = co.serve(mk(1, 3), mk(2, 2))
+    mu = MultiTenantContinuousEngine(
+        [ma, mb], [pa, pb_paired], 2, 32, prefill_len=6,
+        groups=[(g, pair0[g]) for g in range(4)])
+    sa, sb = mu.serve([mk(1, 3), mk(2, 2)])
+    assert [r.out_tokens for r in sa] == [r.out_tokens for r in ca]
+    assert [r.out_tokens for r in sb] == [r.out_tokens for r in cb]
+
+
+def test_multi_engine_n3_matches_solo_pools():
+    ms, ps = [], []
+    for s in range(3):
+        _, m, p = _model("phi3.5-moe-42b-a6.6b", seed=s)
+        ms.append(m)
+        ps.append(p)
+    eng = MultiTenantContinuousEngine(ms, ps, 2, 32, prefill_len=6)
+    streams = eng.serve([_requests(3, 1), _requests(2, 2), _requests(3, 3)])
+    for t, reqs_seed in enumerate([(3, 1), (2, 2), (3, 3)]):
+        solo = ContinuousEngine(ms[t], ps[t], 2, 32, prefill_len=6).serve(
+            _requests(*reqs_seed))
+        assert ([r.out_tokens for r in streams[t]]
+                == [r.out_tokens for r in solo]), f"tenant {t}"
+
+
+def test_multi_engine_regroup_is_placement_only_n3():
+    """The N=3 property test: a stream served with the most aggressive
+    re-grouping possible (threshold < 0 adopts every changed candidate)
+    emits exactly the tokens of a run that never re-groups — across all
+    three pools, including chunked admissions."""
+    ms, ps = [], []
+    for s in range(3):
+        cfg, m, p = _model("phi3.5-moe-42b-a6.6b", seed=s)
+        ms.append(m)
+        ps.append(p)
+    planner = AuroraPlanner(homogeneous_cluster(cfg.moe.n_experts))
+    mk = lambda: [_requests(3, 1), _requests(2, 2), _requests(3, 3)]
+
+    ref = MultiTenantContinuousEngine(ms, ps, 2, 48, prefill_chunk=2)
+    out0 = ref.serve(mk())
+    rp = OnlineReplanner(planner, interval=3, threshold=-1.0, warmup=1)
+    eng = MultiTenantContinuousEngine(ms, ps, 2, 48, prefill_chunk=2,
+                                      replan=rp)
+    out1 = eng.serve(mk())
+    for t in range(3):
+        assert ([r.out_tokens for r in out1[t]]
+                == [r.out_tokens for r in out0[t]]), f"tenant {t}"
+    applied = [e for e in eng.replan_events if e.applied]
+    assert applied, "forced re-grouping never fired"
+    assert eng.groups == applied[-1].groups
+    # Tenant 0 stays the anchor through every re-group.
+    assert [g[0] for g in eng.groups] == list(range(len(eng.groups)))
+    # Monitors track the realized placement for translation.
+    for t in range(1, 3):
+        assert eng.monitors[t].slot_to_expert == [g[t] for g in eng.groups]
+
+
+def test_multi_engine_regroup_hysteresis_keeps_groups():
+    ms, ps = [], []
+    for s in range(3):
+        cfg, m, p = _model("phi3.5-moe-42b-a6.6b", seed=s)
+        ms.append(m)
+        ps.append(p)
+    planner = AuroraPlanner(homogeneous_cluster(cfg.moe.n_experts))
+    rp = OnlineReplanner(planner, interval=3, threshold=10.0, warmup=1)
+    eng = MultiTenantContinuousEngine(ms, ps, 2, 32, replan=rp)
+    groups0 = list(eng.groups)
+    eng.serve([_requests(3, 4), _requests(2, 5), _requests(2, 6)])
+    assert eng.groups == groups0
+    assert eng.replan_events and not any(e.applied for e in eng.replan_events)
+
+
+def test_multi_engine_validates():
+    cfg, m, p = _model("phi3.5-moe-42b-a6.6b", seed=0)
+    with pytest.raises(ValueError, match=">= 2 tenants"):
+        MultiTenantContinuousEngine([m], [p], 2, 32)
+    with pytest.raises(ValueError, match="params"):
+        MultiTenantContinuousEngine([m, m], [p], 2, 32)
+    with pytest.raises(ValueError, match="anchors"):
+        MultiTenantContinuousEngine([m, m], [p, p], 2, 32,
+                                    groups=[(1, 0), (0, 1), (2, 2), (3, 3)])
+    with pytest.raises(ValueError, match="groups for"):    # wrong count
+        MultiTenantContinuousEngine([m, m], [p, p], 2, 32,
+                                    groups=[(0, 0), (1, 1)])
+    with pytest.raises(ValueError, match="permutation"):   # duplicate expert
+        MultiTenantContinuousEngine([m, m], [p, p], 2, 32,
+                                    groups=[(0, 0), (1, 0), (2, 2), (3, 3)])
+    _, md, pd = _model("qwen3-32b", seed=1)          # dense model
+    planner = AuroraPlanner(homogeneous_cluster(cfg.moe.n_experts))
+    with pytest.raises(ValueError, match="MoE"):
+        MultiTenantContinuousEngine([m, md], [p, pd], 2, 32,
+                                    replan=OnlineReplanner(planner))

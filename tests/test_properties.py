@@ -41,7 +41,6 @@ def test_schedule_contention_free_and_exact(d):
         dsts = [j for j in slot.dst if j >= 0]
         assert len(dsts) == len(set(dsts)), "receiver contention in slot"
     # 2. Coverage: per-pair scheduled time == traffic exactly.
-    n = d.shape[0]
     covered = np.zeros_like(d)
     for slot in sched.slots:
         for i, j in enumerate(slot.dst):
@@ -125,7 +124,6 @@ def test_capacity_dispatch_no_slot_collisions(t, k, e, seed):
 @given(st.integers(0, 3))
 def test_router_gates_normalized(seed):
     import jax
-    import jax.numpy as jnp
     from repro.configs.base import MoEConfig
     from repro.models.moe import route
 

@@ -6,7 +6,7 @@ import pytest
 from repro.core import (AuroraPlanner, add_noise, colocated_inference_time,
                         exclusive_inference_time, heterogeneous_cluster,
                         homogeneous_cluster, lina_inference_time,
-                        paper_eval_traces, random_assignment, random_pairing,
+                        paper_eval_traces, random_pairing,
                         synthetic_trace)
 
 
