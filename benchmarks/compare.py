@@ -56,6 +56,12 @@ METRICS = [
     ("chunked stall cut", lambda r: _get(r, "chunked.stall_cut"), True, False),
     ("drift adaptive gain", lambda r: _get(r, "drift.improvement"),
      True, False),
+    ("kernel-path tok/s", lambda r: _get(r, "kernels.kernel.tok_per_s"),
+     True, True),
+    ("dense-path tok/s", lambda r: _get(r, "kernels.dense.tok_per_s"),
+     True, False),
+    ("kernel decode speedup", lambda r: _get(r, "kernels.decode_speedup"),
+     True, False),
 ] + [
     (f"multi N={n} tok/s",
      lambda r, n=n: _get(r, f"multi.tenants.{n}.engine.tok_per_s"),

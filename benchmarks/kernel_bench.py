@@ -22,11 +22,11 @@ from repro.kernels.moe_gmm import moe_gmm
 
 
 def _time(fn, *args, iters=3):
-    fn(*args).block_until_ready()
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
-    out.block_until_ready()
+    jax.block_until_ready(out)
     return (time.perf_counter() - t0) / iters * 1e6  # µs
 
 
@@ -54,6 +54,37 @@ def bench_moe_gmm() -> list[dict]:
     return rows
 
 
+def bench_dispatch() -> list[dict]:
+    """One-hot + cumsum dispatch vs sort-based ragged dispatch.
+
+    The one-hot path materializes a (T·k, E) matrix and cumsums it over the
+    token axis; the sort path is an argsort + searchsorted. Decode shapes
+    (few tokens, many experts) are where the asymptotic gap lives.
+    """
+    from repro.models.moe import dispatch_indices, sort_dispatch
+
+    rows = []
+    for (t, k, e, cap) in [(4, 2, 64, 8),        # decode, production E
+                           (8, 2, 32, 8),        # decode, mid E
+                           (512, 2, 64, 16),     # prefill chunk
+                           (4096, 8, 256, 256)]:  # deepseek-scale prefill
+        rng = jax.random.PRNGKey(t * 1000 + e)
+        idx = jax.random.randint(rng, (t, k), 0, e, jnp.int32)
+
+        onehot = jax.jit(lambda i: dispatch_indices(i, e, cap))
+        sort = jax.jit(lambda i: sort_dispatch(i, e, cap)[2:])
+        s1, k1 = onehot(idx)
+        s2, k2 = sort(idx)
+        assert (s1 == s2).all() and (k1 == k2).all()
+        us_onehot = _time(onehot, idx)
+        us_sort = _time(sort, idx)
+        rows.append({"kernel": "dispatch", "shape": f"T{t} k{k} E{e} C{cap}",
+                     "onehot_us_cpu": round(us_onehot, 1),
+                     "sort_us_cpu": round(us_sort, 1),
+                     "sort_speedup": round(us_onehot / us_sort, 2)})
+    return rows
+
+
 def bench_decode_attn() -> list[dict]:
     rows = []
     for (b, h, hkv, s, d, bs) in [(4, 16, 4, 4096, 128, 512),
@@ -78,7 +109,7 @@ def bench_decode_attn() -> list[dict]:
 
 
 def main() -> int:
-    for row in bench_moe_gmm() + bench_decode_attn():
+    for row in bench_dispatch() + bench_moe_gmm() + bench_decode_attn():
         print(row)
     return 0
 

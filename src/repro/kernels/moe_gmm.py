@@ -5,8 +5,9 @@ Computes, per expert e over its capacity bucket:
     y[e] = (act(x[e] @ w_gate[e]) * (x[e] @ w_up[e])) @ w_down[e]
 
 in one fused kernel — the (E, C, d) dispatch buffer produced by the
-all-to-all is consumed directly, so the gate/up/down matmuls and the
-activation never round-trip through HBM between them.
+sort-based ragged dispatch (or the all-to-all) is consumed directly, so the
+gate/up/down matmuls and the activation never round-trip through HBM between
+them.
 
 TPU mapping: grid (E, C/bc, F/bf) with the f-axis innermost as a reduction —
 each (e, c) output block accumulates partial ``h_blk @ w_down_blk`` products
@@ -14,6 +15,14 @@ across f-steps in a float32 VMEM scratch accumulator, flushing to the output
 on the last step. Block shapes keep the working set in VMEM
 (x (bc,d) + w (d,bf)·2 + w_down (bf,d) + acc (bc,d)f32 ≈ 11 MB at
 bc=bf=128, d=7168) and all matmul dims are multiples of 128 for the MXU.
+
+**Ragged groups** (``group_sizes``): the serving dispatch path routes only a
+handful of real tokens per step, so most capacity rows are zero padding. A
+per-expert row count rides in SMEM (like ``decode_attn``'s ``valid_len``)
+and every (e, c)-block whose row range starts at or beyond its group's fill
+level skips all three matmuls — the MegaBlocks-style dropless-group idea at
+block granularity. Skipped blocks flush the zero accumulator, which equals
+the dense result exactly: padding rows are zero and FFN(0) == 0.
 
 Validated against ``ref.moe_ffn_ref`` in interpret mode (this container is
 CPU-only; TPU is the target).
@@ -31,20 +40,43 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.compat import pallas_compiler_params
 
 
-def _kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref, *, act: str,
-            n_f: int):
+def align_capacity(cap: int, block_c: int) -> int:
+    """Smallest padded capacity the kernel grid can tile with ``block_c``.
+
+    ``capacity()`` rounds to a multiple of 8, which need not divide into
+    ``block_c`` blocks (e.g. cap=136 with block_c=128). A bucket that fits in
+    one block is its own (shrunk) block; anything larger is padded up to a
+    whole number of blocks. The extra rows are zero padding that the ragged
+    ``group_sizes`` path skips entirely.
+    """
+    if cap <= block_c:
+        return cap
+    return -(-cap // block_c) * block_c
+
+
+def _kernel(gs_ref, x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref, *,
+            act: str, n_f: int, block_c: int):
     f_idx = pl.program_id(2)
 
     @pl.when(f_idx == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = x_ref[0]                                   # (bc, d)
-    hg = jnp.dot(x, wg_ref[0], preferred_element_type=jnp.float32)
-    hu = jnp.dot(x, wu_ref[0], preferred_element_type=jnp.float32)
-    act_fn = jax.nn.gelu if act == "geglu" else jax.nn.silu
-    h = (act_fn(hg) * hu).astype(x.dtype)          # (bc, bf)
-    acc_ref[...] += jnp.dot(h, wd_ref[0], preferred_element_type=jnp.float32)
+    # Block (e, c) holds bucket rows [c*bc, (c+1)*bc); with fewer than
+    # c*bc + 1 routed rows the whole block is zero padding — skip the MXU
+    # work. (Partially-filled blocks still run; their pad rows are zero
+    # inputs, and FFN(0) == 0 keeps the output exact.)
+    live = gs_ref[0] > pl.program_id(1) * block_c
+
+    @pl.when(live)
+    def _compute():
+        x = x_ref[0]                               # (bc, d)
+        hg = jnp.dot(x, wg_ref[0], preferred_element_type=jnp.float32)
+        hu = jnp.dot(x, wu_ref[0], preferred_element_type=jnp.float32)
+        act_fn = jax.nn.gelu if act == "geglu" else jax.nn.silu
+        h = (act_fn(hg) * hu).astype(x.dtype)      # (bc, bf)
+        acc_ref[...] += jnp.dot(h, wd_ref[0],
+                                preferred_element_type=jnp.float32)
 
     @pl.when(f_idx == n_f - 1)
     def _flush():
@@ -53,14 +85,18 @@ def _kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref, *, act: str,
 
 @functools.partial(jax.jit, static_argnames=("act", "block_c", "block_f",
                                              "interpret"))
-def moe_gmm(x, w_gate, w_up, w_down, *, act: str = "swiglu",
+def moe_gmm(x, w_gate, w_up, w_down, *, group_sizes=None, act: str = "swiglu",
             block_c: int = 128, block_f: int = 128,
             interpret: bool = False):
     """Fused grouped expert FFN.
 
     x: (E, C, d); w_gate/w_up: (E, d, f); w_down: (E, f, d) → (E, C, d).
-    C and f must be divisible by the block sizes (the dispatch path pads
-    capacity to multiples of 8·block granularity already).
+    C and f must be divisible by the block sizes (``align_capacity`` gives a
+    compliant C; ``ops.moe_ffn`` derives a legal f block).
+
+    ``group_sizes``: optional (E,) int32 count of real rows per bucket —
+    blocks past a group's fill level are skipped (flushed as zeros). None
+    runs every block (the dense all-to-all layout).
     """
     e, c, d = x.shape
     f = w_gate.shape[-1]
@@ -68,12 +104,17 @@ def moe_gmm(x, w_gate, w_up, w_down, *, act: str = "swiglu",
     bf = min(block_f, f)
     if c % bc or f % bf:
         raise ValueError(f"C={c} / F={f} not divisible by blocks {bc}/{bf}")
+    if group_sizes is None:
+        group_sizes = jnp.full((e,), c, jnp.int32)
+    group_sizes = group_sizes.astype(jnp.int32)
     n_f = f // bf
     grid = (e, c // bc, n_f)
     return pl.pallas_call(
-        functools.partial(_kernel, act=act, n_f=n_f),
+        functools.partial(_kernel, act=act, n_f=n_f, block_c=bc),
         grid=grid,
         in_specs=[
+            pl.BlockSpec((1,), lambda e_, c_, f_: (e_,),
+                         memory_space=pltpu.SMEM),
             pl.BlockSpec((1, bc, d), lambda e_, c_, f_: (e_, c_, 0)),
             pl.BlockSpec((1, d, bf), lambda e_, c_, f_: (e_, 0, f_)),
             pl.BlockSpec((1, d, bf), lambda e_, c_, f_: (e_, 0, f_)),
@@ -85,4 +126,4 @@ def moe_gmm(x, w_gate, w_up, w_down, *, act: str = "swiglu",
         compiler_params=pallas_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(x, w_gate, w_up, w_down)
+    )(group_sizes, x, w_gate, w_up, w_down)

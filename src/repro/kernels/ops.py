@@ -1,15 +1,20 @@
 """Jit'd wrappers over the Pallas kernels with automatic fallback.
 
-``use_pallas(interpret=...)`` selects the execution mode:
+``interpret`` selects the execution mode everywhere:
 - On TPU: compiled Pallas (the production path).
 - On CPU (this container): ``interpret=True`` executes the kernel body in
-  Python for correctness validation; the model default remains the pure-jnp
-  reference so tests stay fast.
+  Python for correctness validation; ``interpret=None`` (auto) keeps the
+  pure-jnp reference so serving and tests stay fast.
+
+The ``*_auto`` entry points additionally derive legal block shapes from the
+runtime array shapes (capacity buckets and cache lengths are workload-sized,
+not kernel-sized), so the model layer never has to know the grid rules.
 """
 
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from . import ref
 from .decode_attn import decode_attn
@@ -20,21 +25,54 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def use_pallas(interpret: bool | None = None) -> bool:
+    """Whether the kernel path executes a Pallas body (compiled or
+    interpret) as opposed to the pure-jnp reference."""
+    return on_tpu() or bool(interpret)
+
+
+def _divisor_block(n: int, block: int) -> int:
+    """Largest block size <= ``block`` that divides ``n`` exactly."""
+    b = max(min(block, n), 1)
+    while n % b:
+        b -= 1
+    return b
+
+
 def moe_ffn(x, w_gate, w_up, w_down, act: str = "swiglu",
-            impl: str = "auto", interpret: bool | None = None):
-    """Grouped expert FFN: Pallas on TPU, reference elsewhere."""
-    if impl == "ref" or (impl == "auto" and not on_tpu() and not interpret):
-        return ref.moe_ffn_ref(x, w_gate, w_up, w_down, act)
+            impl: str = "auto", interpret: bool | None = None,
+            group_sizes=None, block_c: int = 128, block_f: int = 128):
+    """Grouped expert FFN: Pallas on TPU, reference elsewhere.
+
+    ``group_sizes`` (E,) enables the ragged path: expert blocks past the
+    fill level are skipped on the kernel and zero-masked on the reference —
+    identical semantics (zero-padded buckets, FFN(0) == 0).
+    """
+    if impl == "ref" or (impl == "auto" and not use_pallas(interpret)):
+        return ref.moe_ffn_ref(x, w_gate, w_up, w_down, act,
+                               group_sizes=group_sizes)
     return moe_gmm(x, w_gate, w_up, w_down, act=act,
+                   group_sizes=group_sizes,
+                   block_c=_divisor_block(x.shape[1], block_c),
+                   block_f=_divisor_block(w_gate.shape[-1], block_f),
                    interpret=bool(interpret) if interpret is not None
                    else not on_tpu())
 
 
-def flash_decode(q, k, v, valid_len, impl: str = "auto",
-                 interpret: bool | None = None):
-    """Single-query attention: Pallas on TPU, reference elsewhere."""
-    if impl == "ref" or (impl == "auto" and not on_tpu() and not interpret):
+def decode_attn_auto(q, k, v, valid_len, block_s: int = 512,
+                     interpret: bool | None = None):
+    """Decode-step attention over a per-slot cache, impl auto-selected.
+
+    q: (B, H, D); k/v: (B, S, Hkv, D); valid_len scalar or (B,) fill levels
+    (broadcast to every batch row). Picks the largest KV block that divides
+    the cache capacity, so workload-sized caches never trip the grid rules.
+    """
+    b = q.shape[0]
+    valid_len = jnp.broadcast_to(
+        jnp.asarray(valid_len, jnp.int32).reshape(-1), (b,))
+    if not use_pallas(interpret):
         return ref.decode_attn_ref(q, k, v, valid_len)
     return decode_attn(q, k, v, valid_len,
+                       block_s=_divisor_block(k.shape[1], block_s),
                        interpret=bool(interpret) if interpret is not None
                        else not on_tpu())

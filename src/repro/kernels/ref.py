@@ -6,10 +6,14 @@ import jax
 import jax.numpy as jnp
 
 
-def moe_ffn_ref(x, w_gate, w_up, w_down, act: str = "swiglu"):
+def moe_ffn_ref(x, w_gate, w_up, w_down, act: str = "swiglu",
+                group_sizes=None):
     """Grouped expert FFN over capacity buckets.
 
     x: (E, C, d); w_gate/w_up: (E, d, f); w_down: (E, f, d) → (E, C, d).
+    ``group_sizes``: optional (E,) real-row counts — rows at or beyond a
+    group's fill level are zeroed, matching the ragged kernel's block-skip
+    semantics exactly (pad rows are zero inputs, and FFN(0) == 0).
     """
     act_fn = jax.nn.gelu if act == "geglu" else jax.nn.silu
     h = act_fn(jnp.einsum("ecd,edf->ecf", x, w_gate,
@@ -18,6 +22,9 @@ def moe_ffn_ref(x, w_gate, w_up, w_down, act: str = "swiglu"):
                        preferred_element_type=jnp.float32)
     y = jnp.einsum("ecf,efd->ecd", h.astype(x.dtype), w_down,
                    preferred_element_type=jnp.float32)
+    if group_sizes is not None:
+        live = jnp.arange(x.shape[1])[None, :] < group_sizes[:, None]
+        y = jnp.where(live[..., None], y, 0.0)
     return y.astype(x.dtype)
 
 

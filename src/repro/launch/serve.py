@@ -51,6 +51,10 @@ def main() -> int:
     ap.add_argument("--replan-threshold", type=float, default=0.02,
                     help="min relative predicted-time improvement before a "
                          "re-plan is applied")
+    ap.add_argument("--kernels", action="store_true",
+                    help="continuous engines: serve through the Pallas "
+                         "kernel path (sort-based ragged MoE dispatch + "
+                         "flash-decode attention; pure-jnp twin on CPU)")
     args = ap.parse_args()
 
     import jax
@@ -74,7 +78,8 @@ def main() -> int:
                                    prefill_len=args.prompt_len,
                                    prefill_chunk=args.prefill_chunk,
                                    step_token_budget=args.step_budget,
-                                   bucket_policy=args.bucket_policy)
+                                   bucket_policy=args.bucket_policy,
+                                   kernels=args.kernels)
             reqs = poisson_requests(
                 rng, args.num_requests, args.arrival_rate, cfg.vocab,
                 args.prompt_len, max(1, args.max_new_tokens // 2),
@@ -141,7 +146,8 @@ def main() -> int:
                                         bucket_policy=args.bucket_policy,
                                         pair=(list(plan.pair) if plan
                                               else None),
-                                        replan=replan)
+                                        replan=replan,
+                                        kernels=args.kernels)
         lo = max(1, args.max_new_tokens // 2)
         reqs_a = poisson_requests(rng, args.num_requests, args.arrival_rate,
                                   cfg.vocab, args.prompt_len, lo,

@@ -1,11 +1,11 @@
 """Model zoo: layers, attention, SSM, MoE, and the architecture-generic
 transformer stack behind the ``Model`` facade."""
 
-from .layers import NO_PARALLEL, ParallelContext
+from .layers import KernelConfig, NO_PARALLEL, ParallelContext
 from .model import Model, cross_entropy
 from .transformer import (Segment, forward, init_cache, init_params,
                           merge_cache_slot, padded_vocab, segments_of)
 
-__all__ = ["NO_PARALLEL", "ParallelContext", "Model", "cross_entropy",
-           "Segment", "forward", "init_cache", "init_params",
-           "merge_cache_slot", "padded_vocab", "segments_of"]
+__all__ = ["KernelConfig", "NO_PARALLEL", "ParallelContext", "Model",
+           "cross_entropy", "Segment", "forward", "init_cache",
+           "init_params", "merge_cache_slot", "padded_vocab", "segments_of"]

@@ -182,8 +182,18 @@ def attn_block(p, x, *, cfg, pos, window=None, cache=None, length=None,
         cv = _cache_write(cache["v"], v, slot, pc)
         new_cache = {"k": ck, "v": cv}
         valid = jnp.minimum(length + 1, cap)
-        out = attention_core(q, ck, cv, causal_offset=None, window=None,
-                             valid_len=valid, flash_block=flash_block)
+        kc = pc.kernels if pc is not None else None
+        if kc is not None:
+            # Kernelized hot path: stream the per-slot cache past the single
+            # query through kernels.ops.decode_attn_auto (Pallas flash-decode
+            # on TPU / interpret; jnp oracle on CPU — same masking math).
+            from repro.kernels.ops import decode_attn_auto
+            out = decode_attn_auto(q[:, 0], ck, cv, valid,
+                                   block_s=kc.block_s,
+                                   interpret=kc.interpret)[:, None]
+        else:
+            out = attention_core(q, ck, cv, causal_offset=None, window=None,
+                                 valid_len=valid, flash_block=flash_block)
     out = _head_constraint(out, pc)
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
     return y, new_cache

@@ -16,6 +16,25 @@ from jax.sharding import PartitionSpec as P
 
 
 @dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """Pallas kernel-path settings for the serving hot path.
+
+    Attaching one to ``ParallelContext.kernels`` (see ``Model.with_kernels``)
+    routes decode-step attention through ``kernels.ops.decode_attn_auto`` and
+    — together with ``moe_impl="kernel"`` — MoE dispatch through the
+    sort-based ragged path feeding ``kernels.moe_gmm``.
+
+    ``interpret``: None = auto (compiled Pallas on TPU, pure-jnp reference on
+    CPU); True forces Pallas interpret mode (correctness validation on CPU).
+    """
+
+    interpret: bool | None = None
+    block_c: int = 128    # moe_gmm capacity-row block
+    block_f: int = 128    # moe_gmm d_ff block (reduction axis)
+    block_s: int = 512    # decode_attn KV-sequence block
+
+
+@dataclasses.dataclass(frozen=True)
 class ParallelContext:
     """How the model is laid out on a mesh.
 
@@ -37,7 +56,8 @@ class ParallelContext:
     #                                          ever crosses the DCN boundary)
     seq_axis: str | None = None
     aurora_rounds: tuple[tuple[int, ...], ...] | None = None  # ppermute schedule
-    moe_impl: str = "dense"  # dense | ep | aurora
+    moe_impl: str = "dense"  # dense | ep | aurora | kernel
+    kernels: KernelConfig | None = None      # non-None → kernelized hot path
     flash_block: int = 1024
     unroll_segments: bool = False  # Python-loop layer blocks instead of
     #                                lax.scan (cost-calibration lowerings:

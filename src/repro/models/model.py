@@ -22,7 +22,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from .layers import NO_PARALLEL, ParallelContext
+from .layers import KernelConfig, NO_PARALLEL, ParallelContext
 from . import transformer as tf
 
 
@@ -34,6 +34,25 @@ class Model:
     # -- params / cache ----------------------------------------------------
     def init(self, key):
         return tf.init_params(key, self.cfg)
+
+    def with_kernels(self, kernels: "KernelConfig | bool" = True) -> "Model":
+        """Model routed through the Pallas serving hot path.
+
+        Attaches a ``KernelConfig`` to the parallel context (decode-step
+        attention → ``kernels.ops.decode_attn_auto``) and, for MoE configs
+        not already expert-parallel, switches dispatch to the sort-based
+        ragged kernel path (``moe_impl="kernel"``). Pass a ``KernelConfig``
+        to pin block shapes or force interpret mode; ``False`` is a no-op so
+        engines can thread their ``kernels=`` flag straight through.
+        """
+        if kernels is False:
+            return self
+        kc = kernels if isinstance(kernels, KernelConfig) else KernelConfig()
+        impl = self.pc.moe_impl
+        if self.cfg.moe is not None and impl not in ("ep", "aurora"):
+            impl = "kernel"
+        pc = dataclasses.replace(self.pc, kernels=kc, moe_impl=impl)
+        return dataclasses.replace(self, pc=pc)
 
     def init_cache(self, batch: int, cap: int, src_len: int = 0,
                    per_slot_len: bool = False):

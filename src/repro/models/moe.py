@@ -1,8 +1,14 @@
 """Mixture-of-Experts layer: router, capacity dispatch, expert FFN, combine.
 
-Three dispatch implementations share the same routing/capacity semantics:
+Four dispatch implementations share the same routing/capacity semantics:
 
 - ``dense``  — local gather/scatter (reference; smoke tests, single device).
+- ``kernel`` — sort-based ragged dispatch feeding the fused Pallas grouped
+               FFN (``repro.kernels.moe_gmm``): tokens are argsorted by
+               expert id, per-expert group offsets come from
+               ``searchsorted``, and capacity is enforced by rank within the
+               group — no (T·k, E) one-hot, no cumsum over experts. The
+               serving engines' decode hot path (``kernels=True``).
 - ``ep``     — expert-parallel ``shard_map`` with a monolithic
                ``lax.all_to_all`` (the production baseline the paper starts
                from; see ``repro.distributed.alltoall``).
@@ -22,7 +28,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .layers import NO_PARALLEL, ParallelContext, ffn_apply, init_ffn
+from .layers import (KernelConfig, NO_PARALLEL, ParallelContext, ffn_apply,
+                     init_ffn)
 
 
 def init_moe(key, d_model: int, moe, dtype) -> dict:
@@ -85,7 +92,7 @@ def capacity(n_tokens: int, top_k: int, n_experts: int, cf: float,
 
 
 def dispatch_indices(idx, n_experts: int, cap: int):
-    """Assignment → capacity-bucket coordinates.
+    """Assignment → capacity-bucket coordinates (one-hot reference).
 
     idx: (T, k). Returns (slot (T,k) int32 position inside the expert bucket,
     keep (T,k) bool — False means the token overflowed and is dropped).
@@ -98,6 +105,50 @@ def dispatch_indices(idx, n_experts: int, cap: int):
     slot = jnp.take_along_axis(pos, flat[:, None], axis=1)[:, 0]
     keep = slot < cap
     return slot.reshape(t, k).astype(jnp.int32), keep.reshape(t, k)
+
+
+def sort_dispatch(idx, n_experts: int, cap: int):
+    """Sort-based ragged dispatch — ``dispatch_indices`` without the
+    O(T·k·E) one-hot + cumsum.
+
+    Tokens are argsorted by expert id (stable sort: ties break in token
+    order, exactly GShard's position assignment), per-expert group offsets
+    come from a ``searchsorted`` over the sorted ids, and a token's bucket
+    slot is its rank within its group (sorted position minus group offset).
+
+    idx: (T, k) routed expert ids. Returns
+      order (T*k,) int32 — flat assignment ids in expert-sorted order
+      sizes (E,)   int32 — routed rows per expert (capacity drops included:
+                           this is OFFERED traffic, free routing counts)
+      slot  (T, k) int32 — rank within the expert group (== the one-hot
+                           path's bucket position, bit for bit)
+      keep  (T, k) bool  — rank < cap (False = overflowed, dropped)
+    """
+    t, k = idx.shape
+    flat = idx.reshape(-1)                               # (T*k,) token-major
+    order = jnp.argsort(flat, stable=True).astype(jnp.int32)
+    sorted_e = flat[order]
+    offsets = jnp.searchsorted(
+        sorted_e, jnp.arange(n_experts, dtype=sorted_e.dtype),
+        side="left").astype(jnp.int32)                   # (E,) group starts
+    sizes = jnp.diff(offsets, append=jnp.int32(t * k))   # segment sizes
+    rank_sorted = jnp.arange(t * k, dtype=jnp.int32) - offsets[sorted_e]
+    slot = jnp.zeros((t * k,), jnp.int32).at[order].set(rank_sorted)
+    keep = slot < cap
+    return order, sizes, slot.reshape(t, k), keep.reshape(t, k)
+
+
+def routed_counts(idx, n_experts: int):
+    """(T, k) routed expert ids → (T, E) float32 per-token choice histogram.
+
+    Capacity drops included — this measures OFFERED dispatch traffic, the
+    quantity the deployment planner consumes. One scatter-add (no (T·k, E)
+    one-hot); shared by the dense and kernel dispatch paths.
+    """
+    t, k = idx.shape
+    rows = jnp.broadcast_to(jnp.arange(t)[:, None], (t, k)).reshape(-1)
+    return jnp.zeros((t, n_experts), jnp.float32).at[
+        rows, idx.reshape(-1)].add(1.0)
 
 
 def _experts_ffn(experts, xb, act: str):
@@ -143,8 +194,99 @@ def moe_apply_dense(p, x, moe, act: str,
     if "shared" in p:
         y = y + ffn_apply(p["shared"], xt, act, pc)
     if return_counts:
-        counts = jax.nn.one_hot(idx, moe.n_experts,
-                                dtype=jnp.float32).sum(axis=1)   # (T, E)
+        counts = routed_counts(idx, moe.n_experts)               # (T, E)
+        return (y.reshape(shape), aux,
+                counts.reshape(shape[:-1] + (moe.n_experts,)))
+    return y.reshape(shape), aux
+
+
+# ---------------------------------------------------------------------------
+# Kernel dispatch — sort-based ragged layout feeding the Pallas grouped FFN
+# ---------------------------------------------------------------------------
+
+def moe_apply_kernel(p, x, moe, act: str,
+                     pc: ParallelContext = NO_PARALLEL,
+                     return_counts: bool = False):
+    """Kernelized MoE layer: same routing/capacity semantics as the dense
+    reference, different machinery. x: (..., d) → (y, aux[, counts]).
+
+    Dispatch is the sort-based ragged layout (``sort_dispatch``); compute is
+    one of three statically-chosen backends:
+
+    - Pallas ``moe_gmm`` with ``group_sizes`` (TPU, or interpret mode for
+      validation): capacity buckets scattered through ONE gather, empty
+      expert blocks skipped in-kernel.
+    - compact pure-jnp (CPU decode shapes, where 2·T·k <= E·C): the FFN runs
+      over exactly the T·k routed rows with per-row gathered expert weights
+      — no (E, C, d) buffer exists at all, so none of the garbage-row
+      compute the dense path pays at decode.
+    - bucketed pure-jnp (CPU prefill shapes): the same zero-padded buckets
+      as the kernel, through ``ref.moe_ffn_ref(group_sizes=...)``.
+
+    All three drop the same tokens and combine with the same gates, so
+    logits match the dense path to float tolerance.
+    """
+    from repro.kernels import ops as kops
+    from repro.kernels.moe_gmm import align_capacity
+
+    shape = x.shape
+    d = shape[-1]
+    xt = x.reshape(-1, d)                                # (T, d)
+    t = xt.shape[0]
+    k, e = moe.top_k, moe.n_experts
+    gates, idx, aux = route(p["router"], xt, moe)
+    cap = capacity(t, k, e, moe.capacity_factor)
+    kc = pc.kernels or KernelConfig()
+
+    order, sizes, slot, keep = sort_dispatch(idx, e, cap)
+    keep_f = keep.reshape(-1)
+    e_f = idx.reshape(-1)
+    t_f = jnp.broadcast_to(jnp.arange(t)[:, None], (t, k)).reshape(-1)
+    experts = p["experts"]
+
+    compact = not kops.use_pallas(kc.interpret) and 2 * t * k <= e * cap
+    if compact:
+        # Decode-sized: gather each routed row's expert weights and run a
+        # batched matvec over the compact (T·k, d) layout.
+        xg = xt[t_f]                                     # (T*k, d)
+        hg = jnp.einsum("rd,rdf->rf", xg, experts["w_gate"][e_f],
+                        preferred_element_type=jnp.float32)
+        hu = jnp.einsum("rd,rdf->rf", xg, experts["w_up"][e_f],
+                        preferred_element_type=jnp.float32)
+        act_fn = jax.nn.gelu if act == "geglu" else jax.nn.silu
+        h = (act_fn(hg) * hu).astype(xt.dtype)
+        picked = jnp.einsum("rf,rfd->rd", h, experts["w_down"][e_f],
+                            preferred_element_type=jnp.float32
+                            ).astype(xt.dtype)           # (T*k, d)
+    else:
+        # Bucketed: pad capacity so the kernel grid tiles it, scatter the
+        # SORTED tokens with one index build (dropped ranks scatter out of
+        # range and vanish), leave unfilled rows pointing at a zero pad row.
+        cap_pad = align_capacity(cap, kc.block_c)
+        rank_sorted = slot.reshape(-1)[order]
+        keep_sorted = keep_f[order]
+        dest = jnp.where(keep_sorted,
+                         e_f[order] * cap_pad + rank_sorted, e * cap_pad)
+        src = jnp.full((e * cap_pad,), t, jnp.int32).at[dest].set(
+            order // k, mode="drop")
+        x_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+        buf = x_pad[src].reshape(e, cap_pad, d)
+        out_buf = kops.moe_ffn(
+            buf, experts["w_gate"], experts["w_up"], experts["w_down"],
+            act=act, interpret=kc.interpret,
+            group_sizes=jnp.minimum(sizes, cap),
+            block_c=kc.block_c, block_f=kc.block_f)
+        flat_out = out_buf.reshape(e * cap_pad, d)
+        safe = jnp.where(keep_f, e_f * cap_pad + slot.reshape(-1), 0)
+        picked = flat_out[safe]                          # (T*k, d)
+
+    picked = jnp.where(keep_f[:, None], picked, 0.0)
+    y = jnp.zeros_like(xt).at[t_f].add(
+        picked * gates.reshape(-1)[:, None])
+    if "shared" in p:
+        y = y + ffn_apply(p["shared"], xt, act, pc)
+    if return_counts:
+        counts = routed_counts(idx, moe.n_experts)       # (T, E)
         return (y.reshape(shape), aux,
                 counts.reshape(shape[:-1] + (moe.n_experts,)))
     return y.reshape(shape), aux
@@ -180,8 +322,19 @@ def moe_apply(p, x, moe, act: str, pc: ParallelContext = NO_PARALLEL,
               return_counts: bool = False):
     if pc.moe_impl in ("ep", "aurora") and pc.ep_axes:
         if return_counts:
+            # Counts are genuinely unavailable here and only here: routing
+            # runs inside the shard_map collective (repro.distributed
+            # .alltoall.ep_dispatch_combine), so per-token assignments never
+            # leave the per-device program. Every local path derives them
+            # from the routing output (``routed_counts``).
             raise NotImplementedError(
-                "routing-count collection requires the dense dispatch path "
-                "(the serving monitor runs single-host)")
+                f"return_counts is not available on the '{pc.moe_impl}' "
+                "dispatch path: routing happens inside the shard_map "
+                "all-to-all and per-token expert assignments never "
+                "materialize outside the collective — serve with the "
+                "'dense' or 'kernel' dispatch path to monitor live traffic")
         return moe_apply_ep(p, x, moe, act, pc)
+    if pc.moe_impl == "kernel":
+        return moe_apply_kernel(p, x, moe, act, pc,
+                                return_counts=return_counts)
     return moe_apply_dense(p, x, moe, act, pc, return_counts=return_counts)

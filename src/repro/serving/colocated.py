@@ -168,10 +168,16 @@ class ColocatedContinuousEngine:
                  prefill_chunk: int | None = None,
                  step_token_budget: int | None = None,
                  bucket_policy="pow2", pair: list[int] | None = None,
-                 replan=None, monitor_halflife: float = 128.0):
+                 replan=None, monitor_halflife: float = 128.0,
+                 kernels=False):
         from .engine import ContinuousEngine
         from .monitor import TrafficMonitor
 
+        if kernels:
+            # Kernelize BEFORE the pools and the fused lockstep step are
+            # built, so both models' decode/prefill programs share the path.
+            model_a = model_a.with_kernels(kernels)
+            model_b = model_b.with_kernels(kernels)
         self.model_a, self.model_b = model_a, model_b
         self.replan = replan
         self.monitor_a = self.monitor_b = None
@@ -307,7 +313,8 @@ class MultiTenantContinuousEngine:
                  step_token_budget: int | None = None,
                  bucket_policy="pow2",
                  groups: list[tuple[int, ...]] | None = None,
-                 replan=None, monitor_halflife: float = 128.0):
+                 replan=None, monitor_halflife: float = 128.0,
+                 kernels=False):
         from .engine import ContinuousEngine
         from .monitor import TrafficMonitor
 
@@ -316,6 +323,8 @@ class MultiTenantContinuousEngine:
                              "(use ContinuousEngine for one)")
         if len(params) != len(models):
             raise ValueError("one params tree per model required")
+        if kernels:
+            models = [m.with_kernels(kernels) for m in models]
         self.models = list(models)
         self.n_tenants = len(models)
         self.replan = replan

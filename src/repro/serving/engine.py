@@ -27,6 +27,14 @@ one-shot admission (prefill continuation is exact — see
 **Live routing stats** (``monitor=TrafficMonitor(...)``): decode steps and
 prefills report per-layer expert routing counts, feeding the traffic-driven
 re-planner (``repro.serving.monitor``).
+
+**Kernel path** (``kernels=True`` or a ``KernelConfig``): the engine's jitted
+steps run through the Pallas serving hot path — sort-based ragged MoE
+dispatch into the fused grouped FFN and flash-decode attention over the
+per-slot cache (``Model.with_kernels``). Same routing/capacity semantics,
+so token streams match the dense path; routing counts still flow to the
+monitor (derived from the routing output by the shared ``routed_counts``
+scatter, no one-hot).
 """
 
 from __future__ import annotations
@@ -192,7 +200,9 @@ class ContinuousEngine:
                  prefill_len: int | None = None, jit: bool = True,
                  prefill_chunk: int | None = None,
                  step_token_budget: int | None = None,
-                 bucket_policy="pow2", monitor=None):
+                 bucket_policy="pow2", monitor=None, kernels=False):
+        if kernels:
+            model = model.with_kernels(kernels)
         self.model = model
         self.params = params
         self.batch_slots = batch_slots

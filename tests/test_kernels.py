@@ -39,6 +39,32 @@ def test_moe_gmm_matches_ref(e, c, d, f, dtype, act):
                                np.asarray(want, np.float32), **_tol(dtype))
 
 
+@pytest.mark.parametrize("sizes", [
+    (0, 0),              # every block dead
+    (128, 0),            # one full group, one empty
+    (37, 200),           # partial blocks (ragged fill levels)
+])
+def test_moe_gmm_group_sizes_skip_matches_dense(sizes):
+    """Ragged groups: with zero-padded buckets, skipping empty expert blocks
+    must be invisible — the output equals the dense (no group_sizes) run and
+    the masked reference, because pad rows are zero and FFN(0) == 0."""
+    e, c, d, f = 2, 256, 64, 128
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (e, c, d), jnp.float32)
+    gs = jnp.asarray(sizes, jnp.int32)
+    live = jnp.arange(c)[None, :] < gs[:, None]
+    x = jnp.where(live[..., None], x, 0.0)              # zero-padded buckets
+    wg = jax.random.normal(ks[1], (e, d, f)) * d ** -0.5
+    wu = jax.random.normal(ks[2], (e, d, f)) * d ** -0.5
+    wd = jax.random.normal(ks[3], (e, f, d)) * f ** -0.5
+    got = moe_gmm(x, wg, wu, wd, group_sizes=gs, block_c=64, interpret=True)
+    dense = moe_gmm(x, wg, wu, wd, block_c=64, interpret=True)
+    want = ref.moe_ffn_ref(x, wg, wu, wd, "swiglu", group_sizes=gs)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got, dense, rtol=1e-5, atol=1e-5)
+
+
 @pytest.mark.parametrize("block", [64, 128])
 def test_moe_gmm_block_sweep(block):
     key = jax.random.PRNGKey(1)
