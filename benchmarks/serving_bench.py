@@ -361,6 +361,115 @@ def bench_kernels(arch="phi3.5-moe-42b-a6.6b", n_experts=32, n_requests=10,
 
 
 # ---------------------------------------------------------------------------
+# Section 2c: distributed dispatch — synchronous vs round-pipelined rounds
+# ---------------------------------------------------------------------------
+
+_OVERLAP_WORKER = """
+import json, time
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.compat import set_mesh
+from repro.configs.base import MoEConfig
+from repro.core import synthetic_trace
+from repro.models.layers import ParallelContext
+from repro.models.moe import init_moe, moe_apply
+from repro.serving import rounds_from_trace
+import dataclasses
+
+n_dev = {n_devices}
+n_experts = {n_experts}
+mesh = jax.make_mesh((n_dev,), ("model",))
+moe = MoEConfig(n_experts=n_experts, top_k=2, d_ff={d_ff},
+                capacity_factor=2.0)
+p = init_moe(jax.random.PRNGKey(0), {d_model}, moe, jnp.float32)
+rounds = rounds_from_trace(
+    synthetic_trace("hist", n_experts=n_experts, n_layers=2, seed=0), n_dev)
+pc = ParallelContext(mesh=mesh, data_axes=(), model_axis=None,
+                     ep_axes=("model",), token_axes=("model",),
+                     moe_impl="aurora", aurora_rounds=rounds)
+shapes = {{"decode": ({t_decode}, 1, {d_model}),
+          "prefill": ({n_devices}, {s_prefill}, {d_model})}}
+rec = {{"n_devices": n_dev, "n_experts": n_experts, "rounds": len(rounds)}}
+max_abs = 0.0
+with set_mesh(mesh):
+    for name, shape in shapes.items():
+        x = jax.random.normal(jax.random.PRNGKey(1), shape)
+        outs = {{}}
+        for leg, overlap in (("sync", False), ("pipelined", True)):
+            pcl = dataclasses.replace(pc, ep_overlap=overlap)
+            fn = jax.jit(lambda x, pcl=pcl:
+                         moe_apply(p, x, moe, "swiglu", pcl)[0])
+            y = fn(x); y.block_until_ready()          # compile + warm
+            reps, t0 = {reps}, time.perf_counter()
+            for _ in range(reps):
+                y = fn(x)
+            y.block_until_ready()
+            wall = time.perf_counter() - t0
+            tokens = reps * shape[0] * shape[1]
+            outs[leg] = y
+            rec.setdefault(leg, {{}})[name + "_tok_per_s"] = tokens / wall
+        d = float(np.max(np.abs(np.asarray(outs["pipelined"])
+                                - np.asarray(outs["sync"]))))
+        max_abs = max(max_abs, d)
+        rec[name + "_speedup"] = (rec["pipelined"][name + "_tok_per_s"]
+                                  / rec["sync"][name + "_tok_per_s"])
+rec["max_abs_diff"] = max_abs
+rec["ok"] = bool(max_abs < 1e-5)
+print("OVERLAP_JSON " + json.dumps(rec))
+"""
+
+
+def bench_overlap(n_devices=8, n_experts=32, d_model=64, d_ff=128,
+                  t_decode=8, s_prefill=32, reps=30):
+    """Synchronous vs round-pipelined Aurora dispatch on a host-device mesh.
+
+    Runs in a SUBPROCESS with ``--xla_force_host_platform_device_count`` so
+    the main bench process keeps one device (the other sections' timings
+    must not change). Shapes follow the PR 4 kernel bench (32 experts,
+    decode-heavy) at the 8-way EP sharding. On a host-platform CPU mesh the
+    virtual devices share cores, so the overlap is NOT expected to win
+    wall-clock here — the gate is output identity (tokens must not change
+    when compute and communication interleave); the recorded throughputs
+    feed the CI trend table.
+    """
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count"
+                          f"={n_devices}").strip()
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "src"),
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    script = _OVERLAP_WORKER.format(
+        n_devices=n_devices, n_experts=n_experts, d_model=d_model,
+        d_ff=d_ff, t_decode=t_decode, s_prefill=s_prefill, reps=reps)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    if out.returncode != 0:
+        print(out.stdout)
+        print(out.stderr)
+        return {"ok": False, "error": "overlap worker failed"}
+    rec = json.loads(next(line for line in out.stdout.splitlines()
+                          if line.startswith("OVERLAP_JSON ")
+                          ).split(" ", 1)[1])
+    print(f"== overlap bench: {n_experts} experts EP-sharded over "
+          f"{rec['n_devices']} host devices, {rec['rounds']} BvN rounds ==")
+    print(f"{'dispatch':<10} {'decode tok/s':>13} {'prefill tok/s':>14}")
+    for leg in ("sync", "pipelined"):
+        print(f"{leg:<10} {rec[leg]['decode_tok_per_s']:>13.1f} "
+              f"{rec[leg]['prefill_tok_per_s']:>14.1f}")
+    print(f"pipelined/sync: decode {rec['decode_speedup']:.2f}x, prefill "
+          f"{rec['prefill_speedup']:.2f}x (virtual devices share CPU cores "
+          f"— identity is the gate); max |Δ| {rec['max_abs_diff']:.2e}")
+    return rec
+
+
+# ---------------------------------------------------------------------------
 # Section 3: traffic drift + online re-planning
 # ---------------------------------------------------------------------------
 
@@ -599,6 +708,9 @@ def main() -> int:
                     help="run the N-tenant colocation section")
     ap.add_argument("--kernels", action="store_true",
                     help="run the dense-vs-kernel dispatch section")
+    ap.add_argument("--overlap", action="store_true",
+                    help="run the sync-vs-pipelined distributed dispatch "
+                         "section (subprocess with a host-device mesh)")
     ap.add_argument("--all", action="store_true",
                     help="run every section")
     ap.add_argument("--small", action="store_true",
@@ -609,11 +721,12 @@ def main() -> int:
 
     sections = {}
     run_classic = args.all or not (args.chunked or args.drift or args.multi
-                                   or args.kernels)
+                                   or args.kernels or args.overlap)
     run_chunked = args.all or args.chunked or args.drift
     run_drift = args.all or args.drift
     run_multi = args.all or args.multi
     run_kernels = args.all or args.kernels
+    run_overlap = args.all or args.overlap
 
     # The chunked section runs FIRST: it judges step-latency tails, the
     # statistic most sensitive to heap/caches left by other sections.
@@ -649,6 +762,11 @@ def main() -> int:
         kw = (dict(n_reqs=4, max_new=4, rand_seeds=4) if args.small else {})
         sections["multi"] = bench_multi(arch=args.moe_arch, seed=args.seed,
                                         **kw)
+    if run_overlap:
+        # Subprocess with its own host-device mesh — isolated from this
+        # process's single-device state, so --small only trims repetitions.
+        kw = dict(reps=10) if args.small else {}
+        sections["overlap"] = bench_overlap(**kw)
 
     if args.json:
         with open(args.json, "w") as f:

@@ -73,6 +73,68 @@ class CommSchedule:
         in ``repro.distributed.alltoall``."""
         return [(s.dst, s.duration) for s in self.slots]
 
+    def traffic(self, n: int | None = None) -> np.ndarray:
+        """Realized (time-unit) traffic matrix: per-pair sum of slot durations.
+
+        The inverse view of ``aurora_schedule``: summing what each slot moves
+        recovers (up to artificial-padding idle time) the matrix the schedule
+        was decomposed from. Used to re-derive device-level BvN rounds from a
+        planner ``Plan`` whose schedules live at expert granularity."""
+        if n is None:
+            n = len(self.slots[0].dst) if self.slots else 0
+        d = np.zeros((n, n), dtype=np.float64)
+        for slot in self.slots:
+            for i, j in enumerate(slot.dst):
+                if j >= 0:
+                    d[i, j] += slot.duration
+        return d
+
+
+def check_partial_permutation(dst, n: int, what: str) -> tuple[int, ...]:
+    """One dst vector must be a *partial permutation* of ``n`` devices.
+
+    The shared invariant of every ppermute lowering input — schedule slots
+    AND literal exchange rounds: ``dst[i]`` is sender i's receiver (-1 =
+    idle), no receiver hears two senders, nobody sends to itself
+    (self-traffic never crosses the network, §4.2 footnote 1), nothing
+    points off the mesh. Violations silently drop or overwrite token
+    buckets in flight, so they raise here instead. Returns the normalized
+    tuple."""
+    dst = tuple(int(j) for j in dst)
+    if len(dst) != n:
+        raise ValueError(f"{what}: dst has {len(dst)} entries for {n} "
+                         "devices")
+    seen_recv: set[int] = set()
+    for i, j in enumerate(dst):
+        if j < 0:
+            continue  # idle sender (artificial traffic only)
+        if j >= n:
+            raise ValueError(f"{what}: sender {i} targets device {j} "
+                             f"(out of range for {n} devices)")
+        if j == i:
+            raise ValueError(
+                f"{what}: self-send {i}->{i} — self-traffic never crosses "
+                "the network (§4.2 footnote 1) and must be marked idle (-1)")
+        if j in seen_recv:
+            raise ValueError(
+                f"{what}: receiver {j} is targeted by two senders — not a "
+                "(partial) permutation; lowering it to ppermute would "
+                "silently misroute one bucket")
+        seen_recv.add(j)
+    return dst
+
+
+def validate_permutation_slots(slots, n: int) -> None:
+    """Explicit error for non-permutation slots instead of silent misrouting.
+
+    ``aurora_schedule`` only emits valid slots; hand-built or corrupted
+    schedules fail loudly here before the ppermute lowering trusts them.
+    """
+    if n <= 0:
+        raise ValueError(f"schedule needs a positive device count, got {n}")
+    for s_i, slot in enumerate(slots):
+        check_partial_permutation(slot.dst, n, f"slot {s_i}")
+
 
 def time_matrix(d: np.ndarray, bandwidths: np.ndarray | None = None) -> np.ndarray:
     """Traffic → time units. Pair (i, j) moves at ``min(B_i, B_j)`` (Appx. B)."""

@@ -2,6 +2,8 @@
 
 from .alltoall import (aurora_rounds_from_schedule, ep_all_to_all,
                        ep_dispatch_combine, round_robin_rounds)
+from .overlap import pipelined_dispatch_combine
 
 __all__ = ["aurora_rounds_from_schedule", "ep_all_to_all",
-           "ep_dispatch_combine", "round_robin_rounds"]
+           "ep_dispatch_combine", "pipelined_dispatch_combine",
+           "round_robin_rounds"]

@@ -58,7 +58,17 @@ def aurora_rounds_from_schedule(schedule, n: int) -> tuple[tuple[int, ...], ...]
     pairs early, contention-free rounds). Pairs absent from the schedule
     (zero historical traffic) are appended as round-robin cleanup rounds so
     the exchange stays correct under traffic drift (§8 Q4).
+
+    Degenerate inputs are handled explicitly: a single device needs no
+    rounds (self-traffic never crosses the network), and malformed slots
+    (duplicate receivers, self-sends, out-of-range destinations) raise
+    instead of silently misrouting buckets in the ppermute lowering.
     """
+    from repro.core.schedule import validate_permutation_slots
+
+    validate_permutation_slots(schedule.slots, n)
+    if n == 1:
+        return ()
     seen = np.zeros((n, n), dtype=bool)
     rounds: list[tuple[int, ...]] = []
     for slot in schedule.slots:
@@ -90,9 +100,48 @@ def aurora_rounds_from_schedule(schedule, n: int) -> tuple[tuple[int, ...], ...]
     return tuple(rounds)
 
 
+def validate_rounds_cover(rounds, n: int) -> tuple[tuple[int, ...], ...]:
+    """Demand a full contention-free cover from a literal round sequence.
+
+    The exchange bodies trust ``rounds`` blindly: a missing (src, dst) pair
+    leaves that capacity bucket's row as zeros (tokens silently vanish), a
+    duplicate delivers one bucket twice. Everything derived through
+    ``aurora_rounds_from_schedule`` satisfies this by construction; rounds
+    installed verbatim (``swap_rounds`` / engine ``rounds=``) go through
+    here so misuse fails loudly instead. Returns the normalized tuple.
+    """
+    from repro.core.schedule import check_partial_permutation
+
+    rounds = tuple(check_partial_permutation(r, n, f"round {r_i}")
+                   for r_i, r in enumerate(rounds))
+    seen = np.zeros((n, n), dtype=int)
+    for dst in rounds:
+        for i, j in enumerate(dst):
+            if j >= 0:
+                seen[i, j] += 1
+    off = ~np.eye(n, dtype=bool)
+    if n > 1 and not (seen[off] == 1).all():
+        missing = int((seen[off] == 0).sum())
+        dup = int((seen[off] > 1).sum())
+        raise ValueError(
+            f"rounds are not an exact cover of the {n}-device exchange: "
+            f"{missing} ordered pair(s) never exchanged (their token "
+            f"buckets would silently vanish), {dup} exchanged more than "
+            "once")
+    return rounds
+
+
 # ---------------------------------------------------------------------------
 # In-shard_map exchange primitives
 # ---------------------------------------------------------------------------
+
+def flat_axis_index(axis_names):
+    """Row-major flattened device index over ``axis_names`` (traced)."""
+    me = jnp.zeros((), jnp.int32)
+    for ax in axis_names:
+        me = me * axis_size(ax) + jax.lax.axis_index(ax)
+    return me
+
 
 def _exchange_rounds(buf, axis_names, rounds) -> jnp.ndarray:
     """Scheduled exchange: buf (n, ...) slices; out[s] = buf_of_device_s[me].
@@ -103,9 +152,7 @@ def _exchange_rounds(buf, axis_names, rounds) -> jnp.ndarray:
     row-major flattened device index, matching all_to_all's ordering.
     """
     n = buf.shape[0]
-    me = jnp.zeros((), jnp.int32)
-    for ax in axis_names:
-        me = me * axis_size(ax) + jax.lax.axis_index(ax)
+    me = flat_axis_index(axis_names)
     axis_name = tuple(axis_names) if len(axis_names) > 1 else axis_names[0]
     # Row n is a scratch slot for rounds in which this device receives nothing.
     out = jnp.zeros((n + 1,) + buf.shape[1:], buf.dtype)
@@ -144,18 +191,17 @@ def ep_all_to_all(buf, axis_names, rounds=None) -> jnp.ndarray:
 # Full dispatch → expert FFN → combine (runs inside shard_map)
 # ---------------------------------------------------------------------------
 
-def _local_dispatch_combine(xt, valid, router_w, experts, moe, act,
-                            ep_axes, token_axes, rounds):
-    """Per-device body. xt: (T_loc, d) local token slice."""
+def _scatter_buckets(xt, valid, router_w, moe, token_axes):
+    """Shared dispatch prologue of the sync and pipelined bodies.
+
+    Routes the local token slice and scatters it into per-expert capacity
+    buckets. Returns ``(buf (E, C, d), combine, aux, idx)`` where ``combine``
+    maps the returned (E, C, d) expert-output buckets back onto the local
+    token slice (gate-weighted scatter-add)."""
     from repro.models.moe import capacity, dispatch_indices, route
 
     t_loc, d = xt.shape
-    n_ep = 1
-    for ax in ep_axes:
-        n_ep *= axis_size(ax)
     e = moe.n_experts
-    epd = e // n_ep                                  # experts per device
-
     gates, idx, aux = route(router_w, xt, moe)
     aux = jax.lax.pmean(aux, token_axes)
     cap = capacity(t_loc, moe.top_k, e, moe.capacity_factor)
@@ -169,6 +215,51 @@ def _local_dispatch_combine(xt, valid, router_w, experts, moe, act,
     k_f = keep.reshape(-1)
     safe_s = jnp.where(k_f, s_f, cap - 1)
     buf = buf.at[e_f, safe_s].add(jnp.where(k_f[:, None], xt[t_f], 0.0))
+
+    def combine(back):
+        picked = back[e_f, safe_s]
+        picked = jnp.where(k_f[:, None], picked, 0.0)
+        return jnp.zeros_like(xt).at[t_f].add(
+            picked * gates.reshape(-1)[:, None])
+
+    return buf, combine, aux, idx
+
+
+def _replicated_counts(idx, valid, n_experts: int, token_axes):
+    """In-collective ``return_counts``: per-token routed-choice histogram.
+
+    Routing runs inside the shard_map collective, so per-token assignments
+    never materialize outside the per-device program — each device scatters
+    its local (T_loc, E) ``routed_counts`` slice into the global padded token
+    range and a ``psum`` over the token axes replicates the full (T_pad, E)
+    histogram, exactly matching the local paths' output frame."""
+    from repro.models.moe import routed_counts
+
+    cnt = routed_counts(idx, n_experts) * valid[:, None].astype(jnp.float32)
+    t_loc = cnt.shape[0]
+    n_shards = 1
+    for ax in token_axes:
+        n_shards *= axis_size(ax)
+    shard = flat_axis_index(token_axes)
+    full = jnp.zeros((n_shards * t_loc, n_experts), jnp.float32)
+    full = jax.lax.dynamic_update_slice(full, cnt, (shard * t_loc, 0))
+    return jax.lax.psum(full, tuple(token_axes))
+
+
+def _local_dispatch_combine(xt, valid, router_w, experts, moe, act,
+                            ep_axes, token_axes, rounds,
+                            return_counts: bool = False):
+    """Per-device body (synchronous). xt: (T_loc, d) local token slice."""
+    t_loc, d = xt.shape
+    n_ep = 1
+    for ax in ep_axes:
+        n_ep *= axis_size(ax)
+    e = moe.n_experts
+    epd = e // n_ep                                  # experts per device
+
+    buf, combine, aux, idx = _scatter_buckets(xt, valid, router_w, moe,
+                                              token_axes)
+    cap = buf.shape[1]
 
     # First all-to-all (token dispatch, D_N).
     buf = buf.reshape(n_ep, epd, cap, d)
@@ -186,15 +277,14 @@ def _local_dispatch_combine(xt, valid, router_w, experts, moe, act,
     back = ep_all_to_all(out, ep_axes, rounds)       # (E_dev_of_pair …)
     back = back.reshape(e, cap, d)
 
-    # Local combine.
-    picked = back[e_f, safe_s]
-    picked = jnp.where(k_f[:, None], picked, 0.0)
-    y = jnp.zeros_like(xt).at[t_f].add(
-        picked * gates.reshape(-1)[:, None])
+    y = combine(back)
+    if return_counts:
+        return y, aux, _replicated_counts(idx, valid, e, token_axes)
     return y, aux
 
 
-def ep_dispatch_combine(xt, router_w, experts, moe, act, pc):
+def ep_dispatch_combine(xt, router_w, experts, moe, act, pc,
+                        return_counts: bool = False):
     """shard_map wrapper. xt: (T, d) global.
 
     The flat token axis shards over ``pc.token_axes`` (all mesh axes —
@@ -203,6 +293,11 @@ def ep_dispatch_combine(xt, router_w, experts, moe, act, pc):
     crosses the DCN boundary** (DESIGN.md §6). Pads T to a multiple of the
     token-shard count (decode steps can have fewer tokens than devices);
     padded tokens are masked out of dispatch.
+
+    ``pc.ep_overlap=True`` switches the body to the round-pipelined software
+    pipeline (``repro.distributed.overlap``): expert FFN chunks run while the
+    next ppermute round is in flight. ``return_counts=True`` appends the
+    (T, E) routed-choice histogram, psum'd inside the collective.
     """
     ep_axes = tuple(pc.ep_axes)
     token_axes = tuple(pc.token_axes) or ep_axes
@@ -216,20 +311,35 @@ def ep_dispatch_combine(xt, router_w, experts, moe, act, pc):
     if t_pad != t:
         xt = jnp.pad(xt, ((0, t_pad - t), (0, 0)))
 
+    n_ep = 1
+    for ax in ep_axes:
+        n_ep *= mesh.shape[ax]
     rounds = pc.aurora_rounds if pc.moe_impl == "aurora" else None
-    if pc.moe_impl == "aurora" and rounds is None:
-        n_ep = 1
-        for ax in ep_axes:
-            n_ep *= mesh.shape[ax]
+    if rounds is None and (pc.moe_impl == "aurora" or pc.ep_overlap):
+        # The pipeline needs explicit rounds; traffic-blind round robin is
+        # the unscheduled member of the contention-free family.
         rounds = round_robin_rounds(n_ep)
 
+    if pc.ep_overlap:
+        from repro.distributed.overlap import pipelined_local_dispatch_combine
+        body = pipelined_local_dispatch_combine
+    else:
+        body = _local_dispatch_combine
+
+    out_specs = (P(token_axes, None), P())
+    if return_counts:
+        out_specs = out_specs + (P(),)
     fn = shard_map(
-        lambda xs, vs, rw, ex: _local_dispatch_combine(
-            xs, vs, rw, ex, moe, act, ep_axes, token_axes, rounds),
+        lambda xs, vs, rw, ex: body(
+            xs, vs, rw, ex, moe, act, ep_axes, token_axes, rounds,
+            return_counts=return_counts),
         mesh=mesh,
         in_specs=(P(token_axes, None), P(token_axes), P(), P(ep_axes)),
-        out_specs=(P(token_axes, None), P()),
+        out_specs=out_specs,
         check_vma=False,
     )
+    if return_counts:
+        y, aux, counts = fn(xt, valid, router_w, experts)
+        return y[:t], aux, counts[:t]
     y, aux = fn(xt, valid, router_w, experts)
     return y[:t], aux

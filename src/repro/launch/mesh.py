@@ -19,3 +19,26 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_test_mesh(shape=(2, 4), axes=("data", "model")):
     """Small mesh for CPU multi-device tests (requires host-device flag)."""
     return jax.make_mesh(shape, axes)
+
+
+def make_ep_mesh(n_devices: int):
+    """Flat EP mesh for the distributed serving engines: all devices on the
+    ``model`` axis (so any expert count divisible by the device count
+    shards), a singleton ``data`` axis to satisfy the sharding rule table."""
+    return jax.make_mesh((1, n_devices), ("data", "model"))
+
+
+def force_host_device_count(n: int) -> None:
+    """Split the host platform into ``n`` XLA devices (CI / laptop meshes).
+
+    Must run BEFORE the jax backend initializes (first device query) — this
+    is why ``repro.launch.serve`` handles ``--mesh`` before importing jax
+    for real work, and why the mesh test tier sets
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` in the
+    environment instead. A no-op when the flag is already present.
+    """
+    import os
+    cur = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in cur:
+        os.environ["XLA_FLAGS"] = (
+            f"{cur} --xla_force_host_platform_device_count={n}".strip())

@@ -6,6 +6,8 @@ or continuous batching with a streaming (Poisson) arrival process.
       --arrival-rate 0.5 --num-requests 12          # continuous batching
   python -m repro.launch.serve --arch phi3.5-moe-42b-a6.6b \
       --colocate-with phi4-mini-3.8b --reduced --arrival-rate 0.5
+  python -m repro.launch.serve --arch phi3.5-moe-42b-a6.6b --reduced \
+      --experts 8 --arrival-rate 0.5 --mesh 8 --overlap   # distributed EP
 
 ``--arrival-rate λ`` switches to the continuous engine and draws request
 inter-arrival gaps from Exp(λ) (a Poisson process), measured in decode-step
@@ -13,6 +15,14 @@ time units — the serving-loop clock. The colocated mode plans the expert
 pairing with AuroraPlanner from a synthetic routing trace, permutes model B's
 experts accordingly, and serves both streams through one interleaved XLA
 program (see serving/colocated.py).
+
+``--mesh N`` serves EP-sharded over an N-device mesh (on a CPU host the
+platform is split into N virtual devices — the flag must land before jax
+initializes, which is why it is handled first). ``--moe-impl aurora``
+(default) dispatches through the scheduled ppermute rounds, planned from a
+synthetic historical trace; ``--overlap`` pipelines expert FFN chunks with
+in-flight rounds (repro.distributed.overlap). The expert count must divide
+N — use ``--experts`` to widen the reduced configs.
 """
 
 from __future__ import annotations
@@ -55,7 +65,33 @@ def main() -> int:
                     help="continuous engines: serve through the Pallas "
                          "kernel path (sort-based ragged MoE dispatch + "
                          "flash-decode attention; pure-jnp twin on CPU)")
+    ap.add_argument("--mesh", type=int, default=None,
+                    help="serve EP-sharded over an N-device mesh (forces N "
+                         "host-platform devices on CPU; the expert count "
+                         "must divide N)")
+    ap.add_argument("--moe-impl", default=None,
+                    choices=["ep", "aurora"],
+                    help="--mesh dispatch path: monolithic all_to_all (ep) "
+                         "or scheduled ppermute rounds (aurora)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="--mesh: round-pipelined dispatch — expert FFN "
+                         "chunks overlap in-flight ppermute rounds")
+    ap.add_argument("--experts", type=int, default=None,
+                    help="override the MoE expert count (reduced configs "
+                         "clamp to 4, which rarely divides a mesh)")
     args = ap.parse_args()
+
+    if args.mesh is None and (args.overlap or args.moe_impl is not None):
+        # Fail loudly: without a mesh these flags would silently serve the
+        # single-device dense path while the user believes they measured
+        # distributed dispatch.
+        raise SystemExit("--overlap/--moe-impl configure the distributed "
+                         "EP dispatch; add --mesh N (or drop them)")
+    if args.mesh is not None:
+        # Before jax initializes: split the host platform into the mesh's
+        # device count (no-op when real devices exist and the flag is set).
+        from repro.launch.mesh import force_host_device_count
+        force_host_device_count(args.mesh)
 
     import jax
     from repro.configs import get_config
@@ -67,19 +103,55 @@ def main() -> int:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.experts is not None:
+        import dataclasses
+        if cfg.moe is None:
+            raise SystemExit(f"{args.arch} has no MoE layers to widen")
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, n_experts=args.experts))
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
 
+    moe_impl = args.moe_impl or "aurora"
+    mesh = None
+    if args.mesh is not None:
+        if args.arrival_rate is None:
+            raise SystemExit("--mesh serves through the continuous engines; "
+                             "add --arrival-rate")
+        from repro.launch.mesh import make_ep_mesh
+        mesh = make_ep_mesh(args.mesh)
+
     if args.colocate_with is None:
         if args.arrival_rate is not None:
-            eng = ContinuousEngine(model, params, batch_slots=args.batch,
-                                   cache_cap=args.cache_cap,
-                                   prefill_len=args.prompt_len,
-                                   prefill_chunk=args.prefill_chunk,
-                                   step_token_budget=args.step_budget,
-                                   bucket_policy=args.bucket_policy,
-                                   kernels=args.kernels)
+            kw = dict(batch_slots=args.batch, cache_cap=args.cache_cap,
+                      prefill_len=args.prompt_len,
+                      prefill_chunk=args.prefill_chunk,
+                      step_token_budget=args.step_budget,
+                      bucket_policy=args.bucket_policy, kernels=args.kernels)
+            if mesh is not None:
+                from repro.core import synthetic_trace
+                from repro.serving import (DistributedEngine,
+                                           rounds_from_trace)
+                if cfg.moe is None:
+                    raise SystemExit(
+                        f"{args.arch} has no MoE layers — --mesh serves "
+                        "expert-parallel (nothing to shard); drop --mesh or "
+                        "pick an MoE arch")
+                n = cfg.moe.n_experts
+                hist = synthetic_trace("hist", n_experts=n, n_layers=2,
+                                       seed=0)
+                rounds = (rounds_from_trace(hist, args.mesh)
+                          if moe_impl == "aurora" else None)
+                eng = DistributedEngine(model, params, mesh=mesh,
+                                        moe_impl=moe_impl,
+                                        rounds=rounds, overlap=args.overlap,
+                                        **kw)
+                print(f"distributed EP serving: {args.mesh}-device mesh, "
+                      f"impl={moe_impl}, overlap={args.overlap}, "
+                      f"{len(rounds or ())} scheduled rounds")
+            else:
+                eng = ContinuousEngine(model, params, **kw)
             reqs = poisson_requests(
                 rng, args.num_requests, args.arrival_rate, cfg.vocab,
                 args.prompt_len, max(1, args.max_new_tokens // 2),
@@ -109,6 +181,11 @@ def main() -> int:
     cfg_b = get_config(args.colocate_with)
     if args.reduced:
         cfg_b = cfg_b.reduced()
+    if args.experts is not None and cfg_b.moe is not None:
+        import dataclasses
+        cfg_b = dataclasses.replace(
+            cfg_b, moe=dataclasses.replace(cfg_b.moe,
+                                           n_experts=args.experts))
     model_b = Model(cfg_b)
     params_b = model_b.init(jax.random.PRNGKey(1))
 
@@ -137,17 +214,25 @@ def main() -> int:
             from repro.serving import OnlineReplanner
             replan = OnlineReplanner(planner, interval=args.replan_interval,
                                      threshold=args.replan_threshold)
-        eng = ColocatedContinuousEngine(model, model_b, params, params_b,
-                                        batch_slots=args.batch,
-                                        cache_cap=args.cache_cap,
-                                        prefill_len=args.prompt_len,
-                                        prefill_chunk=args.prefill_chunk,
-                                        step_token_budget=args.step_budget,
-                                        bucket_policy=args.bucket_policy,
-                                        pair=(list(plan.pair) if plan
-                                              else None),
-                                        replan=replan,
-                                        kernels=args.kernels)
+        kw = dict(batch_slots=args.batch, cache_cap=args.cache_cap,
+                  prefill_len=args.prompt_len,
+                  prefill_chunk=args.prefill_chunk,
+                  step_token_budget=args.step_budget,
+                  bucket_policy=args.bucket_policy,
+                  pair=(list(plan.pair) if plan else None),
+                  replan=replan, kernels=args.kernels)
+        if mesh is not None:
+            from repro.serving import DistributedColocatedEngine
+            eng = DistributedColocatedEngine(
+                model, model_b, params, params_b, mesh=mesh,
+                moe_impl=moe_impl, plan=plan, overlap=args.overlap,
+                **kw)
+            print(f"distributed EP colocation: {args.mesh}-device mesh, "
+                  f"impl={moe_impl}, overlap={args.overlap}, "
+                  f"{len(eng.rounds or ())} scheduled rounds")
+        else:
+            eng = ColocatedContinuousEngine(model, model_b, params, params_b,
+                                            **kw)
         lo = max(1, args.max_new_tokens // 2)
         reqs_a = poisson_requests(rng, args.num_requests, args.arrival_rate,
                                   cfg.vocab, args.prompt_len, lo,

@@ -56,6 +56,9 @@ class ParallelContext:
     #                                          ever crosses the DCN boundary)
     seq_axis: str | None = None
     aurora_rounds: tuple[tuple[int, ...], ...] | None = None  # ppermute schedule
+    ep_overlap: bool = False  # round-pipelined dispatch: expert FFN chunks
+    #                           overlap in-flight ppermute rounds
+    #                           (repro.distributed.overlap)
     moe_impl: str = "dense"  # dense | ep | aurora | kernel
     kernels: KernelConfig | None = None      # non-None → kernelized hot path
     flash_block: int = 1024

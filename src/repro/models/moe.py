@@ -296,7 +296,8 @@ def moe_apply_kernel(p, x, moe, act: str,
 # Expert-parallel dispatch (shard_map): all_to_all baseline / Aurora rounds
 # ---------------------------------------------------------------------------
 
-def moe_apply_ep(p, x, moe, act: str, pc: ParallelContext):
+def moe_apply_ep(p, x, moe, act: str, pc: ParallelContext,
+                 return_counts: bool = False):
     """Expert-parallel MoE layer over ``pc.ep_axes``.
 
     Tokens must arrive sharded so that every EP device holds a token slice
@@ -304,36 +305,39 @@ def moe_apply_ep(p, x, moe, act: str, pc: ParallelContext):
     Expert weights are sharded over the flat EP axis (experts_per_device =
     E / ep_size ≥ 1). Dispatch/return all-to-alls run inside ``shard_map``;
     ``pc.aurora_rounds`` switches the collective to the scheduled ppermute
-    rounds.
+    rounds, and ``pc.ep_overlap`` pipelines expert FFN chunks with in-flight
+    rounds (``repro.distributed.overlap``).
+
+    ``return_counts=True`` appends the same (..., E) routed-choice histogram
+    the local paths emit: routing happens inside the collective, so the
+    per-device count slices are scattered into the global token range and
+    ``psum``-replicated in-collective (``alltoall._replicated_counts``) —
+    live traffic monitoring works distributed.
     """
     from repro.distributed.alltoall import ep_dispatch_combine
 
     shape = x.shape
     d = shape[-1]
     xt = x.reshape(-1, d)
-    y, aux = ep_dispatch_combine(
-        xt, p["router"], p["experts"], moe, act, pc)
+    out = ep_dispatch_combine(
+        xt, p["router"], p["experts"], moe, act, pc,
+        return_counts=return_counts)
+    if return_counts:
+        y, aux, counts = out
+    else:
+        y, aux = out
     if "shared" in p:
         y = y + ffn_apply(p["shared"], xt, act, pc)
+    if return_counts:
+        return (y.reshape(shape), aux,
+                counts.reshape(shape[:-1] + (moe.n_experts,)))
     return y.reshape(shape), aux
 
 
 def moe_apply(p, x, moe, act: str, pc: ParallelContext = NO_PARALLEL,
               return_counts: bool = False):
     if pc.moe_impl in ("ep", "aurora") and pc.ep_axes:
-        if return_counts:
-            # Counts are genuinely unavailable here and only here: routing
-            # runs inside the shard_map collective (repro.distributed
-            # .alltoall.ep_dispatch_combine), so per-token assignments never
-            # leave the per-device program. Every local path derives them
-            # from the routing output (``routed_counts``).
-            raise NotImplementedError(
-                f"return_counts is not available on the '{pc.moe_impl}' "
-                "dispatch path: routing happens inside the shard_map "
-                "all-to-all and per-token expert assignments never "
-                "materialize outside the collective — serve with the "
-                "'dense' or 'kernel' dispatch path to monitor live traffic")
-        return moe_apply_ep(p, x, moe, act, pc)
+        return moe_apply_ep(p, x, moe, act, pc, return_counts=return_counts)
     if pc.moe_impl == "kernel":
         return moe_apply_kernel(p, x, moe, act, pc,
                                 return_counts=return_counts)

@@ -1,17 +1,25 @@
 """Serving: static + continuous single-model engines, Aurora colocation
 (dual-model static + continuous, N-tenant continuous), live traffic
-monitoring + online re-planning/re-grouping."""
+monitoring + online re-planning/re-grouping, and the EP-sharded distributed
+engines (mesh decode, round-pipelined dispatch, live schedule refresh)."""
 
 from .engine import (ContinuousEngine, Request, ServingEngine,
                      make_bucketer, poisson_requests, serve_stream)
 from .colocated import (ColocatedContinuousEngine, ColocatedEngine,
                         MultiTenantContinuousEngine, apply_pairing,
                         build_lockstep_step, inverse_pair)
+from .distributed import (DistributedColocatedEngine, DistributedEngine,
+                          DistributedMultiTenantEngine, device_traffic,
+                          rounds_from_plan, rounds_from_trace,
+                          rounds_from_traffic)
 from .monitor import OnlineReplanner, ReplanEvent, TrafficMonitor
 
 __all__ = ["Request", "ServingEngine", "ContinuousEngine",
            "ColocatedEngine", "ColocatedContinuousEngine",
-           "MultiTenantContinuousEngine", "apply_pairing",
-           "build_lockstep_step", "inverse_pair", "make_bucketer",
-           "poisson_requests", "serve_stream", "TrafficMonitor",
-           "OnlineReplanner", "ReplanEvent"]
+           "MultiTenantContinuousEngine", "DistributedEngine",
+           "DistributedColocatedEngine", "DistributedMultiTenantEngine",
+           "apply_pairing", "build_lockstep_step", "device_traffic",
+           "inverse_pair", "make_bucketer", "poisson_requests",
+           "rounds_from_plan", "rounds_from_trace", "rounds_from_traffic",
+           "serve_stream", "TrafficMonitor", "OnlineReplanner",
+           "ReplanEvent"]

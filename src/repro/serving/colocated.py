@@ -169,7 +169,7 @@ class ColocatedContinuousEngine:
                  step_token_budget: int | None = None,
                  bucket_policy="pow2", pair: list[int] | None = None,
                  replan=None, monitor_halflife: float = 128.0,
-                 kernels=False):
+                 kernels=False, step_wrapper=None):
         from .engine import ContinuousEngine
         from .monitor import TrafficMonitor
 
@@ -213,7 +213,7 @@ class ColocatedContinuousEngine:
         kw = dict(prefill_len=prefill_len, jit=jit,
                   prefill_chunk=prefill_chunk,
                   step_token_budget=step_token_budget,
-                  bucket_policy=bucket_policy)
+                  bucket_policy=bucket_policy, step_wrapper=step_wrapper)
         self.pool_a = ContinuousEngine(model_a, params_a, batch_slots,
                                        cache_cap, monitor=self.monitor_a,
                                        **kw)
@@ -221,10 +221,17 @@ class ColocatedContinuousEngine:
                                        cache_cap, monitor=self.monitor_b,
                                        **kw)
 
-        self._step = build_lockstep_step([model_a, model_b],
-                                         collect_stats=replan is not None,
-                                         jit=jit)
+        self._jit = jit
+        self._step_wrapper = step_wrapper or (lambda fn: fn)
+        self._build_lockstep()
         self.decode_steps = 0
+
+    def _build_lockstep(self) -> None:
+        """(Re)build the fused lockstep step from the pools' current models
+        (rebuilt when a distributed engine swaps ppermute rounds)."""
+        self._step = self._step_wrapper(build_lockstep_step(
+            [self.model_a, self.model_b],
+            collect_stats=self.replan is not None, jit=self._jit))
 
     @property
     def replan_events(self) -> list:
@@ -314,7 +321,7 @@ class MultiTenantContinuousEngine:
                  bucket_policy="pow2",
                  groups: list[tuple[int, ...]] | None = None,
                  replan=None, monitor_halflife: float = 128.0,
-                 kernels=False):
+                 kernels=False, step_wrapper=None):
         from .engine import ContinuousEngine
         from .monitor import TrafficMonitor
 
@@ -379,16 +386,23 @@ class MultiTenantContinuousEngine:
         kw = dict(prefill_len=prefill_len, jit=jit,
                   prefill_chunk=prefill_chunk,
                   step_token_budget=step_token_budget,
-                  bucket_policy=bucket_policy)
+                  bucket_policy=bucket_policy, step_wrapper=step_wrapper)
         self.pools = [
             ContinuousEngine(m, p, batch_slots, cache_cap,
                              monitor=(self.monitors[t] if self.monitors
                                       else None), **kw)
             for t, (m, p) in enumerate(zip(models, params))]
-        self._step = build_lockstep_step(self.models,
-                                         collect_stats=replan is not None,
-                                         jit=jit)
+        self._jit = jit
+        self._step_wrapper = step_wrapper or (lambda fn: fn)
+        self._build_lockstep()
         self.decode_steps = 0
+
+    def _build_lockstep(self) -> None:
+        """(Re)build the fused N-tenant step from the pools' current models
+        (rebuilt when a distributed engine swaps ppermute rounds)."""
+        self._step = self._step_wrapper(build_lockstep_step(
+            self.models, collect_stats=self.replan is not None,
+            jit=self._jit))
 
     @property
     def replan_events(self) -> list:

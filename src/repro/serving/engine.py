@@ -200,7 +200,8 @@ class ContinuousEngine:
                  prefill_len: int | None = None, jit: bool = True,
                  prefill_chunk: int | None = None,
                  step_token_budget: int | None = None,
-                 bucket_policy="pow2", monitor=None, kernels=False):
+                 bucket_policy="pow2", monitor=None, kernels=False,
+                 step_wrapper: Callable | None = None):
         if kernels:
             model = model.with_kernels(kernels)
         self.model = model
@@ -226,22 +227,43 @@ class ContinuousEngine:
         self.queue: collections.deque[Request] = collections.deque()
         self.slots: list[Request | None] = [None] * batch_slots
         self._pending = None        # in-flight chunked prefill (at most one)
-        stats = monitor is not None
-        fn_p = partial(model.prefill_slot, cap=cache_cap, src_len=src_len,
-                       collect_moe_stats=stats)
-        self._prefill = (jax.jit(fn_p, donate_argnums=(2,)) if jit else fn_p)
+        self._jit = jit
+        # Distributed engines wrap every compiled step so it runs under the
+        # mesh context (``with_sharding_constraint`` needs an active mesh on
+        # legacy jax); identity for the single-device engines.
+        self._step_wrapper = step_wrapper or (lambda fn: fn)
+        self._build_steps()
+        self.decode_steps = 0
+
+    def _build_steps(self) -> None:
+        """(Re)build the jitted step programs from ``self.model``."""
+        model, jit, wrap = self.model, self._jit, self._step_wrapper
+        stats = self.monitor is not None
+        fn_p = partial(model.prefill_slot, cap=self.cache_cap,
+                       src_len=self.src_len, collect_moe_stats=stats)
+        self._prefill = wrap(jax.jit(fn_p, donate_argnums=(2,))
+                             if jit else fn_p)
         fn_c = partial(model.prefill, collect_moe_stats=stats,
                        continuation=True)
-        self._chunk = (jax.jit(fn_c, donate_argnums=(2,)) if jit else fn_c)
+        self._chunk = wrap(jax.jit(fn_c, donate_argnums=(2,))
+                           if jit else fn_c)
         # Final chunk + slot merge fused into one program. The batch-1 sub
         # cache is donated but cannot alias the batch-N outputs, so only
         # the shared cache (arg 3) aliases in place.
         fn_m = partial(model.prefill_merge_slot, collect_moe_stats=stats)
-        self._chunk_merge = (jax.jit(fn_m, donate_argnums=(3,))
-                             if jit else fn_m)
+        self._chunk_merge = wrap(jax.jit(fn_m, donate_argnums=(3,))
+                                 if jit else fn_m)
         fn_d = model.decode_step_stats if stats else model.decode_step
-        self._decode = jax.jit(fn_d, donate_argnums=(2,)) if jit else fn_d
-        self.decode_steps = 0
+        self._decode = wrap(jax.jit(fn_d, donate_argnums=(2,))
+                            if jit else fn_d)
+
+    def _rebind(self, model: Model) -> None:
+        """Swap the model (e.g. a ``ParallelContext`` with fresh ppermute
+        rounds) and rebuild the jitted steps. Serving state — cache, slots,
+        queue, in-flight prefill — is untouched: a rebind mid-stream is
+        placement-only as long as the new model computes the same function."""
+        self.model = model
+        self._build_steps()
 
     # -- scheduler ---------------------------------------------------------
     @property

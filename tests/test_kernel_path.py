@@ -126,19 +126,20 @@ def test_moe_apply_kernel_interpret_capacity_alignment(block_c):
                                rtol=2e-5, atol=2e-5)
 
 
-def test_moe_apply_counts_error_is_ep_only():
-    """The EP/aurora paths (routing inside the shard_map collective) are the
-    only place counts are refused — and the error says why and where to go."""
+def test_moe_apply_counts_flow_on_every_path():
+    """``return_counts`` is available on every dispatch path: dense and
+    kernel locally (here), EP/aurora in-collective — routing runs inside the
+    shard_map all-to-all, so the counts are psum-replicated out of it
+    (mesh-backed equality with the dense histogram is asserted in
+    ``tests/test_distributed_serving.py``)."""
     cfg = get_config("phi3.5-moe-42b-a6.6b").reduced()
     p = init_moe(jax.random.PRNGKey(0), cfg.d_model, cfg.moe, jnp.float32)
     x = jax.random.normal(jax.random.PRNGKey(1), (4, cfg.d_model))
-    pc_ep = ParallelContext(moe_impl="ep", ep_axes=("x",))
-    with pytest.raises(NotImplementedError, match="all-to-all"):
-        moe_apply(p, x, cfg.moe, cfg.act, pc_ep, return_counts=True)
-    # kernel path: counts flow
-    _, _, counts = moe_apply(p, x, cfg.moe, cfg.act, _kernel_pc(),
-                             return_counts=True)
-    assert counts.shape == (4, cfg.moe.n_experts)
+    _, _, c_dense = moe_apply(p, x, cfg.moe, cfg.act, return_counts=True)
+    _, _, c_kernel = moe_apply(p, x, cfg.moe, cfg.act, _kernel_pc(),
+                               return_counts=True)
+    assert c_dense.shape == (4, cfg.moe.n_experts)
+    np.testing.assert_array_equal(np.asarray(c_kernel), np.asarray(c_dense))
 
 
 # -- decode_attn_auto -------------------------------------------------------
