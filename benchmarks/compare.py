@@ -77,6 +77,14 @@ METRICS = [
      True, False),
     ("kernel decode speedup", lambda r: _get(r, "kernels.decode_speedup"),
      True, False),
+    ("skew replicated tok/s",
+     lambda r: _get(r, "skew.replicated.tok_per_s"), True, True),
+    ("skew unreplicated tok/s",
+     lambda r: _get(r, "skew.static.tok_per_s"), True, False),
+    ("skew replication gain (simulated)",
+     lambda r: _get(r, "skew.improvement"), True, False),
+    ("skew throughput ratio",
+     lambda r: _get(r, "skew.throughput_ratio"), True, False),
 ] + [
     (f"multi N={n} tok/s",
      lambda r, n=n: _get(r, f"multi.tenants.{n}.engine.tok_per_s"),
@@ -93,7 +101,7 @@ METRICS = [
 # the top level of a record is reported as new/dropped instead of being
 # silently ignored — adding a bench section must never break the trend gate.
 KNOWN_SECTIONS = {"continuous", "chunked", "drift", "kernels", "multi",
-                  "overlap"}
+                  "overlap", "skew"}
 
 
 def _section_rows(baseline: dict, new: dict):

@@ -29,8 +29,10 @@ from .matching import bottleneck_perfect_matching
 from .schedule import CommSchedule, aurora_schedule
 from .simulator import (SimResult, colocated_inference_time,
                         exclusive_inference_time,
-                        multi_colocated_inference_time)
-from .traffic import MoETrace
+                        multi_colocated_inference_time,
+                        replicated_inference_time)
+from .traffic import (MoETrace, replicated_ffn_loads, replicated_traffic,
+                      validate_replication)
 from .assignment import apply_assignment
 
 
@@ -45,6 +47,19 @@ class Plan:
     # on slot g, tenant 0 the identity anchor. For two tenants this carries
     # the same information as ``pair`` (groups[g] == (g, pair[g])).
     groups: tuple[tuple[int, ...], ...] | None = None
+    # Replicated plans (scenario "...+replicated"): replication[e] lists the
+    # devices hosting a copy of expert e, HOME device first. Tokens split
+    # evenly across copies (the shard-of-token rule), so this is pure
+    # deployment data — the routed function never changes. None = no
+    # replication (every expert only on its home device).
+    replication: tuple[tuple[int, ...], ...] | None = None
+
+    @property
+    def replication_counts(self) -> tuple[int, ...] | None:
+        """Per-expert replication factor (len of each host tuple)."""
+        if self.replication is None:
+            return None
+        return tuple(len(h) for h in self.replication)
 
     @property
     def n_layers(self) -> int:
@@ -194,6 +209,99 @@ class AuroraPlanner:
                                        None if cl.homogeneous else s2d)
         return Plan(scenario, np.arange(n) if cl.homogeneous else s2d,
                     pair, schedules, pred)
+
+    # -- expert replication (exclusive + hot-expert copies) ------------------
+    def plan_replicated(self, trace: MoETrace, tolerance: float = 0.1,
+                        max_total_replicas: int | None = None,
+                        total_multiple: int | None = None) -> Plan:
+        """Exclusive deployment with the hottest experts replicated.
+
+        Greedy: while the hottest device's FFN load exceeds the mean by more
+        than ``tolerance`` (relative), copy the expert with the largest
+        per-replica token share onto the least-loaded device not already
+        hosting it — each copy halves (r→r+1) that expert's per-device
+        share under the shard-of-token rule. Stops when balanced, when no
+        copy improves the bottleneck, or after ``max_total_replicas`` extra
+        copies (default: one per device). ``total_multiple`` then pads the
+        total physical expert count up to a multiple (EP sharding needs the
+        physical axis divisible by the device count) with the best legal
+        copies even when already balanced.
+
+        Replication is placement-only: replicas are pure weight copies and
+        routing stays in the logical expert frame, so the plan changes WHERE
+        routed tokens are computed, never which tokens are routed where.
+        """
+        cl = self.cluster
+        n = trace.n
+        if cl.n != n:
+            raise ValueError("one home device per expert required")
+        if not cl.homogeneous:
+            raise ValueError("plan_replicated supports homogeneous clusters")
+        mean_d = np.mean([trace.layer(l) for l in range(len(trace.layers))],
+                         axis=0)
+        col = mean_d.sum(axis=0)
+        replicas = [[e] for e in range(n)]
+        budget = n if max_total_replicas is None else int(max_total_replicas)
+
+        def best_copy(loads):
+            """(expert, host) whose copy most lowers the peak load, or None."""
+            share = np.array([col[e] / len(replicas[e]) for e in range(n)])
+            best = None
+            for e in np.argsort(-share):
+                hosts = [d for d in np.argsort(loads)
+                         if d not in replicas[e]]
+                if not hosts:
+                    continue
+                host = int(hosts[0])
+                new_share = col[e] / (len(replicas[e]) + 1)
+                peak = max(float(loads[host] + new_share),
+                           *(float(loads[d] - share[e] + new_share)
+                             for d in replicas[e]),
+                           *(float(loads[d]) for d in range(n)
+                             if d != host and d not in replicas[e]))
+                if best is None or peak < best[0]:
+                    best = (peak, int(e), host)
+            return best
+
+        extra = 0
+        while extra < budget:
+            loads = replicated_ffn_loads(mean_d, replicas)
+            if loads.max() <= (1.0 + tolerance) * loads.mean():
+                break
+            cand = best_copy(loads)
+            if cand is None or cand[0] >= loads.max() - 1e-12:
+                break                       # no copy improves the bottleneck
+            _, e, host = cand
+            replicas[e].append(host)
+            extra += 1
+        if total_multiple is not None and total_multiple > 0:
+            while sum(len(r) for r in replicas) % total_multiple:
+                cand = best_copy(replicated_ffn_loads(mean_d, replicas))
+                if cand is None:
+                    raise ValueError(
+                        f"cannot pad replication to a multiple of "
+                        f"{total_multiple}: every expert is everywhere")
+                _, e, host = cand
+                replicas[e].append(host)
+
+        rep = validate_replication([tuple(r) for r in replicas], n)
+        bw = np.asarray(cl.bandwidths, float)
+        schedules = tuple(
+            aurora_schedule(replicated_traffic(trace.layer(l), rep), bw)
+            for l in range(len(trace.layers)))
+        pred = self.evaluate_replicated(trace, rep)
+        return Plan("exclusive+homogeneous+replicated", np.arange(n), None,
+                    schedules, pred, replication=rep)
+
+    def evaluate_replicated(self, trace: MoETrace, replicas) -> SimResult:
+        """Predicted inference time of an EXISTING replica placement on
+        (possibly new) traces — the scoring leg of online re-replication."""
+        rep = validate_replication(replicas, trace.n)
+        return _mean_sim([
+            replicated_inference_time(trace, l, self.cluster, rep,
+                                      policy="aurora")
+            for l in range(len(trace.layers))
+        ])
 
     # -- plan evaluation (re-planning support) ------------------------------
     def evaluate_colocated(self, trace_a: MoETrace, trace_b: MoETrace,

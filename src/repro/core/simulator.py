@@ -32,7 +32,8 @@ from .assignment import apply_assignment
 from .cluster import Cluster
 from .colocation import aggregate_traffic, aggregate_traffic_multi, lina_packing
 from .schedule import comm_time
-from .traffic import MoETrace, strip_diagonal
+from .traffic import (MoETrace, replicated_ffn_loads, replicated_traffic,
+                      strip_diagonal)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,6 +79,47 @@ def exclusive_inference_time(
     return SimResult(t, util, dict(
         gate=float(gate.max()), N=n_time, ffn=float(ffn.max()),
         C=c_time, agg=float(agg.max()),
+    ))
+
+
+def replicated_inference_time(
+    trace: MoETrace,
+    layer: int,
+    cluster: Cluster,
+    replicas,
+    policy: str = "aurora",
+    seed: int = 0,
+) -> SimResult:
+    """Exclusive scenario with hot experts replicated across devices.
+
+    ``replicas[e]`` lists the devices hosting a copy of expert e (home
+    first); tokens split evenly across copies (the shard-of-token rule), so
+    a device hosting r copies of a hot expert receives 1/r of its column —
+    both the all-to-all bottleneck column and the FFN straggler shrink.
+    Shares absorbed by a replica on the token's own source device never
+    cross the network but still count as FFN load.
+    """
+    d_exp = trace.layer(layer)
+    n = d_exp.shape[0]
+    if cluster.n != n:
+        raise ValueError("one home device per expert required")
+    d_dev = replicated_traffic(d_exp, replicas)
+    ffn_tokens = replicated_ffn_loads(d_exp, replicas)
+    bw, comp = _device_arrays(cluster)
+
+    gate = trace.gate / comp
+    ffn = trace.ffn_time(ffn_tokens) / comp
+    agg = trace.agg / comp
+    n_time = comm_time(d_dev, policy, bw, seed=seed)
+    c_time = comm_time(d_dev.T, policy, bw, seed=seed + 1)
+
+    t = float(gate.max() + n_time + ffn.max() + c_time + agg.max())
+    busy = gate + ffn + agg
+    util = float(np.mean(busy / t)) if t > 0 else 1.0
+    return SimResult(t, util, dict(
+        gate=float(gate.max()), N=n_time, ffn=float(ffn.max()),
+        C=c_time, agg=float(agg.max()),
+        n_replicas=int(sum(len(h) for h in replicas)),
     ))
 
 

@@ -57,6 +57,74 @@ def traffic_from_routing(
     return strip_diagonal(d)
 
 
+def validate_replication(replicas, n: int) -> tuple[tuple[int, ...], ...]:
+    """Normalize/validate a per-expert replica placement.
+
+    ``replicas[e]`` lists the devices hosting a copy of expert e, HOME device
+    first (the planner world puts expert e's home on device e, the identity
+    placement every trace uses). Every entry must be a non-empty sequence of
+    distinct device ids in ``range(n)`` starting with ``e``.
+    """
+    if len(replicas) != n:
+        raise ValueError(f"replication needs one host tuple per expert "
+                         f"({n}), got {len(replicas)}")
+    out = []
+    for e, hosts in enumerate(replicas):
+        hosts = tuple(int(h) for h in hosts)
+        if not hosts or hosts[0] != e:
+            raise ValueError(f"replicas[{e}] must start with the home device "
+                             f"{e}, got {hosts}")
+        if len(set(hosts)) != len(hosts):
+            raise ValueError(f"replicas[{e}] has duplicate hosts: {hosts}")
+        if any(h < 0 or h >= n for h in hosts):
+            raise ValueError(f"replicas[{e}] out of range(n={n}): {hosts}")
+        out.append(hosts)
+    return tuple(out)
+
+
+def replicated_traffic(d: np.ndarray, replicas) -> np.ndarray:
+    """Replica-aware device traffic for one all-to-all phase.
+
+    Tokens bound for expert e split EVENLY across its replica hosts — the
+    deterministic shard-of-token rule (routed rank r of expert e goes to
+    replica ``r % r_e``), which distributes any source's flow uniformly.
+    A replica hosted on the token's own source device absorbs its 1/r_e
+    share locally (footnote 1: self-traffic never crosses the network), so
+    replication cuts both the hot column AND total network bytes.
+    """
+    d = validate_traffic(d)
+    n = d.shape[0]
+    replicas = validate_replication(replicas, n)
+    out = np.zeros_like(d)
+    for e, hosts in enumerate(replicas):
+        share = d[:, e] / len(hosts)
+        for h in hosts:
+            out[:, h] += share
+    return strip_diagonal(out)
+
+
+def replicated_ffn_loads(d: np.ndarray, replicas) -> np.ndarray:
+    """Per-device expert-FFN token load under a replica placement.
+
+    Unlike the network matrix, FFN load counts the locally-absorbed shares
+    too — a replica still computes the tokens it keeps off the wire.
+    """
+    d = validate_traffic(d)
+    n = d.shape[0]
+    replicas = validate_replication(replicas, n)
+    loads = np.zeros(n)
+    for e, hosts in enumerate(replicas):
+        share = d[:, e].sum() / len(hosts)
+        for h in hosts:
+            loads[h] += share
+    return loads
+
+
+def identity_replication(n: int) -> tuple[tuple[int], ...]:
+    """The no-replication placement: every expert only on its home device."""
+    return tuple((e,) for e in range(n))
+
+
 def row_col_sums(d: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     d = validate_traffic(d)
     return d.sum(axis=1), d.sum(axis=0)

@@ -191,14 +191,21 @@ def ep_all_to_all(buf, axis_names, rounds=None) -> jnp.ndarray:
 # Full dispatch → expert FFN → combine (runs inside shard_map)
 # ---------------------------------------------------------------------------
 
-def _scatter_buckets(xt, valid, router_w, moe, token_axes):
+def _scatter_buckets(xt, valid, router_w, moe, token_axes, spec=None):
     """Shared dispatch prologue of the sync and pipelined bodies.
 
     Routes the local token slice and scatters it into per-expert capacity
-    buckets. Returns ``(buf (E, C, d), combine, aux, idx)`` where ``combine``
-    maps the returned (E, C, d) expert-output buckets back onto the local
-    token slice (gate-weighted scatter-add)."""
-    from repro.models.moe import capacity, dispatch_indices, route
+    buckets. Returns ``(buf (E', C, d), combine, aux, idx)`` where ``combine``
+    maps the returned (E', C, d) expert-output buckets back onto the local
+    token slice (gate-weighted scatter-add).
+
+    ``spec`` (a ``moe.ReplicationSpec``) widens the bucket frame to the
+    physical expert count: routing/capacity/drops stay in the LOGICAL frame
+    (bit-identical to no replication), then kept rank r of expert e lands on
+    replica ``r % r_e`` at position ``r // r_e`` — the same shard-of-token
+    rule as the local paths, so replicas are placement-only."""
+    from repro.models.moe import capacity, dispatch_indices, replica_arrays, \
+        route
 
     t_loc, d = xt.shape
     e = moe.n_experts
@@ -208,12 +215,20 @@ def _scatter_buckets(xt, valid, router_w, moe, token_axes):
     slot, keep = dispatch_indices(idx, e, cap)
     keep = keep & valid[:, None]
 
-    # Scatter local tokens into per-(expert) capacity buckets: (E, C, d).
-    buf = jnp.zeros((e, cap, d), xt.dtype)
+    # Scatter local tokens into per-(expert) capacity buckets: (E', C, d).
     tok_ids = jnp.broadcast_to(jnp.arange(t_loc)[:, None], idx.shape)
     e_f, s_f, t_f = idx.reshape(-1), slot.reshape(-1), tok_ids.reshape(-1)
     k_f = keep.reshape(-1)
+    if spec is not None:
+        base, reps = replica_arrays(spec)
+        r_f = reps[e_f]
+        e_f = base[e_f] + s_f % r_f
+        s_f = s_f // r_f
+        n_phys = spec.n_phys
+    else:
+        n_phys = e
     safe_s = jnp.where(k_f, s_f, cap - 1)
+    buf = jnp.zeros((n_phys, cap, d), xt.dtype)
     buf = buf.at[e_f, safe_s].add(jnp.where(k_f[:, None], xt[t_f], 0.0))
 
     def combine(back):
@@ -248,18 +263,18 @@ def _replicated_counts(idx, valid, n_experts: int, token_axes):
 
 def _local_dispatch_combine(xt, valid, router_w, experts, moe, act,
                             ep_axes, token_axes, rounds,
-                            return_counts: bool = False):
+                            return_counts: bool = False, spec=None):
     """Per-device body (synchronous). xt: (T_loc, d) local token slice."""
     t_loc, d = xt.shape
     n_ep = 1
     for ax in ep_axes:
         n_ep *= axis_size(ax)
     e = moe.n_experts
-    epd = e // n_ep                                  # experts per device
 
     buf, combine, aux, idx = _scatter_buckets(xt, valid, router_w, moe,
-                                              token_axes)
-    cap = buf.shape[1]
+                                              token_axes, spec=spec)
+    n_phys, cap = buf.shape[0], buf.shape[1]
+    epd = n_phys // n_ep                             # experts per device
 
     # First all-to-all (token dispatch, D_N).
     buf = buf.reshape(n_ep, epd, cap, d)
@@ -275,7 +290,7 @@ def _local_dispatch_combine(xt, valid, router_w, experts, moe, act,
     # property carries over by symmetry.
     out = out.reshape(epd, n_ep, cap, d).transpose(1, 0, 2, 3)
     back = ep_all_to_all(out, ep_axes, rounds)       # (E_dev_of_pair …)
-    back = back.reshape(e, cap, d)
+    back = back.reshape(n_phys, cap, d)
 
     y = combine(back)
     if return_counts:
@@ -314,6 +329,13 @@ def ep_dispatch_combine(xt, router_w, experts, moe, act, pc,
     n_ep = 1
     for ax in ep_axes:
         n_ep *= mesh.shape[ax]
+    spec = pc.moe_replication
+    if spec is not None and spec.n_phys % n_ep != 0:
+        raise ValueError(
+            f"replicated physical expert count {spec.n_phys} does not "
+            f"divide over the {n_ep}-device EP axis — pad the replication "
+            f"(planner: total_multiple={n_ep}) so every device hosts the "
+            "same number of physical experts")
     rounds = pc.aurora_rounds if pc.moe_impl == "aurora" else None
     if rounds is None and (pc.moe_impl == "aurora" or pc.ep_overlap):
         # The pipeline needs explicit rounds; traffic-blind round robin is
@@ -332,7 +354,7 @@ def ep_dispatch_combine(xt, router_w, experts, moe, act, pc,
     fn = shard_map(
         lambda xs, vs, rw, ex: body(
             xs, vs, rw, ex, moe, act, ep_axes, token_axes, rounds,
-            return_counts=return_counts),
+            return_counts=return_counts, spec=spec),
         mesh=mesh,
         in_specs=(P(token_axes, None), P(token_axes), P(), P(ep_axes)),
         out_specs=out_specs,

@@ -43,7 +43,7 @@ from .alltoall import _replicated_counts, _scatter_buckets, flat_axis_index
 
 def pipelined_local_dispatch_combine(xt, valid, router_w, experts, moe, act,
                                      ep_axes, token_axes, rounds,
-                                     return_counts: bool = False):
+                                     return_counts: bool = False, spec=None):
     """Per-device body of the round-pipelined dispatch/FFN/combine.
 
     Same contract as ``alltoall._local_dispatch_combine`` (and proven
@@ -61,13 +61,13 @@ def pipelined_local_dispatch_combine(xt, valid, router_w, experts, moe, act,
     for ax in ep_axes:
         n_ep *= axis_size(ax)
     e = moe.n_experts
-    epd = e // n_ep                                  # experts per device
     axis_name = tuple(ep_axes) if len(ep_axes) > 1 else ep_axes[0]
     me = flat_axis_index(ep_axes)
 
     buf, combine, aux, idx = _scatter_buckets(xt, valid, router_w, moe,
-                                              token_axes)
-    cap = buf.shape[1]
+                                              token_axes, spec=spec)
+    n_phys, cap = buf.shape[0], buf.shape[1]
+    epd = n_phys // n_ep                             # experts per device
     buf = buf.reshape(n_ep, epd, cap, d)             # buf[s] → device s
 
     def experts_ffn(chunk):                          # (epd, C, d)
@@ -106,7 +106,7 @@ def pipelined_local_dispatch_combine(xt, valid, router_w, experts, moe, act,
                    np.where(dst < 0, n_ep, dst))
     out = flush(out, *pending)                           # pipeline epilogue
 
-    back = out[:n_ep].reshape(e, cap, d)
+    back = out[:n_ep].reshape(n_phys, cap, d)
     y = combine(back)
     if return_counts:
         return y, aux, _replicated_counts(idx, valid, e, token_axes)

@@ -157,17 +157,27 @@ def attn_block(p, x, *, cfg, pos, window=None, cache=None, length=None,
         # causal part of the chunk. causal_offset = start makes query i see
         # key j iff j <= start + i; valid_len covers the Sq == 1 single-
         # token-chunk case, where attention_core ignores causal_offset.
-        # Wrapped rings can't continue (slot positions become ambiguous);
+        # ``length`` may be a (B,) vector — per-slot offsets, each batch row
+        # resuming its own chunked prefill. Wrapped rings can't continue
+        # (slot positions become ambiguous);
         # Model.supports_chunked_prefill gates those shapes out upstream.
         cap = cache["k"].shape[1]
         if cap < s:
             raise ValueError("chunked prefill continuation into a cache "
                              f"smaller than the chunk ({cap} < {s})")
         start = length.astype(jnp.int32)
-        ck = jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, start, 0, 0))
-        cv = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, start, 0, 0))
+        if start.ndim == 1:
+            rows = jnp.arange(b)[:, None]
+            idx = start[:, None] + jnp.arange(s)[None]       # (B, s)
+            ck = cache["k"].at[rows, idx].set(
+                k.astype(cache["k"].dtype), mode="drop")
+            cv = cache["v"].at[rows, idx].set(
+                v.astype(cache["v"].dtype), mode="drop")
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, start, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, start, 0, 0))
         out = attention_core(q, ck, cv, causal_offset=start,
                              window=window, valid_len=start + s,
                              flash_block=flash_block)

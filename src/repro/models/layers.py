@@ -61,6 +61,9 @@ class ParallelContext:
     #                           (repro.distributed.overlap)
     moe_impl: str = "dense"  # dense | ep | aurora | kernel
     kernels: KernelConfig | None = None      # non-None → kernelized hot path
+    moe_replication: Any = None  # moe.ReplicationSpec | None: hot-expert
+    #                              replicas (params widened to sum(counts)
+    #                              physical experts; routing stays logical)
     flash_block: int = 1024
     unroll_segments: bool = False  # Python-loop layer blocks instead of
     #                                lax.scan (cost-calibration lowerings:
@@ -231,10 +234,10 @@ def attention_core(q, k, v, *, causal_offset: jnp.ndarray | int | None,
     (offset = Sk - Sq for self-attention with a prefix cache; None = no
     causal mask, e.g. encoder self-attention / cross-attention).
     ``window``: additionally require j > i + offset - window.
-    ``valid_len``: keys >= valid_len are masked (cache fill level). May be a
-    scalar (one fill level for the whole batch) or a (B,) vector (per-slot
-    fill levels — continuous batching); the vector form is only supported at
-    decode (Sq == 1).
+    ``valid_len``: keys >= valid_len are masked (cache fill level). Both
+    ``causal_offset`` and ``valid_len`` may be scalars (one value for the
+    whole batch) or (B,) vectors (per-slot values — continuous batching /
+    batched chunked continuation).
     """
     b, sq, h, d = q.shape
     sk, hkv = k.shape[1], k.shape[2]
@@ -267,6 +270,26 @@ def attention_core(q, k, v, *, causal_offset: jnp.ndarray | int | None,
             mask = mask_fn(jnp.arange(sq)[:, None],
                            jnp.arange(sk)[None, :])[None, None]
         out = plain_attention(qg, k, v, mask)
+        return out.reshape(b, sq, h, d)
+
+    if ((causal_offset is not None and jnp.ndim(causal_offset) == 1)
+            or (valid_len is not None and jnp.ndim(valid_len) == 1)):
+        # Per-row offsets / fill levels at Sq > 1: a batch of chunked
+        # prefill continuations, each resuming at its own cache offset.
+        # Chunks are short, so the (B, Sq, Sk) mask is materialized and the
+        # grouped plain form used directly — no flash.
+        qi = jnp.arange(sq)[None, :, None]
+        kj = jnp.arange(sk)[None, None, :]
+        m = jnp.ones((b, sq, sk), bool)
+        if causal_offset is not None:
+            off = jnp.reshape(jnp.asarray(causal_offset), (-1, 1, 1))
+            m &= kj <= qi + off
+            if window is not None:
+                m &= kj > qi + off - window
+        if valid_len is not None:
+            m &= kj < jnp.reshape(jnp.asarray(valid_len), (-1, 1, 1))
+        out = plain_attention(q.reshape(b, sq, hkv, h // hkv, d), k, v,
+                              m[:, None])
         return out.reshape(b, sq, h, d)
 
     k = _repeat_kv(k, h // hkv)

@@ -83,9 +83,10 @@ class Model:
         """inputs: {"tokens"} | {"embeds"} | {"frames", "tokens"}.
 
         ``continuation=True`` (static) resumes a chunked prefill at the
-        cache's scalar fill level: positions and cache writes start at the
-        offset, so absorbing a prompt chunk-by-chunk over the same cache
-        equals one-shot prefill (``supports_chunked_prefill`` gates eligible
+        cache's fill level (scalar, or per-slot (B,) vector — each row at
+        its own offset): positions and cache writes start at the offset, so
+        absorbing a prompt chunk-by-chunk over the same cache equals
+        one-shot prefill (``supports_chunked_prefill`` gates eligible
         arch/shape combos). Returns (logits, cache) — plus
         (n_moe_layers, B, S, E) per-position routing counts when
         ``collect_moe_stats`` (mask left-pad positions before aggregating).
@@ -103,20 +104,25 @@ class Model:
             return logits, cache, stats
         return logits, cache
 
-    def decode_step(self, params, token, cache):
-        """token: (B, 1) int32. Returns (logits (B,1,V), cache)."""
+    def decode_step(self, params, token, cache, row_mask=None):
+        """token: (B, 1) int32. Returns (logits (B,1,V), cache).
+
+        ``row_mask`` (B,) bool gates cache updates per row: masked-out rows
+        keep their cache state and fill level (the continuous engine freezes
+        vacant slots and the slot holding a partially chunk-prefilled
+        prompt; the masked rows' logits are computed and discarded)."""
         logits, cache, _, _ = tf.forward(
             params, self.cfg, tokens=token, mode="decode", cache=cache,
-            pc=self.pc)
+            pc=self.pc, row_mask=row_mask)
         return logits, cache
 
-    def decode_step_stats(self, params, token, cache):
+    def decode_step_stats(self, params, token, cache, row_mask=None):
         """``decode_step`` that also returns (n_moe_layers, B, E) float32
         per-slot routed-choice counts (the live traffic signal for
         ``repro.serving.monitor.TrafficMonitor``)."""
         logits, cache, _, stats = tf.forward(
             params, self.cfg, tokens=token, mode="decode", cache=cache,
-            pc=self.pc, collect_moe_stats=True)
+            pc=self.pc, collect_moe_stats=True, row_mask=row_mask)
         return logits, cache, stats[:, :, 0, :]      # S == 1 at decode
 
     def prefill_slot(self, params, inputs, cache, slot, *, cap: int,
@@ -144,18 +150,32 @@ class Model:
         shared per-slot cache (the final step of a chunked prefill)."""
         return tf.merge_cache_slot(cache, sub, slot)
 
-    def prefill_merge_slot(self, params, inputs, sub, cache, slot,
+    def prefill_chunk_slot(self, params, inputs, cache, slot, *, first: bool,
+                           cap: int, src_len: int = 0,
                            collect_moe_stats: bool = False):
-        """Final chunk of a chunked prefill FUSED with the slot merge — one
-        dispatch on the admission critical path, mirroring how
-        ``prefill_slot`` fuses prefill+merge for one-shot admission.
-        Returns (logits, merged_cache) (+ per-position routing counts)."""
+        """One chunk of a chunked prefill for row ``slot`` of the shared
+        per-slot cache — slice, continue, merge in ONE program, so the
+        partially absorbed prompt's state lives in its slot row between
+        chunks (no detached batch-1 cache shuttled on the host).
+
+        ``first=True`` (static) starts from a fresh ZERO batch-1 cache so no
+        state from the slot's previous occupant can leak (SSM state is
+        cumulative — a stale conv/SSD state would silently corrupt the new
+        prompt); later chunks resume from the slot's own state at its
+        recorded fill level. Between chunks the engine freezes the slot's
+        row against decode writes (``decode_step(row_mask=...)``). Returns
+        (logits, cache) (+ per-position routing counts)."""
+        if first:
+            sub = tf.init_cache(self.cfg, 1, cap, src_len=src_len)
+        else:
+            sub = tf.slice_cache_slot(cache, slot)
         if collect_moe_stats:
             logits, sub, stats = self.prefill(
                 params, inputs, sub, collect_moe_stats=True,
-                continuation=True)
+                continuation=not first)
             return logits, tf.merge_cache_slot(cache, sub, slot), stats
-        logits, sub = self.prefill(params, inputs, sub, continuation=True)
+        logits, sub = self.prefill(params, inputs, sub,
+                                   continuation=not first)
         return logits, tf.merge_cache_slot(cache, sub, slot)
 
     @property
@@ -163,25 +183,30 @@ class Model:
         """MoE layer count, in the canonical routing-stats order."""
         return tf.moe_layer_count(self.cfg)
 
-    def supports_chunked_prefill(self, total_len: int, cache_cap: int) -> bool:
-        """Whether a ``total_len``-token prompt may be absorbed in chunks.
+    def chunkable_len(self, cache_cap: int) -> int | None:
+        """Longest (padded) prompt absorbable in chunks — ``None`` when
+        unbounded, ``0`` when the arch cannot chunk at all.
 
         Chunked continuation needs cache writes at a traced offset, which
-        rules out: MLA (prefill writes the latent at offset 0 only),
-        encoder-decoder (the encoder would re-run per chunk), and
-        sliding-window ring buffers that wrap within the prompt (slot
-        positions become ambiguous mid-prefill). SSM state and global GQA
-        caches continue exactly.
-        """
+        rules out MLA (prefill writes the latent at offset 0 only) and
+        encoder-decoder (the encoder would re-run per chunk) entirely.
+        Sliding-window ring buffers continue exactly while the prompt stays
+        inside the ring — only a prompt that WRAPS it loses slot identity
+        mid-prefill — so their bound is the ring size. SSM state and global
+        GQA caches continue without bound."""
         cfg = self.cfg
         if cfg.mla is not None or cfg.is_encoder_decoder:
-            return False
+            return 0
         kinds = {k for seg in tf.segments_of(cfg) for k in seg.kinds}
         if "L" in kinds:
-            ring = min(cache_cap, cfg.sliding_window)
-            if total_len > ring:
-                return False
-        return True
+            return min(cache_cap, cfg.sliding_window)
+        return None
+
+    def supports_chunked_prefill(self, total_len: int, cache_cap: int) -> bool:
+        """Whether a ``total_len``-token (padded) prompt may be absorbed in
+        chunks — see ``chunkable_len`` for the per-arch bound."""
+        lim = self.chunkable_len(cache_cap)
+        return lim is None or total_len <= lim
 
 
 def cross_entropy(logits, labels, vocab: int):

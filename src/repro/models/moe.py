@@ -25,11 +25,112 @@ is returned for training.
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
 from .layers import (KernelConfig, NO_PARALLEL, ParallelContext, ffn_apply,
                      init_ffn)
+
+
+# ---------------------------------------------------------------------------
+# Expert replication (hot-expert copies; placement-only)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ReplicationSpec:
+    """Physical layout of replicated experts.
+
+    ``counts[e]`` copies of logical expert e sit contiguously in the widened
+    physical expert array (physical slots ``base[e] .. base[e]+counts[e]-1``
+    all hold byte-identical weights). Routing stays in the LOGICAL frame —
+    the router keeps E columns and capacity/keep/drop decisions are computed
+    exactly as without replication — then each kept (token, expert, rank)
+    lands on replica ``rank % counts[e]`` at bucket position
+    ``rank // counts[e]`` (the deterministic shard-of-token rule). Replicas
+    are pure copies, so the routed function is provably unchanged: the same
+    tokens reach the same weights with the same gates; only WHERE they are
+    computed moves. Hashable (tuple field), so it can ride on the frozen
+    ``ParallelContext`` as a jit-static.
+    """
+
+    counts: tuple[int, ...]
+
+    def __post_init__(self):
+        if not self.counts or any(int(c) < 1 for c in self.counts):
+            raise ValueError(f"replica counts must be >= 1, "
+                             f"got {self.counts}")
+
+    @property
+    def n_logical(self) -> int:
+        return len(self.counts)
+
+    @property
+    def n_phys(self) -> int:
+        return sum(self.counts)
+
+    @property
+    def base(self) -> tuple[int, ...]:
+        """First physical slot of each logical expert."""
+        out, acc = [], 0
+        for c in self.counts:
+            out.append(acc)
+            acc += c
+        return tuple(out)
+
+    @property
+    def phys_to_logical(self) -> tuple[int, ...]:
+        return tuple(e for e, c in enumerate(self.counts) for _ in range(c))
+
+    @property
+    def is_identity(self) -> bool:
+        return all(c == 1 for c in self.counts)
+
+    @classmethod
+    def from_counts(cls, counts) -> "ReplicationSpec | None":
+        """None for the identity layout (no replication)."""
+        spec = cls(counts=tuple(int(c) for c in counts))
+        return None if spec.is_identity else spec
+
+
+def _is_experts_leaf(path) -> bool:
+    names = [p.key for p in path if hasattr(p, "key")]
+    return "experts" in names
+
+
+def replicate_moe_params(params, spec: ReplicationSpec, axis: int = 1):
+    """Widen every MoE layer's expert leaves to ``spec.n_phys`` physical
+    experts (replicas are gathered copies). Full-model stacked-segment
+    leaves are (layer_count, E, ...), so the expert axis defaults to 1 —
+    the same leaf addressing as ``serving.colocated.apply_pairing``; pass
+    ``axis=0`` for a standalone ``init_moe`` layer dict. Router leaves are
+    untouched: routing stays logical."""
+    gather = jnp.asarray(spec.phys_to_logical)
+
+    def widen(path, leaf):
+        if _is_experts_leaf(path):
+            return jnp.take(leaf, gather, axis=axis)
+        return leaf
+    return jax.tree_util.tree_map_with_path(widen, params)
+
+
+def dereplicate_moe_params(params, spec: ReplicationSpec, axis: int = 1):
+    """Exact inverse of ``replicate_moe_params``: keep each logical expert's
+    home copy (replicas are byte-identical, so this loses nothing)."""
+    gather = jnp.asarray(spec.base)
+
+    def narrow(path, leaf):
+        if _is_experts_leaf(path):
+            return jnp.take(leaf, gather, axis=axis)
+        return leaf
+    return jax.tree_util.tree_map_with_path(narrow, params)
+
+
+def replica_arrays(spec: ReplicationSpec):
+    """(base (E,), counts (E,)) as int32 device arrays for dispatch remaps."""
+    return (jnp.asarray(spec.base, jnp.int32),
+            jnp.asarray(spec.counts, jnp.int32))
 
 
 def init_moe(key, d_model: int, moe, dtype) -> dict:
@@ -176,15 +277,27 @@ def moe_apply_dense(p, x, moe, act: str,
     cap = capacity(t, moe.top_k, moe.n_experts, moe.capacity_factor)
     slot, keep = dispatch_indices(idx, moe.n_experts, cap)
 
-    # Scatter tokens into (E, C, d) buckets.
-    buf = jnp.zeros((moe.n_experts, cap, d), xt.dtype)
+    # Scatter tokens into (E, C, d) buckets. Under replication the routing
+    # above ran in the LOGICAL frame (same capacity, same drops); only the
+    # bucket coordinates move: rank r of expert e lands on replica r % r_e
+    # at position r // r_e (collision-free, never adds drops).
     tok_ids = jnp.broadcast_to(jnp.arange(t)[:, None], idx.shape)
     e_f, s_f, t_f = idx.reshape(-1), slot.reshape(-1), tok_ids.reshape(-1)
+    spec = pc.moe_replication
+    if spec is not None:
+        base, reps = replica_arrays(spec)
+        r_f = reps[e_f]
+        e_f = base[e_f] + s_f % r_f
+        s_f = s_f // r_f
+        n_phys = spec.n_phys
+    else:
+        n_phys = moe.n_experts
+    buf = jnp.zeros((n_phys, cap, d), xt.dtype)
     safe_s = jnp.where(keep.reshape(-1), s_f, cap - 1)
     contrib = jnp.where(keep.reshape(-1)[:, None], xt[t_f], 0.0)
     buf = buf.at[e_f, safe_s].add(contrib)  # each kept slot hit exactly once
 
-    out_buf = _experts_ffn(p["experts"], buf, act)       # (E, C, d)
+    out_buf = _experts_ffn(p["experts"], buf, act)       # (E', C, d)
 
     # Gather back and combine with gates.
     picked = out_buf[e_f, safe_s]                        # (T*k, d)
@@ -244,18 +357,33 @@ def moe_apply_kernel(p, x, moe, act: str,
     t_f = jnp.broadcast_to(jnp.arange(t)[:, None], (t, k)).reshape(-1)
     experts = p["experts"]
 
+    # Replication: routing/capacity ran in the LOGICAL frame above; remap
+    # each kept rank to (replica r % r_e, position r // r_e). ``home`` keeps
+    # the compact path exact — every replica is a byte-copy of its home.
+    spec = pc.moe_replication
+    if spec is not None:
+        base, reps = replica_arrays(spec)
+        s_f = slot.reshape(-1)
+        pe_f = base[e_f] + s_f % reps[e_f]               # physical expert
+        ps_f = s_f // reps[e_f]                          # physical position
+        home_f = base[e_f]
+        n_phys = spec.n_phys
+    else:
+        pe_f, ps_f, home_f = e_f, slot.reshape(-1), e_f
+        n_phys = e
+
     compact = not kops.use_pallas(kc.interpret) and 2 * t * k <= e * cap
     if compact:
         # Decode-sized: gather each routed row's expert weights and run a
         # batched matvec over the compact (T·k, d) layout.
         xg = xt[t_f]                                     # (T*k, d)
-        hg = jnp.einsum("rd,rdf->rf", xg, experts["w_gate"][e_f],
+        hg = jnp.einsum("rd,rdf->rf", xg, experts["w_gate"][home_f],
                         preferred_element_type=jnp.float32)
-        hu = jnp.einsum("rd,rdf->rf", xg, experts["w_up"][e_f],
+        hu = jnp.einsum("rd,rdf->rf", xg, experts["w_up"][home_f],
                         preferred_element_type=jnp.float32)
         act_fn = jax.nn.gelu if act == "geglu" else jax.nn.silu
         h = (act_fn(hg) * hu).astype(xt.dtype)
-        picked = jnp.einsum("rf,rfd->rd", h, experts["w_down"][e_f],
+        picked = jnp.einsum("rf,rfd->rd", h, experts["w_down"][home_f],
                             preferred_element_type=jnp.float32
                             ).astype(xt.dtype)           # (T*k, d)
     else:
@@ -263,21 +391,31 @@ def moe_apply_kernel(p, x, moe, act: str,
         # SORTED tokens with one index build (dropped ranks scatter out of
         # range and vanish), leave unfilled rows pointing at a zero pad row.
         cap_pad = align_capacity(cap, kc.block_c)
-        rank_sorted = slot.reshape(-1)[order]
+        pe_sorted = pe_f[order]
+        pr_sorted = ps_f[order]
         keep_sorted = keep_f[order]
         dest = jnp.where(keep_sorted,
-                         e_f[order] * cap_pad + rank_sorted, e * cap_pad)
-        src = jnp.full((e * cap_pad,), t, jnp.int32).at[dest].set(
+                         pe_sorted * cap_pad + pr_sorted, n_phys * cap_pad)
+        src = jnp.full((n_phys * cap_pad,), t, jnp.int32).at[dest].set(
             order // k, mode="drop")
         x_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
-        buf = x_pad[src].reshape(e, cap_pad, d)
+        buf = x_pad[src].reshape(n_phys, cap_pad, d)
+        group_sizes = jnp.minimum(sizes, cap)            # logical frame
+        if spec is not None:
+            # Physical group g (replica j of expert e, r_e copies) holds the
+            # ranks ≡ j (mod r_e) below the logical group size: ceil((g-j)/r).
+            p2l = jnp.asarray(spec.phys_to_logical, jnp.int32)
+            j = jnp.arange(n_phys, dtype=jnp.int32) - base[p2l]
+            r_p = reps[p2l]
+            group_sizes = jnp.maximum(
+                0, (group_sizes[p2l] - j + r_p - 1) // r_p)
         out_buf = kops.moe_ffn(
             buf, experts["w_gate"], experts["w_up"], experts["w_down"],
             act=act, interpret=kc.interpret,
-            group_sizes=jnp.minimum(sizes, cap),
+            group_sizes=group_sizes,
             block_c=kc.block_c, block_f=kc.block_f)
-        flat_out = out_buf.reshape(e * cap_pad, d)
-        safe = jnp.where(keep_f, e_f * cap_pad + slot.reshape(-1), 0)
+        flat_out = out_buf.reshape(n_phys * cap_pad, d)
+        safe = jnp.where(keep_f, pe_f * cap_pad + ps_f, 0)
         picked = flat_out[safe]                          # (T*k, d)
 
     picked = jnp.where(keep_f[:, None], picked, 0.0)

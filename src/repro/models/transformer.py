@@ -205,18 +205,34 @@ def merge_cache_slot(cache, sub, slot):
             "segments": segs}
 
 
+def slice_cache_slot(cache, slot):
+    """Batch-1 copy of row ``slot`` of a multi-slot cache — the inverse view
+    of ``merge_cache_slot``. Segment leaves are stacked (count, batch, ...),
+    so the slot is sliced on axis 1; the slot's recorded fill level becomes
+    the scalar ``len``, so the slice feeds straight into the scalar prefill
+    continuation path. ``slot`` may be traced."""
+    segs = jax.tree.map(
+        lambda full: jax.lax.dynamic_slice_in_dim(full, slot, 1, axis=1),
+        cache["segments"])
+    return {"len": cache["len"][slot].astype(jnp.int32), "segments": segs}
+
+
 # ---------------------------------------------------------------------------
 # Layer application
 # ---------------------------------------------------------------------------
 
 def _apply_layer(kind, p, x, entry, *, cfg, pc, mode, pos, pos3, length,
-                 shared, enc_out=None, collect_stats=False):
+                 shared, enc_out=None, collect_stats=False, row_mask=None):
     """One layer. Returns (x, new_cache_entry, aux, moe_counts).
 
     ``moe_counts`` is None unless ``collect_stats`` and the layer is MoE, in
     which case it is a (B, S, E) float32 per-position count of routed
     (token, k) choices — the live traffic signal harvested by the serving
     monitor (positions kept separate so callers can mask left-padding).
+
+    ``row_mask`` (decode only): (B,) bool gating cache updates per batch
+    row — masked-out rows keep their previous KV / latent / SSM state. One
+    generic gate here covers every cache layout (GQA, MLA, Mamba, cross-KV).
 
     Note: no blanket activation constraint here — an explicit per-layer
     P(data, …) pin was tried (§Perf it-3) and REFUTED: neutral for dense
@@ -225,6 +241,17 @@ def _apply_layer(kind, p, x, entry, *, cfg, pc, mode, pos, pos3, length,
     between layers; pinning them data-only forced per-layer resharding.
     """
     aux = jnp.zeros((), jnp.float32)
+
+    def gate(nc):
+        # Freeze masked-out rows' cache state (batch is axis 0 of every
+        # cache entry leaf). Elementwise select — stays shard-local.
+        if mode != "decode" or row_mask is None or nc is None:
+            return nc
+        return jax.tree.map(
+            lambda new, old: jnp.where(
+                row_mask.reshape((-1,) + (1,) * (new.ndim - 1)), new, old),
+            nc, entry)
+
     if kind == "M":
         h = rmsnorm(p["ln"], x, cfg.norm_eps)
         if mode == "decode":
@@ -235,7 +262,7 @@ def _apply_layer(kind, p, x, entry, *, cfg, pc, mode, pos, pos3, length,
             # initial state) is the same code path as a fresh prefill.
             y, nc = ssm_mod.mamba_block(
                 p["mamba"], h, cfg, entry if mode == "prefill" else None)
-        return x + y, nc, aux, None
+        return x + y, gate(nc), aux, None
 
     pp = shared if kind == "A" else p
     h = rmsnorm(pp["ln1"], x, cfg.norm_eps)
@@ -274,12 +301,12 @@ def _apply_layer(kind, p, x, entry, *, cfg, pc, mode, pos, pos3, length,
             y2, aux = moe_apply(p["moe"], h2, cfg.moe, cfg.act, pc)
     else:
         y2 = ffn_apply(pp["ffn"], h2, cfg.act, pc)
-    return x + y2, nc, aux, counts
+    return x + y2, gate(nc), aux, counts
 
 
 def _run_segment(seg, seg_params, seg_cache, x, *, cfg, pc, mode, pos, pos3,
                  length, shared, enc_out=None, remat=False,
-                 collect_stats=False):
+                 collect_stats=False, row_mask=None):
     """Scan one segment over its ``count`` blocks.
 
     Returns (x, new_cache, stats, aux). ``stats`` is a tuple with one
@@ -297,7 +324,8 @@ def _run_segment(seg, seg_params, seg_cache, x, *, cfg, pc, mode, pos, pos3,
             x, nc, a, cnt = _apply_layer(
                 kind, params[i], x, cache[i], cfg=cfg, pc=pc, mode=mode,
                 pos=pos, pos3=pos3, length=length, shared=shared,
-                enc_out=enc_out, collect_stats=collect_stats)
+                enc_out=enc_out, collect_stats=collect_stats,
+                row_mask=row_mask)
             aux = aux + a
             new_entries.append(nc)
             if cnt is not None:
@@ -341,18 +369,24 @@ def encode(params, cfg, frames, pc: ParallelContext = NO_PARALLEL):
 def forward(params, cfg, *, tokens=None, embeds=None, mode="train",
             cache=None, pc: ParallelContext = NO_PARALLEL, pos3=None,
             enc_out=None, remat=False, collect_moe_stats=False,
-            continuation=False):
+            continuation=False, row_mask=None):
     """Run the decoder stack.
 
     mode "train"/"prefill": tokens (B, S) or embeds (B, S, F). With
     ``continuation=True`` (a STATIC flag) a prefill resumes at the cache's
     fill level ``cache["len"]``: positions and cache writes start at the
     offset and queries attend the cached prefix, so a prompt absorbed in
-    chunks is mathematically identical to one-shot prefill (scalar ``len``
-    only; ring-buffer sliding-window caches support one-shot prefill only —
-    see ``Model.supports_chunked_prefill``). Fresh prefills keep the cheap
+    chunks is mathematically identical to one-shot prefill. ``len`` may be a
+    scalar or a per-slot (B,) vector — each row then resumes at its own
+    offset (ring-buffer sliding-window caches support continuation only
+    while the prompt fits inside the ring — see
+    ``Model.supports_chunked_prefill``). Fresh prefills keep the cheap
     chunk-local attention (O(S^2), not O(S*cap)).
     mode "decode": tokens (B, 1), cache required (reads cache["len"]).
+    ``row_mask`` (decode only): (B,) bool; rows where it is False keep their
+    cache state and fill level unchanged — the continuous engine freezes
+    slots that hold a partially absorbed chunked prefill (their logits are
+    still computed and discarded, as for any vacant slot).
     enc_out: encoder output for encoder-decoder archs (train / prefill).
     Returns (logits (B, S, padded_vocab), new_cache | None, aux_loss,
     moe_stats) where moe_stats is a (n_moe_layers, B, S, E) float32 array of
@@ -377,12 +411,12 @@ def forward(params, cfg, *, tokens=None, embeds=None, mode="train",
         if cache is None:
             raise ValueError("prefill continuation requires a cache")
         length = cache["len"]
-        if length.ndim == 1:
-            raise NotImplementedError(
-                "prefill writes a scalar-length cache (per-slot caches are "
-                "filled through Model.prefill_slot / merge_cache_slot)")
-        pos = length[None, None] + jnp.broadcast_to(jnp.arange(s)[None],
-                                                    (b, s))
+        if length.ndim == 1:   # per-slot offsets: each row resumes its own
+            pos = length[:, None] + jnp.broadcast_to(jnp.arange(s)[None],
+                                                     (b, s))
+        else:
+            pos = length[None, None] + jnp.broadcast_to(jnp.arange(s)[None],
+                                                        (b, s))
     else:
         length = None
         pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
@@ -396,7 +430,8 @@ def forward(params, cfg, *, tokens=None, embeds=None, mode="train",
         x, nc, stats, aux = _run_segment(
             seg, params["segments"][si], seg_cache, x, cfg=cfg, pc=pc,
             mode=mode, pos=pos, pos3=pos3, length=length, shared=shared,
-            enc_out=enc_out, remat=remat, collect_stats=collect_moe_stats)
+            enc_out=enc_out, remat=remat, collect_stats=collect_moe_stats,
+            row_mask=row_mask)
         aux_total = aux_total + aux
         new_segs.append(nc)
         stats_parts.extend(stats)
@@ -407,6 +442,8 @@ def forward(params, cfg, *, tokens=None, embeds=None, mode="train",
     new_cache = None
     if mode != "train" and cache is not None:
         inc = jnp.asarray(s if mode == "prefill" else 1, jnp.int32)
+        if mode == "decode" and row_mask is not None:
+            inc = inc * row_mask.astype(jnp.int32)   # frozen rows: no bump
         new_cache = {"len": cache["len"] + inc, "segments": tuple(new_segs)}
     moe_stats = None
     if collect_moe_stats:

@@ -68,22 +68,26 @@ def build_lockstep_step(models: list[Model], collect_stats: bool,
     tenant's compute live in the same XLA program, so the latency-hiding
     scheduler overlaps them.
 
-    Returns ``step(params_list, tokens_list, caches_list)`` yielding
-    ``(logits_list, caches_list)`` — plus a per-tenant routing-stats list
-    when ``collect_stats`` (the live traffic signal for re-planning). The
-    caches list is donated; the compiled program is shared by the dual-model
-    and N-tenant engines.
+    Returns ``step(params_list, tokens_list, caches_list, masks_list)``
+    yielding ``(logits_list, caches_list)`` — plus a per-tenant routing-
+    stats list when ``collect_stats`` (the live traffic signal for
+    re-planning). ``masks_list`` holds one (B,) bool row mask per tenant:
+    vacant slots (and the slot of an in-flight chunked prefill) freeze
+    their cache rows. The caches list is donated; the compiled program is
+    shared by the dual-model and N-tenant engines.
     """
     if collect_stats:
-        def step(params, tokens, caches):
-            outs = [m.decode_step_stats(p, t, c)
-                    for m, p, t, c in zip(models, params, tokens, caches)]
+        def step(params, tokens, caches, masks):
+            outs = [m.decode_step_stats(p, t, c, mask)
+                    for m, p, t, c, mask
+                    in zip(models, params, tokens, caches, masks)]
             return ([o[0] for o in outs], [o[1] for o in outs],
                     [o[2] for o in outs])
     else:
-        def step(params, tokens, caches):
-            outs = [m.decode_step(p, t, c)
-                    for m, p, t, c in zip(models, params, tokens, caches)]
+        def step(params, tokens, caches, masks):
+            outs = [m.decode_step(p, t, c, mask)
+                    for m, p, t, c, mask
+                    in zip(models, params, tokens, caches, masks)]
             return [o[0] for o in outs], [o[1] for o in outs]
     return jax.jit(step, donate_argnums=(2,)) if jit else step
 
@@ -260,18 +264,19 @@ class ColocatedContinuousEngine:
         worked_b = b._admit_tick()
         if a.num_active == 0 and b.num_active == 0:
             return worked_a or worked_b
+        mask_a = np.array([r is not None for r in a.slots], bool)
+        mask_b = np.array([r is not None for r in b.slots], bool)
+        masks = [jnp.asarray(mask_a), jnp.asarray(mask_b)]
         if self.replan is not None:
-            mask_a = np.array([r is not None for r in a.slots], bool)
-            mask_b = np.array([r is not None for r in b.slots], bool)
             (la, lb), (a.cache, b.cache), (sa, sb) = self._step(
                 [a.params, b.params], [a.tokens, b.tokens],
-                [a.cache, b.cache])
+                [a.cache, b.cache], masks)
             self.monitor_a.observe(sa, mask_a)
             self.monitor_b.observe(sb, mask_b)
         else:
             (la, lb), (a.cache, b.cache) = self._step(
                 [a.params, b.params], [a.tokens, b.tokens],
-                [a.cache, b.cache])
+                [a.cache, b.cache], masks)
         self.decode_steps += 1
         a._postdecode(la)
         b._postdecode(lb)
@@ -439,20 +444,21 @@ class MultiTenantContinuousEngine:
         worked = [p._admit_tick() for p in self.pools]
         if all(p.num_active == 0 for p in self.pools):
             return any(worked)
+        masks = [np.array([r is not None for r in p.slots], bool)
+                 for p in self.pools]
+        jmasks = [jnp.asarray(m) for m in masks]
         if self.replan is not None:
-            masks = [np.array([r is not None for r in p.slots], bool)
-                     for p in self.pools]
             logits, caches, stats = self._step(
                 [p.params for p in self.pools],
                 [p.tokens for p in self.pools],
-                [p.cache for p in self.pools])
+                [p.cache for p in self.pools], jmasks)
             for mon, s, mask in zip(self.monitors, stats, masks):
                 mon.observe(s, mask)
         else:
             logits, caches = self._step(
                 [p.params for p in self.pools],
                 [p.tokens for p in self.pools],
-                [p.cache for p in self.pools])
+                [p.cache for p in self.pools], jmasks)
         for p, c in zip(self.pools, caches):
             p.cache = c
         self.decode_steps += 1

@@ -236,8 +236,22 @@ class DistributedEngine(ContinuousEngine):
     def adopt(self, plan):
         """Refresh the BvN rounds from a fresh ``Plan`` / ``MoETrace`` /
         traffic matrix (closing the PR 2 follow-up: a replan now refreshes
-        the communication schedule, not just the placement). Returns the
+        the communication schedule, not just the placement). A full ``Plan``
+        also carries its hot-expert replication: the expert leaves are
+        re-widened under the new host map (placement-only — see
+        ``ContinuousEngine._set_replication``) before the rounds swap, so
+        one adoption moves placement AND schedule together. Returns the
         adopted rounds."""
+        if hasattr(plan, "schedules"):   # a full Plan carries placement too
+            rep = plan.replication
+            if rep is not None:
+                n_phys = sum(len(h) for h in rep)
+                if n_phys % self.n_ep:
+                    raise ValueError(
+                        f"plan replicates to {n_phys} physical experts, "
+                        f"which do not shard over the {self.n_ep}-device EP "
+                        f"axis — plan with total_multiple={self.n_ep}")
+            self.adopt_replication(rep)
         rounds = resolve_rounds(plan, self.n_ep)
         self.swap_rounds(rounds)
         return rounds

@@ -17,12 +17,15 @@ schedule.
 
 **Chunked prefill** (``prefill_chunk=C``): instead of absorbing a whole
 prompt in one admission step — stalling every active slot's decode behind a
-long prefill — the prompt is consumed ``C`` tokens per engine step against a
-private batch-1 cache and merged into its slot only when complete. Each step
-runs under a token budget: decode always runs; leftover budget feeds at most
-ONE prefill chunk (``step_token_budget``). Token streams are identical to
-one-shot admission (prefill continuation is exact — see
-``models.transformer.forward``); only the schedule changes.
+long prefill — the prompt is consumed ``C`` tokens per engine step straight
+into its slot's row of the shared cache (``Model.prefill_chunk_slot``:
+slice, continue, merge in one donated program). Between chunks the decode
+step freezes the pending slot's row (``row_mask``), so the partial state
+survives interleaved decodes. Each step runs under a token budget: decode
+always runs; leftover budget feeds at most ONE prefill chunk
+(``step_token_budget``). Token streams are identical to one-shot admission
+(prefill continuation is exact — see ``models.transformer.forward``); only
+the schedule changes.
 
 **Live routing stats** (``monitor=TrafficMonitor(...)``): decode steps and
 prefills report per-layer expert routing counts, feeding the traffic-driven
@@ -243,16 +246,20 @@ class ContinuousEngine:
                        src_len=self.src_len, collect_moe_stats=stats)
         self._prefill = wrap(jax.jit(fn_p, donate_argnums=(2,))
                              if jit else fn_p)
-        fn_c = partial(model.prefill, collect_moe_stats=stats,
-                       continuation=True)
+        # Chunked prefill runs straight against the shared per-slot cache:
+        # each chunk slices the slot row, continues the prefill, and merges
+        # back in ONE donated program (``Model.prefill_chunk_slot``) — no
+        # detached batch-1 cache lives on the host between chunks.
+        fn_c0 = partial(model.prefill_chunk_slot, first=True,
+                        cap=self.cache_cap, src_len=self.src_len,
+                        collect_moe_stats=stats)
+        self._chunk_first = wrap(jax.jit(fn_c0, donate_argnums=(2,))
+                                 if jit else fn_c0)
+        fn_c = partial(model.prefill_chunk_slot, first=False,
+                       cap=self.cache_cap, src_len=self.src_len,
+                       collect_moe_stats=stats)
         self._chunk = wrap(jax.jit(fn_c, donate_argnums=(2,))
                            if jit else fn_c)
-        # Final chunk + slot merge fused into one program. The batch-1 sub
-        # cache is donated but cannot alias the batch-N outputs, so only
-        # the shared cache (arg 3) aliases in place.
-        fn_m = partial(model.prefill_merge_slot, collect_moe_stats=stats)
-        self._chunk_merge = wrap(jax.jit(fn_m, donate_argnums=(3,))
-                                 if jit else fn_m)
         fn_d = model.decode_step_stats if stats else model.decode_step
         self._decode = wrap(jax.jit(fn_d, donate_argnums=(2,))
                             if jit else fn_d)
@@ -264,6 +271,45 @@ class ContinuousEngine:
         placement-only as long as the new model computes the same function."""
         self.model = model
         self._build_steps()
+
+    def _set_replication(self, spec) -> None:
+        """Install a hot-expert ``ReplicationSpec`` (placement-only).
+
+        De-replicates the current expert leaves back to the logical frame,
+        widens them under the new spec (pure copies of their home experts),
+        and rebinds with ``pc.moe_replication`` updated. Routing, capacity
+        and drops all stay in the logical frame (the shard-of-token rule in
+        ``models.moe``), so a mid-stream swap cannot change emitted tokens."""
+        from repro.models.moe import (dereplicate_moe_params,
+                                      replicate_moe_params)
+        cur = self.model.pc.moe_replication
+        if spec is not None and spec.is_identity:
+            spec = None
+        if (None if cur is None else cur.counts) == \
+                (None if spec is None else spec.counts):
+            return
+        params = self.params
+        if cur is not None:
+            params = dereplicate_moe_params(params, cur)
+        if spec is not None:
+            params = replicate_moe_params(params, spec)
+        self.params = params
+        pc = dataclasses.replace(self.model.pc, moe_replication=spec)
+        self._rebind(dataclasses.replace(self.model, pc=pc))
+
+    def adopt_replication(self, replication) -> None:
+        """Adopt a planner host map (``Plan.replication`` — per-expert host
+        tuples — or a bare per-expert copy-count sequence). ``None`` or the
+        identity map drops back to unreplicated serving."""
+        from repro.models.moe import ReplicationSpec
+        if replication is None:
+            spec = None
+        else:
+            counts = tuple(
+                len(h) if hasattr(h, "__len__") else int(h)
+                for h in replication)
+            spec = ReplicationSpec.from_counts(counts)
+        self._set_replication(spec)
 
     # -- scheduler ---------------------------------------------------------
     @property
@@ -290,8 +336,9 @@ class ContinuousEngine:
                     p, self.cache_cap)):
             raise ValueError(
                 f"{self.model.cfg.arch_id}: a {p}-token prefill cannot be "
-                "chunked (MLA / encoder-decoder / wrapped sliding-window "
-                "ring) — use prefill_chunk=None for this engine")
+                "chunked (MLA / encoder-decoder, or a prompt that WRAPS "
+                "the sliding-window ring — prompts inside the ring chunk "
+                "fine) — use prefill_chunk=None for this engine")
         self.queue.append(req)
 
     def _bucket(self, n: int) -> int:
@@ -303,7 +350,17 @@ class ContinuousEngine:
         p = self._bucketer(n)
         if p < n:
             raise ValueError(f"bucket policy shrank {n} to {p}")
-        return min(p, self.cache_cap)
+        p = min(p, self.cache_cap)
+        if self.prefill_chunk is not None:
+            # A pow2/step pad can push a prompt that FITS a sliding-window
+            # ring past it (e.g. 10 tokens padded to 16 over a 12-ring) and
+            # trigger the wrapped-ring refusal; clamp the pad to the ring so
+            # only genuinely wrapping prompts are refused. Applied in
+            # _bucket so submit and admission agree on the padded length.
+            lim = self.model.chunkable_len(self.cache_cap)
+            if lim is not None and n <= lim:
+                p = min(p, lim)
+        return p
 
     def _free_slot(self) -> int | None:
         """First free slot not reserved by the in-flight prefill."""
@@ -351,7 +408,10 @@ class ContinuousEngine:
 
     def _prefill_tick(self) -> bool:
         """Budgeted chunked admission: start or advance the single in-flight
-        prefill by at most one ``prefill_chunk``-token chunk."""
+        prefill by at most one ``prefill_chunk``-token chunk. Every chunk
+        lands directly in the slot's row of the shared cache; between chunks
+        the decode step freezes that row (``row_mask``), so the partial
+        state survives interleaved decode ticks untouched."""
         if self._pending is None:
             slot = self._free_slot()
             if not self.queue or slot is None:
@@ -360,10 +420,8 @@ class ContinuousEngine:
             p = self._bucket(len(r.prompt))
             toks = np.zeros((1, p), np.int32)
             toks[0, p - len(r.prompt):] = r.prompt      # left-pad with 0
-            sub = self.model.init_cache(1, self.cache_cap,
-                                        src_len=self.src_len)
-            self._pending = [r, slot, sub, toks, 0]
-        r, slot, sub, toks, done = self._pending
+            self._pending = [r, slot, toks, 0]
+        r, slot, toks, done = self._pending
         c = min(self.prefill_chunk, toks.shape[1] - done)
         if self.step_token_budget is not None and self.num_active > 0:
             # Decode always runs and eats num_active tokens of the budget;
@@ -374,27 +432,23 @@ class ContinuousEngine:
             if self.step_token_budget - self.num_active < c:
                 return False
         chunk_toks = {"tokens": jnp.asarray(toks[:, done:done + c])}
-        last = done + c == toks.shape[1]
-        if last:
-            # Final chunk: one fused program consumes the chunk AND merges
-            # the completed batch-1 cache into the slot row; its last
-            # position's logits give the first generated token.
-            out = self._chunk_merge(self.params, chunk_toks, sub, self.cache,
-                                    jnp.int32(slot))
-        else:
-            out = self._chunk(self.params, chunk_toks, sub)
+        # The first chunk starts the slot from a fresh zero state (no
+        # leakage from the previous occupant); later chunks resume from the
+        # slot's own recorded fill level.
+        fn = self._chunk_first if done == 0 else self._chunk
+        out = fn(self.params, chunk_toks, self.cache, jnp.int32(slot))
         if self.monitor is not None:
-            logits, merged, stats = out
+            logits, self.cache, stats = out
             # The chunk covers padded positions [done, done+c); left-pad
             # spans [0, total - len(prompt)) of the padded prompt.
             self._observe_prefill(
                 stats, pad=(toks.shape[1] - len(r.prompt)) - done)
         else:
-            logits, merged = out
-        if not last:
-            self._pending = [r, slot, merged, toks, done + c]
+            logits, self.cache = out
+        done += c
+        if done < toks.shape[1]:
+            self._pending = [r, slot, toks, done]
             return True
-        self.cache = merged
         self._pending = None
         self._finish_admission(r, slot, logits)
         return True
@@ -422,15 +476,22 @@ class ContinuousEngine:
                 self.slots[i] = None                     # slot free for reuse
 
     def _decode_all(self):
-        """One fixed-shape decode over every slot (stats-aware)."""
+        """One fixed-shape decode over every slot (stats-aware).
+
+        Vacant rows are masked out of cache updates (``row_mask``): their
+        state and fill level freeze, which keeps a partially chunk-prefilled
+        slot's row byte-stable between chunks. Occupied rows are unaffected
+        — attention is batch-row independent — so masking never changes
+        emitted tokens."""
+        mask = np.array([r is not None for r in self.slots], bool)
         if self.monitor is not None:
-            mask = np.array([r is not None for r in self.slots], bool)
             logits, self.cache, stats = self._decode(self.params, self.tokens,
-                                                     self.cache)
+                                                     self.cache,
+                                                     jnp.asarray(mask))
             self.monitor.observe(stats, mask)
         else:
             logits, self.cache = self._decode(self.params, self.tokens,
-                                              self.cache)
+                                              self.cache, jnp.asarray(mask))
         return logits
 
     def step(self) -> bool:

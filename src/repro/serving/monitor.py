@@ -44,15 +44,46 @@ class TrafficMonitor:
         self.decay = 0.5 ** (1.0 / float(halflife))
         self.counts = np.zeros((n_layers, n_experts), np.float64)
         self.weight = 0.0
+        # Predictive side-channels (see ``predicted_rates``): a faster EWMA
+        # (halflife/4) that reacts to drift sooner than the planning EWMA,
+        # and per-layer-pair router affinities — EWMA of the co-routing mass
+        # between layer l's experts and layer l+1's experts, folded at the
+        # slow decay so the learned transition structure stays stable while
+        # the fast popularity it is applied to moves.
+        self.decay_fast = 0.5 ** (4.0 / float(halflife))
+        self.fast_counts = np.zeros((n_layers, n_experts), np.float64)
+        self.fast_weight = 0.0
+        self.affinity = np.zeros((max(n_layers - 1, 0), n_experts, n_experts),
+                                 np.float64)
         self.observations = 0
-        # Expert-index frame: routing stats from a model whose experts were
-        # physically permuted (``apply_pairing``) arrive in SLOT space —
-        # column k is original expert slot_to_expert[k]. The monitor
-        # translates every observation back to original-expert space, so
-        # the EWMA stays frame-consistent across re-plans and the planner/
-        # simulator (which index traces by original expert id) read it
-        # directly. None = identity (unpermuted model).
-        self.slot_to_expert: list[int] | None = None
+        self.slot_to_expert = None
+
+    @property
+    def slot_to_expert(self) -> list[int] | None:
+        """Expert-index frame: routing stats from a model whose experts were
+        physically permuted (``apply_pairing``) arrive in SLOT space — column
+        k is original expert ``slot_to_expert[k]``. The monitor translates
+        every observation back to original-expert space, so the EWMA stays
+        frame-consistent across re-plans and the planner/simulator (which
+        index traces by original expert id) read it directly. None = identity
+        (unpermuted model)."""
+        return self._slot_to_expert
+
+    @slot_to_expert.setter
+    def slot_to_expert(self, value) -> None:
+        # A wrong-length or non-permutation mapping would silently misindex
+        # (scatter into a garbage-initialized frame) — reject on assignment.
+        if value is None:
+            self._slot_to_expert = None
+            return
+        perm = [int(v) for v in value]
+        if sorted(perm) != list(range(self.n_experts)):
+            raise ValueError(
+                f"slot_to_expert must be a permutation of "
+                f"range({self.n_experts}) — the monitor's stats frame is "
+                f"(n_layers={self.n_layers}, B, E={self.n_experts}) — "
+                f"got {value!r}")
+        self._slot_to_expert = perm
 
     def observe(self, stats, mask=None) -> None:
         """stats: (n_layers, B, E) routed-choice counts for one engine step;
@@ -67,8 +98,16 @@ class TrafficMonitor:
             orig = np.empty_like(arr)
             orig[..., np.asarray(self.slot_to_expert)] = arr
             arr = orig
-        self.counts = self.decay * self.counts + arr.sum(axis=1)
+        totals = arr.sum(axis=1)
+        self.counts = self.decay * self.counts + totals
         self.weight = self.decay * self.weight + 1.0
+        self.fast_counts = self.decay_fast * self.fast_counts + totals
+        self.fast_weight = self.decay_fast * self.fast_weight + 1.0
+        if self.n_layers > 1:
+            # Per-slot co-occurrence: which layer-(l+1) experts fire for the
+            # batch rows currently feeding each layer-l expert.
+            self.affinity = (self.decay * self.affinity
+                             + np.einsum("lbe,lbf->lef", arr[:-1], arr[1:]))
         self.observations += 1
 
     @property
@@ -76,10 +115,49 @@ class TrafficMonitor:
         """(n_layers, E) EWMA routed tokens per observation."""
         return self.counts / max(self.weight, 1e-12)
 
+    @property
+    def fast_rates(self) -> np.ndarray:
+        """(n_layers, E) fast-EWMA (halflife/4) rates — drift-sensitive."""
+        return self.fast_counts / max(self.fast_weight, 1e-12)
+
+    def predicted_rates(self) -> np.ndarray:
+        """(n_layers, E) next-layer router prediction.
+
+        Layer 0 takes the fast EWMA directly; every deeper layer propagates
+        the fast estimate of the layer ABOVE it through the learned
+        row-normalized affinity matrix, then rescales to that layer's own
+        observed mass. When traffic drifts, the shallow layers see the new
+        mix first; pushing it through the affinities lets replication
+        decisions for deep layers LEAD the traffic instead of trailing the
+        slow planning EWMA. Layers whose affinity rows carry no mass yet
+        fall back to their own fast estimate."""
+        fast = self.fast_rates
+        out = np.empty_like(fast)
+        out[0] = fast[0]
+        for layer in range(1, self.n_layers):
+            aff = self.affinity[layer - 1]
+            row = aff.sum(axis=1, keepdims=True)
+            trans = np.divide(aff, row, out=np.zeros_like(aff),
+                              where=row > 1e-12)
+            pred = fast[layer - 1] @ trans
+            total, target = pred.sum(), fast[layer].sum()
+            if total <= 1e-12 or target <= 1e-12:
+                out[layer] = fast[layer]
+            else:
+                out[layer] = pred * (target / total)
+        return out
+
     def trace(self, tokens_per_device: float = 1024.0, **times) -> MoETrace:
         """Live ``MoETrace`` from the current popularity estimate. ``times``
         forwards gate/ffn_per_token/agg/ffn_fixed to ``trace_from_counts``."""
         return trace_from_counts(self.name, self.rates,
+                                 tokens_per_device=tokens_per_device, **times)
+
+    def predicted_trace(self, tokens_per_device: float = 1024.0,
+                        **times) -> MoETrace:
+        """``trace`` built from ``predicted_rates`` — what the replicator
+        plans against when predictive routing is enabled."""
+        return trace_from_counts(self.name + "+pred", self.predicted_rates(),
                                  tokens_per_device=tokens_per_device, **times)
 
 
@@ -96,6 +174,9 @@ class ReplanEvent:
     # N-tenant re-grouping events carry the full candidate grouping
     # (groups[g][t] = tenant-t expert on slot g); None for pair events.
     groups: list[tuple[int, ...]] | None = None
+    # Replication events carry the candidate host map (replication[e] =
+    # devices hosting expert e, home first); None for pairing/grouping.
+    replication: tuple[tuple[int, ...], ...] | None = None
 
 
 class OnlineReplanner:
@@ -113,7 +194,9 @@ class OnlineReplanner:
                  threshold: float = 0.02, warmup: int | None = None,
                  tokens_per_device: float = 1024.0,
                  baseline_pair: list[int] | None = None,
-                 baseline_groups: list[tuple[int, ...]] | None = None):
+                 baseline_groups: list[tuple[int, ...]] | None = None,
+                 predictive: bool = False,
+                 baseline_replication=None):
         if interval <= 0:
             raise ValueError("interval must be positive")
         self.planner = planner
@@ -130,6 +213,15 @@ class OnlineReplanner:
                               else list(baseline_pair))
         self.baseline_groups = (None if baseline_groups is None
                                 else [tuple(g) for g in baseline_groups])
+        # ``predictive=True`` makes ``maybe_replicate`` plan against the
+        # monitor's next-layer router prediction (fast EWMA pushed through
+        # the learned inter-layer affinities) instead of the slow EWMA, so
+        # replication decisions lead drifting traffic. ``baseline_replication``
+        # is the frozen reference host map scored at every checkpoint.
+        self.predictive = predictive
+        self.baseline_replication = (
+            None if baseline_replication is None
+            else tuple(tuple(h) for h in baseline_replication))
         self.events: list[ReplanEvent] = []
 
     def maybe_replan(self, step: int, monitor_a: TrafficMonitor,
@@ -198,4 +290,52 @@ class OnlineReplanner:
             candidate_time=cand_time,
             pair=list(cand.pair) if cand.pair is not None else [],
             applied=apply, baseline_time=base_t, groups=cand_groups))
+        return cand if apply else None
+
+    def maybe_replicate(self, step: int, monitor: TrafficMonitor,
+                        current_replication=None, *,
+                        tolerance: float = 0.1,
+                        max_total_replicas: int | None = None,
+                        total_multiple: int | None = None) -> Plan | None:
+        """Exclusive-deployment ``maybe_replan``: pick a fresh hot-expert
+        replication from the live (or predicted, if ``self.predictive``)
+        trace and compare against the CURRENT host map evaluated on the same
+        trace. Returns the new plan to apply, or None to keep.
+
+        ``current_replication`` is the engine's live host map
+        (``Plan.replication`` tuples; None = no replicas). ``total_multiple``
+        forwards to the planner so EP engines get a physical expert count
+        divisible by their device count."""
+        from repro.core.traffic import identity_replication
+
+        if step == 0 or step % self.interval:
+            return None
+        if monitor.observations < self.warmup:
+            return None
+        kw = dict(tokens_per_device=self.tokens_per_device)
+        tr = (monitor.predicted_trace(**kw) if self.predictive
+              else monitor.trace(**kw))
+        cur = (identity_replication(monitor.n_experts)
+               if current_replication is None
+               else tuple(tuple(h) for h in current_replication))
+        stale = self.planner.evaluate_replicated(tr, cur)
+        cand = self.planner.plan_replicated(
+            tr, tolerance=tolerance, max_total_replicas=max_total_replicas,
+            total_multiple=total_multiple)
+        changed = cand.replication != cur
+        diff = PlanDiff(
+            pair_changed=changed,
+            assignment_changed=False,     # placement-only replication
+            old_time=stale.inference_time,
+            new_time=cand.predicted.inference_time)
+        apply = changed and diff.rel_improvement > self.threshold
+        base_t = None
+        if self.baseline_replication is not None:
+            base_t = self.planner.evaluate_replicated(
+                tr, self.baseline_replication).inference_time
+        self.events.append(ReplanEvent(
+            step=step, stale_time=stale.inference_time,
+            candidate_time=cand.predicted.inference_time,
+            pair=[], applied=apply, baseline_time=base_t,
+            replication=cand.replication))
         return cand if apply else None

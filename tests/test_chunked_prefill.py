@@ -1,6 +1,8 @@
 """Chunked prefill: token identity with one-shot admission (GQA + SSM),
 budget scheduling, bucket policies, and unsupported-arch gating."""
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,8 +13,10 @@ from repro.models import Model
 from repro.serving import ContinuousEngine, Request, make_bucketer
 
 
-def _model(arch, seed=0):
+def _model(arch, seed=0, cfg_tweak=None):
     cfg = get_config(arch).reduced()
+    if cfg_tweak is not None:
+        cfg = cfg_tweak(cfg)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
     return cfg, model, params
@@ -115,6 +119,60 @@ def test_exact_bucket_matches_exact_prefill_len():
     b = ContinuousEngine(model, params, 2, 32,
                          bucket_policy="exact").serve(mk())
     assert [r.out_tokens for r in a] == [r.out_tokens for r in b]
+
+
+def test_vector_len_continuation_matches_per_row():
+    """Regression: prefill continuation over a PER-SLOT (vector-length)
+    cache — each batch row resumes at its own offset — must equal running
+    each row's one-shot prefill separately. This used to raise
+    NotImplementedError, forcing the scalar-cache + merge detour."""
+    cfg, model, params = _model("qwen3-32b")
+    rng = np.random.default_rng(3)
+    pre = [rng.integers(1, cfg.vocab, n).astype(np.int32) for n in (4, 6)]
+    tail = rng.integers(1, cfg.vocab, (2, 3)).astype(np.int32)
+
+    cache = model.init_cache(2, 32, per_slot_len=True)
+    for i, p in enumerate(pre):
+        _, cache = jax.jit(model.prefill_slot, static_argnames=("cap",))(
+            params, {"tokens": jnp.asarray(p[None])}, cache, jnp.int32(i),
+            cap=32)
+    logits, cache = model.prefill(params, {"tokens": jnp.asarray(tail)},
+                                  cache, continuation=True)
+    assert np.asarray(cache["len"]).tolist() == [7, 9]
+
+    for i, p in enumerate(pre):
+        one = model.init_cache(1, 32)
+        full = np.concatenate([p, tail[i]])[None]
+        l_one, one = model.prefill(params, {"tokens": jnp.asarray(full)},
+                                   one)
+        np.testing.assert_allclose(
+            np.asarray(logits[i]), np.asarray(l_one[0, len(p):]),
+            rtol=1e-5, atol=1e-5)
+        for a, b in zip(jax.tree.leaves(one["segments"]),
+                        jax.tree.leaves(cache["segments"])):
+            np.testing.assert_allclose(
+                np.asarray(a[:, 0]), np.asarray(b[:, i]),
+                rtol=1e-4, atol=1e-5)
+
+
+def test_window_fit_prompt_chunks_despite_pow2_pad():
+    """Regression: a prompt that FITS the sliding-window ring must be
+    chunkable even when the pow2 pad would overshoot the ring (10 tokens →
+    pad 16 > ring 12). The engine clamps the pad to the ring; only
+    genuinely wrapping prompts are refused."""
+    cfg, model, params = _model(
+        "gemma3-27b",
+        cfg_tweak=lambda c: dataclasses.replace(c, sliding_window=12))
+    mk = lambda: [Request(prompt=list(range(1, 11)), max_new_tokens=4)]
+    out = ContinuousEngine(model, params, 1, 64,
+                           prefill_chunk=4).serve(mk())
+    # Reference: one-shot admission padded to the SAME (clamped) length.
+    ref = ContinuousEngine(model, params, 1, 64, prefill_len=12).serve(mk())
+    assert [r.out_tokens for r in ref] == [r.out_tokens for r in out]
+    # A prompt that genuinely wraps the 12-ring is still refused loudly.
+    eng = ContinuousEngine(model, params, 1, 64, prefill_chunk=4)
+    with pytest.raises(ValueError, match="chunk"):
+        eng.submit(Request(prompt=list(range(1, 15)), max_new_tokens=2))
 
 
 def test_chunked_rejects_unsupported_shapes():

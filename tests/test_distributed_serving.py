@@ -141,6 +141,72 @@ def test_distributed_engine_adopt_swaps_rounds_placement_only():
     """)
 
 
+def test_distributed_engine_adopts_replicated_plan_placement_only():
+    """A ``plan_replicated(..., total_multiple=n_ep)`` adopted mid-stream
+    widens the EP-sharded expert leaves AND swaps the rounds, byte-identical
+    token streams; a plan whose physical expert count does not shard over
+    the EP axis is refused loudly."""
+    _run("""
+    import dataclasses
+    import numpy as np
+    import jax
+    from repro.configs import get_config
+    from repro.core import AuroraPlanner, homogeneous_cluster, \\
+        trace_from_counts
+    from repro.launch.mesh import make_ep_mesh
+    from repro.models import Model
+    from repro.serving import DistributedEngine, Request
+
+    cfg = get_config("phi3.5-moe-42b-a6.6b").reduced()
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, n_experts=8,
+                                     capacity_factor=8.0))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    mesh = make_ep_mesh(8)
+    planner = AuroraPlanner(homogeneous_cluster(8))
+    counts = np.ones((2, 8)); counts[:, 0] = 25.0    # expert 0 runs hot
+    skew = trace_from_counts("skew", counts)
+    rep_plan = planner.plan_replicated(skew, tolerance=0.05,
+                                       total_multiple=8)
+    n_phys = sum(len(h) for h in rep_plan.replication)
+    assert n_phys % 8 == 0 and n_phys > 8, rep_plan.replication
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(1, cfg.vocab, 8)) for _ in range(3)]
+
+    def serve(adopt_at):
+        eng = DistributedEngine(model, params, batch_slots=2, cache_cap=32,
+                                mesh=mesh, rounds=None, plan=skew,
+                                overlap=True, prefill_len=8)
+        for pr in prompts:
+            eng.submit(Request(prompt=list(pr), max_new_tokens=6))
+        reqs, steps = list(eng.queue), 0
+        while eng.step():
+            steps += 1
+            if steps == adopt_at:
+                eng.adopt(rep_plan)
+        return eng, [r.out_tokens for r in reqs]
+
+    eng_a, toks_a = serve(adopt_at=None)
+    eng_b, toks_b = serve(adopt_at=3)
+    assert all(t for t in toks_a), toks_a
+    assert toks_a == toks_b, "replication adoption changed emitted tokens"
+    spec = eng_b.model.pc.moe_replication
+    assert spec is not None and spec.n_phys == n_phys
+
+    # A placement that does not shard over the EP axis is refused.
+    bad = planner.plan_replicated(skew, tolerance=0.0, max_total_replicas=1)
+    assert sum(len(h) for h in bad.replication) % 8, bad.replication
+    try:
+        eng_b.adopt(bad)
+    except ValueError as e:
+        assert "total_multiple=8" in str(e)
+    else:
+        raise AssertionError("non-divisible replication was adopted")
+    print("REPLICATED ADOPT OK", n_phys)
+    """)
+
+
 def test_distributed_colocated_replan_refreshes_rounds_placement_only():
     """The distributed colocated engine closes the full loop on a mesh:
     in-collective counts feed the monitors, the replanner re-pairs from

@@ -1,0 +1,312 @@
+"""Hot-expert replication: traffic math, the greedy planner, the
+shard-of-token dispatch identity, mid-stream engine adoption, and the
+predictive re-replication loop."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (AuroraPlanner, homogeneous_cluster,
+                        heterogeneous_cluster, identity_replication,
+                        replicated_ffn_loads, replicated_traffic,
+                        trace_from_counts, validate_replication)
+from repro.models import KernelConfig, Model, NO_PARALLEL, ParallelContext
+from repro.models.moe import (ReplicationSpec, dereplicate_moe_params,
+                              init_moe, moe_apply, replicate_moe_params)
+from repro.serving import (ContinuousEngine, OnlineReplanner, Request,
+                           TrafficMonitor)
+
+
+# -- traffic math -----------------------------------------------------------
+
+def test_validate_replication_rejects_bad_placements():
+    ok = validate_replication([(0, 2), (1,), (2,)], 3)
+    assert ok == ((0, 2), (1,), (2,))
+    with pytest.raises(ValueError, match="one host tuple per expert"):
+        validate_replication([(0,), (1,)], 3)
+    with pytest.raises(ValueError, match="home device"):
+        validate_replication([(1, 0), (1,), (2,)], 3)
+    with pytest.raises(ValueError, match="duplicate"):
+        validate_replication([(0, 0), (1,), (2,)], 3)
+    with pytest.raises(ValueError, match="out of range"):
+        validate_replication([(0, 3), (1,), (2,)], 3)
+    assert identity_replication(3) == ((0,), (1,), (2,))
+
+
+def test_replicated_traffic_hand_computed():
+    """Columns split 1/r across hosts; a replica on the token's own source
+    absorbs its share locally (diagonal stripped), so replication cuts both
+    the hot column and total network bytes."""
+    d = np.array([[0.0, 6.0, 0.0],
+                  [4.0, 0.0, 2.0],
+                  [8.0, 1.0, 0.0]])
+    rep = validate_replication([(0, 2), (1,), (2,)], 3)
+    out = replicated_traffic(d, rep)
+    # Column 0 (12 tokens off-source) splits in half between hosts 0 and 2;
+    # source 2's share to host 2 is self-absorbed.
+    exp = np.array([[0.0, 6.0, 0.0],
+                    [2.0, 0.0, 2.0 + 2.0],
+                    [4.0, 1.0, 0.0]])
+    np.testing.assert_allclose(out, exp)
+    assert out.sum() < d.sum()                      # bytes left the network
+    # Identity placement is a no-op.
+    np.testing.assert_allclose(
+        replicated_traffic(d, identity_replication(3)), d)
+
+
+def test_replicated_ffn_loads_include_local_shares():
+    """FFN load counts the locally-absorbed shares too — total compute is
+    conserved, only the peak moves."""
+    d = np.array([[0.0, 6.0, 0.0],
+                  [4.0, 0.0, 2.0],
+                  [8.0, 1.0, 0.0]])
+    ident = replicated_ffn_loads(d, identity_replication(3))
+    np.testing.assert_allclose(ident, d.sum(axis=0))
+    rep = replicated_ffn_loads(d, [(0, 2), (1,), (2,)])
+    np.testing.assert_allclose(rep, [6.0, 7.0, 8.0])
+    np.testing.assert_allclose(rep.sum(), ident.sum())
+    assert rep.max() < ident.max()
+
+
+# -- planner ----------------------------------------------------------------
+
+def _skewed_trace(n=8, hot=0, ratio=20.0, layers=2):
+    counts = np.ones((layers, n))
+    counts[:, hot] = ratio
+    return trace_from_counts("skew", counts, tokens_per_device=256.0)
+
+
+def test_plan_replicated_balances_skewed_trace():
+    planner = AuroraPlanner(homogeneous_cluster(8))
+    tr = _skewed_trace()
+    plan = planner.plan_replicated(tr, tolerance=0.1)
+    assert plan.scenario == "exclusive+homogeneous+replicated"
+    rep = plan.replication
+    assert rep is not None and len(rep[0]) > 1      # the hot expert copied
+    assert plan.replication_counts[0] == len(rep[0])
+    d = np.mean([tr.layer(l) for l in range(len(tr.layers))], axis=0)
+    before = replicated_ffn_loads(d, identity_replication(8))
+    after = replicated_ffn_loads(d, rep)
+    assert after.max() < before.max()
+    # Scored better than (or equal to) serving unreplicated.
+    ident = planner.evaluate_replicated(tr, identity_replication(8))
+    assert plan.predicted.inference_time <= ident.inference_time + 1e-12
+
+
+def test_plan_replicated_total_multiple_pads_physical_experts():
+    planner = AuroraPlanner(homogeneous_cluster(8))
+    plan = planner.plan_replicated(_skewed_trace(), tolerance=0.1,
+                                   total_multiple=8)
+    n_phys = sum(len(h) for h in plan.replication)
+    assert n_phys % 8 == 0 and n_phys > 8
+
+
+def test_plan_replicated_validates_cluster():
+    tr = _skewed_trace()
+    with pytest.raises(ValueError, match="home device"):
+        AuroraPlanner(homogeneous_cluster(4)).plan_replicated(tr)
+    with pytest.raises(ValueError, match="homogeneous"):
+        AuroraPlanner(heterogeneous_cluster(8)).plan_replicated(tr)
+
+
+# -- shard-of-token dispatch identity ---------------------------------------
+
+def _rep_pc(spec, kernel=False):
+    if kernel:
+        return ParallelContext(moe_impl="kernel", kernels=KernelConfig(),
+                               moe_replication=spec)
+    return ParallelContext(moe_replication=spec)
+
+
+@pytest.mark.parametrize("kernel", [False, True])
+@pytest.mark.parametrize("t", [3, 16])
+def test_moe_apply_replication_identity(kernel, t):
+    """Replicas are pure copies and routing stays logical, so dispatch with
+    widened expert leaves is BYTE-identical to unreplicated dispatch —
+    outputs, aux loss, and logical-frame counts — on dense and kernel
+    paths, including when capacity drops tokens."""
+    cfg = get_config("phi3.5-moe-42b-a6.6b").reduced()
+    moe = cfg.moe                                   # 4 experts, cf 1.25
+    p = init_moe(jax.random.PRNGKey(0), cfg.d_model, moe, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (t, cfg.d_model),
+                          jnp.float32)
+    spec = ReplicationSpec.from_counts((2, 1, 3, 1))
+    p_rep = replicate_moe_params(p, spec, axis=0)
+    base_pc = _rep_pc(None, kernel) if kernel else NO_PARALLEL
+    y, aux, c = moe_apply(p, x, moe, cfg.act, base_pc, return_counts=True)
+    y_r, aux_r, c_r = moe_apply(p_rep, x, moe, cfg.act, _rep_pc(spec, kernel),
+                                return_counts=True)
+    np.testing.assert_array_equal(np.asarray(y_r), np.asarray(y))
+    assert float(aux_r) == float(aux)
+    assert c_r.shape == c.shape and c.shape[-1] == moe.n_experts  # logical
+    np.testing.assert_array_equal(np.asarray(c_r), np.asarray(c))
+
+
+def test_replicate_dereplicate_roundtrip():
+    cfg = get_config("phi3.5-moe-42b-a6.6b").reduced()
+    p = init_moe(jax.random.PRNGKey(0), cfg.d_model, cfg.moe, jnp.float32)
+    spec = ReplicationSpec.from_counts((1, 2, 1, 2))
+    wide = replicate_moe_params(p, spec, axis=0)
+    for k, leaf in wide["experts"].items():
+        assert leaf.shape[0] == spec.n_phys
+        # Replica slots hold byte-identical copies of their home expert.
+        for phys, e in enumerate(spec.phys_to_logical):
+            np.testing.assert_array_equal(np.asarray(leaf[phys]),
+                                          np.asarray(p["experts"][k][e]))
+    back = dereplicate_moe_params(wide, spec, axis=0)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ReplicationSpec.from_counts((1, 1, 1)) is None
+    with pytest.raises(ValueError):
+        ReplicationSpec(counts=(1, 0, 2))
+
+
+# -- engine adoption (placement-only) ---------------------------------------
+
+def _requests(vocab, n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=list(rng.integers(1, vocab, 6)),
+                    max_new_tokens=5, arrival=float(i)) for i in range(n)]
+
+
+@pytest.mark.parametrize("kernels", [False, True])
+def test_engine_adopt_replication_token_identity(kernels):
+    """Adopting a replication mid-stream (and dropping back to identity
+    later) widens the live expert leaves but cannot change one emitted
+    token — the engine invariant the CI bench gates on."""
+    cfg = get_config("phi3.5-moe-42b-a6.6b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def serve(adopt_at=None):
+        eng = ContinuousEngine(model, params, 2, 32, kernels=kernels)
+        for r in _requests(cfg.vocab):
+            eng.submit(r)
+        reqs, step = list(eng.queue), 0
+        while eng.step():
+            step += 1
+            if adopt_at is not None and step == adopt_at:
+                eng.adopt_replication([(0, 1), (1,), (2,), (3, 0)])
+            if adopt_at is not None and step == adopt_at + 4:
+                eng.adopt_replication(None)          # back to unreplicated
+        return [r.out_tokens for r in reqs]
+
+    ref = serve()
+    assert all(ref)
+    assert serve(adopt_at=3) == ref
+
+
+def test_adopt_replication_accepts_counts_and_is_idempotent():
+    cfg = get_config("phi3.5-moe-42b-a6.6b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ContinuousEngine(model, params, 1, 16)
+    eng.adopt_replication((2, 1, 1, 1))              # bare counts form
+    spec = eng.model.pc.moe_replication
+    assert spec is not None and spec.counts == (2, 1, 1, 1)
+    wide = eng.params
+    eng.adopt_replication([(0, 3), (1,), (2,), (3,)])  # same counts: no-op
+    assert eng.params is wide
+    eng.adopt_replication((1, 1, 1, 1))              # identity == None
+    assert eng.model.pc.moe_replication is None
+
+
+# -- monitor prediction + online re-replication -----------------------------
+
+def _observe(mon, l0, l1, reps=1):
+    """Feed batches whose layer-0 slots route to experts ``l0`` and layer-1
+    slots to ``l1`` (one token each)."""
+    stats = np.zeros((2, len(l0), mon.n_experts))
+    for s, e in enumerate(l0):
+        stats[0, s, e] = 1.0
+    for s, e in enumerate(l1):
+        stats[1, s, e] = 1.0
+    for _ in range(reps):
+        mon.observe(stats)
+
+
+def test_predictor_leads_drifting_traffic():
+    """The fast EWMA reacts before the slow one, and pushing it through the
+    learned inter-layer affinities predicts the NEXT layer's mix before the
+    slow rates catch up."""
+    mon = TrafficMonitor(n_experts=4, n_layers=2, halflife=64.0)
+    # Teach both associations: layer-0 e0 -> layer-1 e1, e2 -> e3.
+    _observe(mon, [0, 0, 0, 2], [1, 1, 1, 3], reps=40)
+    # Drift: layer 0 now overwhelmingly routes to e2.
+    _observe(mon, [2, 2, 2, 2], [3, 3, 3, 3], reps=4)
+    slow, fast = mon.rates, mon.fast_rates
+    assert fast[0, 2] / fast[0].sum() > slow[0, 2] / slow[0].sum()
+    pred = mon.predicted_rates()
+    np.testing.assert_allclose(pred[0], fast[0])     # layer 0: fast mix
+    # Layer 1 prediction follows the affinity e2 -> e3, leading the slow mix.
+    assert pred[1, 3] / pred[1].sum() > slow[1, 3] / slow[1].sum()
+    assert pred[1].sum() > 0
+    tr = mon.predicted_trace(tokens_per_device=128.0)
+    assert tr.name.endswith("+pred") and tr.n == 4
+
+
+def test_predicted_rates_fallback_without_affinity():
+    mon = TrafficMonitor(n_experts=4, n_layers=2)
+    np.testing.assert_allclose(mon.predicted_rates(), mon.fast_rates)
+
+
+def test_maybe_replicate_applies_and_hysteresis():
+    """The replanner replicates the hot expert from live traffic, records
+    the event, and — once adopted — keeps the placement on a re-check
+    (hysteresis: no churn without improvement)."""
+    planner = AuroraPlanner(homogeneous_cluster(8))
+    mon = TrafficMonitor(n_experts=8, n_layers=2, halflife=8.0)
+    _observe(mon, [0] * 6 + [1, 2], [0] * 6 + [3, 4], reps=12)
+    rp = OnlineReplanner(planner, interval=4, threshold=0.0, warmup=2)
+    assert rp.maybe_replicate(2, mon) is None        # off-interval
+    plan = rp.maybe_replicate(4, mon)
+    assert plan is not None and len(plan.replication[0]) > 1
+    ev = rp.events[-1]
+    assert ev.applied and ev.replication == plan.replication
+    assert ev.candidate_time < ev.stale_time
+    # Same traffic, current placement already the candidate: keep it.
+    assert rp.maybe_replicate(8, mon, plan.replication) is None
+    assert not rp.events[-1].applied
+
+
+def test_maybe_replicate_warmup_and_baseline():
+    planner = AuroraPlanner(homogeneous_cluster(8))
+    mon = TrafficMonitor(n_experts=8, n_layers=2)
+    _observe(mon, [0] * 8, [0] * 8, reps=3)
+    rp = OnlineReplanner(planner, interval=2, threshold=0.0, warmup=50,
+                         baseline_replication=identity_replication(8))
+    assert rp.maybe_replicate(2, mon) is None        # still warming up
+    assert rp.events == []
+    _observe(mon, [0] * 8, [0] * 8, reps=50)
+    plan = rp.maybe_replicate(4, mon)
+    assert plan is not None
+    assert rp.events[-1].baseline_time is not None
+
+
+def test_maybe_replicate_predictive_uses_forecast():
+    """``predictive=True`` plans against the affinity forecast: drift seen
+    only in layer 0's fast mix already moves the layer-1 replication."""
+    planner = AuroraPlanner(homogeneous_cluster(8))
+    mon = TrafficMonitor(n_experts=8, n_layers=2, halflife=32.0)
+    _observe(mon, [0, 1, 2, 3, 4, 5, 6, 7], [0, 1, 2, 3, 4, 5, 6, 7],
+             reps=30)                               # uniform, e -> e affinity
+    _observe(mon, [5] * 8, [5] * 8, reps=6)          # drift toward e5
+    rp = OnlineReplanner(planner, interval=1, threshold=-1e9, warmup=1,
+                         predictive=True)
+    plan = rp.maybe_replicate(1, mon)
+    assert plan is not None
+    assert len(plan.replication[5]) >= max(
+        len(h) for e, h in enumerate(plan.replication) if e != 5)
+
+
+def test_monitor_slot_to_expert_rejects_non_permutation():
+    mon = TrafficMonitor(n_experts=4, n_layers=1)
+    with pytest.raises(ValueError, match="permutation"):
+        mon.slot_to_expert = [0, 1, 1, 2]
+    mon.slot_to_expert = [3, 2, 1, 0]
+    stats = np.zeros((1, 1, 4))
+    stats[0, 0, 0] = 2.0                             # slot 0 == expert 3
+    mon.observe(stats)
+    assert mon.counts[0, 3] == 2.0 and mon.counts[0, 0] == 0.0
