@@ -69,6 +69,12 @@ METRICS = [
     ("continuous step efficiency",
      lambda r: _get(r, "continuous.step_efficiency"), True, False),
     ("chunked stall cut", lambda r: _get(r, "chunked.stall_cut"), True, False),
+    ("admission pooled tok/s", _tok_per_s("admission", "pooled"), True, True),
+    ("admission serial tok/s", _tok_per_s("admission", "serial"), True, False),
+    # TTFT cut is a same-process paired ratio — reported, not gated, like
+    # the other speedups.
+    ("admission ttft p95 cut",
+     lambda r: _get(r, "admission.ttft_p95_cut"), True, False),
     ("drift adaptive gain", lambda r: _get(r, "drift.improvement"),
      True, False),
     ("kernel-path tok/s", lambda r: _get(r, "kernels.kernel.tok_per_s"),
@@ -100,8 +106,8 @@ METRICS = [
 # Sections the metric table knows how to read. Anything else appearing at
 # the top level of a record is reported as new/dropped instead of being
 # silently ignored — adding a bench section must never break the trend gate.
-KNOWN_SECTIONS = {"continuous", "chunked", "drift", "kernels", "multi",
-                  "overlap", "skew"}
+KNOWN_SECTIONS = {"admission", "continuous", "chunked", "drift", "kernels",
+                  "multi", "overlap", "skew"}
 
 
 def _section_rows(baseline: dict, new: dict):

@@ -3,12 +3,13 @@ multi-tenant colocation.
 
   PYTHONPATH=src python -m benchmarks.serving_bench             # classic
   PYTHONPATH=src python -m benchmarks.serving_bench --chunked   # stall study
+  PYTHONPATH=src python -m benchmarks.serving_bench --admission # TTFT pool
   PYTHONPATH=src python -m benchmarks.serving_bench --drift     # + re-plan
   PYTHONPATH=src python -m benchmarks.serving_bench --skew      # replication
   PYTHONPATH=src python -m benchmarks.serving_bench --multi     # N tenants
   PYTHONPATH=src python -m benchmarks.serving_bench --all --json BENCH_serving.json
 
-Four sections, each a pass/fail experiment:
+Each section is a pass/fail experiment:
 
 * **continuous** — continuous vs static batching on the SAME Poisson stream
   (PR 1's experiment): continuous must win wall-clock throughput and
@@ -19,6 +20,14 @@ Four sections, each a pass/fail experiment:
   work at ``prefill_chunk`` tokens. Compares the step-latency tail (max /
   p95 wall per step) of the two schedulers on identical streams; chunked
   must cut the max step latency and emit identical tokens.
+* **admission** — pooled concurrent prefill vs serialized chunked
+  admission. A bursty stream of multi-chunk prompts queues several
+  half-absorbed prefills; ``EngineConfig(prefill_pool=K)`` fuses up to K
+  chunk sub-steps plus the decode into one jitted program per engine step,
+  so queued prompts absorb together instead of waiting their turn. The
+  pooled leg must cut the TTFT p95 (median of paired reps) and emit
+  byte-identical tokens — the pool is a schedule change, never a math
+  change.
 * **drift** — traffic-driven online re-planning. The colocated engine's
   initial expert pairing is planned from a SYNTHETIC historical trace (what
   ``repro.launch.serve`` does — the paper's §2.4 setup), then a drifting
@@ -97,14 +106,45 @@ def _timed_serve(eng, reqs):
     return times
 
 
+def _ttft_serve(eng, reqs):
+    """Serve a stream recording per-request time-to-first-token.
+
+    The same arrival-clock loop as ``serve_stream``, with a wall-clock
+    stamp at each request's ``submit`` and another when its first decoded
+    token appears — TTFT is what concurrent prefill admission buys, so the
+    driver has to watch individual requests, not just total wall.
+    Returns ``(wall_s, ttfts)`` with one TTFT per request in stream order.
+    """
+    pend = sorted(reqs, key=lambda r: r.arrival)
+    submit_at, first_at = {}, {}
+    t, i = 0.0, 0
+    t0 = time.perf_counter()
+    while i < len(pend) or eng.queue or eng.num_active or eng.num_pending:
+        while i < len(pend) and pend[i].arrival <= t:
+            submit_at[id(pend[i])] = time.perf_counter()
+            eng.submit(pend[i])
+            i += 1
+        busy = eng.step()
+        now = time.perf_counter()
+        for r in pend[:i]:
+            if r.out_tokens and id(r) not in first_at:
+                first_at[id(r)] = now
+        if not busy and i < len(pend):
+            t = max(t + 1.0, pend[i].arrival)
+        else:
+            t += 1.0
+    wall = time.perf_counter() - t0
+    return wall, [first_at[id(r)] - submit_at[id(r)] for r in pend]
+
+
 # ---------------------------------------------------------------------------
 # Section 1: continuous vs static (PR 1)
 # ---------------------------------------------------------------------------
 
 def bench(arch="qwen3-32b", n_requests=16, batch_slots=4, prompt_len=8,
           cache_cap=48, rate=0.75, seed=0, repeats=3):
-    from repro.serving import (ContinuousEngine, Request, ServingEngine,
-                               poisson_requests)
+    from repro.serving import (ContinuousEngine, EngineConfig, Request,
+                               ServingEngine, poisson_requests)
 
     cfg, model, params = _build(arch)
     rng = np.random.default_rng(seed)
@@ -115,7 +155,7 @@ def bench(arch="qwen3-32b", n_requests=16, batch_slots=4, prompt_len=8,
     s_eng.serve([Request(prompt=list(r.prompt), max_new_tokens=1)
                  for r in stream[:batch_slots]])     # warm-up compile
     c_eng = ContinuousEngine(model, params, batch_slots, cache_cap,
-                             prefill_len=prompt_len)
+                             config=EngineConfig(prefill_len=prompt_len))
     c_eng.serve([Request(prompt=list(stream[0].prompt), max_new_tokens=2)])
 
     def run_static():
@@ -260,6 +300,88 @@ def bench_chunked(arch="qwen3-32b", batch_slots=4, short_len=8, long_len=512,
 
 
 # ---------------------------------------------------------------------------
+# Section 1c: pooled concurrent prefill vs serialized admission
+# ---------------------------------------------------------------------------
+
+def bench_admission(arch="qwen3-32b", n_requests=12, batch_slots=4,
+                    prompt_len=32, chunk=8, pool=4, max_new=8, rate=1.5,
+                    cache_cap=64, seed=0, repeats=3):
+    """K-wide prefill pool vs serialized chunked admission, same stream.
+
+    A bursty Poisson stream of multi-chunk prompts (``prompt_len/chunk``
+    chunks each) piles several half-absorbed prefills behind one another;
+    serialized admission advances ONE of them per engine step, so every
+    queued prompt's first token waits for its predecessors' remaining
+    chunks. The pooled engine fuses up to ``pool`` chunk sub-steps (plus
+    the decode) into one jitted program per step, so concurrent prompts
+    absorb together. Gates: byte-identical tokens across legs (the pool is
+    a schedule change, never a math change) and the pooled leg must cut
+    the TTFT p95 (median of per-rep paired ratios).
+    """
+    import gc
+
+    import jax
+    from repro.serving import (ContinuousEngine, EngineConfig,
+                               poisson_requests)
+
+    jax.clear_caches()          # TTFT tails drown in stale-heap jitter
+    gc.collect()
+
+    cfg, model, params = _build(arch)
+    rng = np.random.default_rng(seed)
+    base = poisson_requests(rng, n_requests, rate, cfg.vocab, prompt_len,
+                            max_new_lo=max_new // 2, max_new_hi=max_new)
+
+    engines = {
+        "serial": ContinuousEngine(
+            model, params, batch_slots, cache_cap,
+            config=EngineConfig(prefill_chunk=chunk)),
+        "pooled": ContinuousEngine(
+            model, params, batch_slots, cache_cap,
+            config=EngineConfig(prefill_chunk=chunk, prefill_pool=pool)),
+    }
+    for eng in engines.values():
+        _ttft_serve(eng, _clone(base))                  # warm-up compiles
+    runs = {"serial": [], "pooled": []}
+    outs = {}
+    for _ in range(repeats):
+        for name in ("serial", "pooled"):               # interleaved pairs
+            final = _clone(base)
+            wall, ttfts = _ttft_serve(engines[name], final)
+            toks = sum(len(r.out_tokens) for r in final)
+            runs[name].append((wall, float(np.percentile(ttfts, 95)), toks))
+            outs[name] = [r.out_tokens for r in final]
+    assert outs["serial"] == outs["pooled"], \
+        "pooled prefill admission changed emitted tokens"
+
+    results = {}
+    for name, reps in runs.items():
+        results[name] = {
+            "tokens": reps[-1][2],
+            "wall_s": float(np.median([w for w, _, _ in reps])),
+            "tok_per_s": float(np.median([t / w for w, _, t in reps])),
+            "ttft_p95_s": float(np.median([p for _, p, _ in reps])),
+        }
+    cut = float(np.median([s[1] / p[1] for s, p in
+                           zip(runs["serial"], runs["pooled"])]))
+
+    print(f"== prefill pool: {arch} (reduced), {n_requests} x "
+          f"{prompt_len}-token prompts, chunk={chunk}, pool={pool} ==")
+    print(f"{'admission':<8} {'tok/s':>8} {'wall s':>8} {'ttft p95 ms':>12}")
+    for name in ("serial", "pooled"):
+        r = results[name]
+        print(f"{name:<8} {r['tok_per_s']:>8.1f} {r['wall_s']:>8.2f} "
+              f"{r['ttft_p95_s'] * 1e3:>12.2f}")
+    print(f"TTFT p95 cut {cut:.2f}x (median of {repeats} paired reps); "
+          f"tokens identical")
+    return {
+        "arch": arch, "prompt_len": prompt_len, "chunk": chunk, "pool": pool,
+        "serial": results["serial"], "pooled": results["pooled"],
+        "ttft_p95_cut": cut, "ok": bool(cut > 1.0),
+    }
+
+
+# ---------------------------------------------------------------------------
 # Section 2b: kernelized hot path — dense vs sort-based ragged dispatch
 # ---------------------------------------------------------------------------
 
@@ -282,7 +404,8 @@ def bench_kernels(arch="phi3.5-moe-42b-a6.6b", n_experts=32, n_requests=10,
     import jax
     from repro.configs import get_config
     from repro.models import Model
-    from repro.serving import ContinuousEngine, poisson_requests
+    from repro.serving import (ContinuousEngine, EngineConfig,
+                               poisson_requests)
 
     cfg = get_config(arch).reduced()
     cfg = dataclasses.replace(
@@ -294,10 +417,12 @@ def bench_kernels(arch="phi3.5-moe-42b-a6.6b", n_experts=32, n_requests=10,
                               max_new_lo=max_new // 2, max_new_hi=max_new)
 
     engines = {
-        "dense": ContinuousEngine(model, params, batch_slots, cache_cap,
-                                  prefill_len=prompt_len),
-        "kernel": ContinuousEngine(model, params, batch_slots, cache_cap,
-                                   prefill_len=prompt_len, kernels=True),
+        "dense": ContinuousEngine(
+            model, params, batch_slots, cache_cap,
+            config=EngineConfig(prefill_len=prompt_len)),
+        "kernel": ContinuousEngine(
+            model, params, batch_slots, cache_cap,
+            config=EngineConfig(prefill_len=prompt_len, kernels=True)),
     }
     for eng in engines.values():
         _timed_serve(eng, _clone(stream))               # warm-up compiles
@@ -628,8 +753,8 @@ def bench_skew(arch="phi3.5-moe-42b-a6.6b", n_phase=10, batch_slots=2,
     from repro.core import (AuroraPlanner, homogeneous_cluster,
                             identity_replication)
     from repro.models import Model
-    from repro.serving import (ContinuousEngine, OnlineReplanner, Request,
-                               TrafficMonitor)
+    from repro.serving import (ContinuousEngine, EngineConfig,
+                               OnlineReplanner, Request, TrafficMonitor)
 
     # Same widening as the drift section: at reduced()'s 4 experts a single
     # replica already rebalances everything — 8 experts give the greedy
@@ -668,11 +793,13 @@ def bench_skew(arch="phi3.5-moe-42b-a6.6b", n_phase=10, batch_slots=2,
     # and the throughput gate would measure the dispatch style, not the
     # replication.
     engines = {
-        "static": ContinuousEngine(model, params, batch_slots, cache_cap,
-                                   prefill_len=prompt_len, kernels=True),
-        "replicated": ContinuousEngine(model, params, batch_slots, cache_cap,
-                                       prefill_len=prompt_len, monitor=mon,
-                                       kernels=True),
+        "static": ContinuousEngine(
+            model, params, batch_slots, cache_cap,
+            config=EngineConfig(prefill_len=prompt_len, kernels=True)),
+        "replicated": ContinuousEngine(
+            model, params, batch_slots, cache_cap,
+            config=EngineConfig(prefill_len=prompt_len, kernels=True),
+            monitor=mon),
     }
     current = None
 
@@ -787,8 +914,8 @@ def bench_multi(arch="phi3.5-moe-42b-a6.6b", tenant_counts=(2, 3, 4),
     from repro.core import (AuroraPlanner, group_pairs, homogeneous_cluster,
                             random_grouping, synthetic_trace)
     from repro.models import Model
-    from repro.serving import (MultiTenantContinuousEngine, Request,
-                               apply_pairing, poisson_requests)
+    from repro.serving import (EngineConfig, MultiTenantContinuousEngine,
+                               Request, apply_pairing, poisson_requests)
 
     # Same widening as the drift section: reduced() clamps to 4 experts,
     # where the grouping space is too small for placement quality to vary.
@@ -831,7 +958,7 @@ def bench_multi(arch="phi3.5-moe-42b-a6.6b", tenant_counts=(2, 3, 4),
                    for _ in range(nt)]
         ident = MultiTenantContinuousEngine(
             models[:nt], params[:nt], batch_slots, cache_cap,
-            prefill_len=prompt_len)
+            config=EngineConfig(prefill_len=prompt_len))
         out_i = ident.serve([_clone(s) for s in streams])
 
         perms = group_pairs(list(plan.groups))
@@ -839,7 +966,8 @@ def bench_multi(arch="phi3.5-moe-42b-a6.6b", tenant_counts=(2, 3, 4),
             apply_pairing(params[t], perms[t], cfg) for t in range(1, nt)]
         eng = MultiTenantContinuousEngine(
             models[:nt], grouped_params, batch_slots, cache_cap,
-            prefill_len=prompt_len, groups=list(plan.groups))
+            config=EngineConfig(prefill_len=prompt_len),
+            groups=list(plan.groups))
         eng.serve([_clone(s) for s in streams])          # warm-up compile
         eng.decode_steps = 0
         final = [_clone(s) for s in streams]
@@ -887,6 +1015,9 @@ def main() -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--chunked", action="store_true",
                     help="run the chunked-prefill stall section only")
+    ap.add_argument("--admission", action="store_true",
+                    help="run the pooled-vs-serialized prefill admission "
+                         "section (TTFT study)")
     ap.add_argument("--drift", action="store_true",
                     help="run the re-planning drift section (includes the "
                          "chunked stall comparison)")
@@ -910,8 +1041,9 @@ def main() -> int:
     sections = {}
     run_classic = args.all or not (args.chunked or args.drift or args.multi
                                    or args.kernels or args.overlap
-                                   or args.skew)
+                                   or args.skew or args.admission)
     run_chunked = args.all or args.chunked or args.drift
+    run_admission = args.all or args.admission
     run_drift = args.all or args.drift
     run_skew = args.all or args.skew
     run_multi = args.all or args.multi
@@ -932,6 +1064,15 @@ def main() -> int:
         kw = (dict(n_short=4, max_new=8, repeats=3) if args.small else {})
         sections["chunked"] = bench_chunked(arch=args.arch, seed=args.seed,
                                             **kw)
+    if run_admission:
+        # Runs right after chunked: it judges TTFT tails, the same
+        # latency-sensitive statistic, before other sections litter the
+        # heap. Smoke sizes trim the stream, never the pool width or the
+        # chunks-per-prompt ratio — the queue of half-absorbed prefills IS
+        # the experiment.
+        kw = (dict(n_requests=8, max_new=6, repeats=2) if args.small else {})
+        sections["admission"] = bench_admission(arch=args.arch,
+                                                seed=args.seed, **kw)
     if run_classic:
         n = 8 if args.small else args.num_requests
         sections["continuous"] = bench(

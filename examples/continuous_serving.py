@@ -11,7 +11,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import Model
-from repro.serving import ContinuousEngine, Request
+from repro.serving import ContinuousEngine, EngineConfig, Request
 
 
 def main():
@@ -21,7 +21,7 @@ def main():
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     eng = ContinuousEngine(model, params, batch_slots=3, cache_cap=32,
-                           prefill_len=8)
+                           config=EngineConfig(prefill_len=8))
 
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=list(rng.integers(1, cfg.vocab, 8)),

@@ -9,6 +9,11 @@ reduced MoE models through one ``MultiTenantContinuousEngine`` — every
 tenant's decode fused into a single XLA program, with the planner's grouping
 physically realized by permuting each tenant's expert weights.
 
+The pool membership is LIVE: after the first stream drains, a fourth tenant
+joins mid-flight (``admit_tenant`` — its slot pool and colocation column are
+created online) and is later evicted (``evict_tenant``), with the incumbent
+tenants' serving state untouched throughout.
+
 Usage: PYTHONPATH=src python examples/serve_multi_tenant.py
 """
 
@@ -72,6 +77,19 @@ def main():
     print(f"\n{total} tokens across {N_TENANTS} tenants in "
           f"{eng.decode_steps} fused decode steps "
           f"({total / eng.decode_steps:.2f} tok/step)")
+
+    # --- live tenant churn ------------------------------------------------
+    joiner = Model(cfg)
+    t_new = eng.admit_tenant(joiner, joiner.init(jax.random.PRNGKey(99)))
+    print(f"\ntenant {t_new} joined the live pool "
+          f"(groups now {eng.n_tenants}-wide: {eng.groups})")
+    late = [Request(prompt=list(rng.integers(1, cfg.vocab, 8)),
+                    max_new_tokens=4, arrival=0.0) for _ in range(2)]
+    eng.serve([[], [], [], late])
+    print(f"joiner generated: {[r.out_tokens for r in late]}")
+    eng.evict_tenant(t_new)
+    print(f"tenant {t_new} evicted — back to {eng.n_tenants} tenants, "
+          "incumbent pools untouched")
 
 
 if __name__ == "__main__":

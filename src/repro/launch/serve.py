@@ -51,7 +51,12 @@ def main() -> int:
                          "per engine step (continuous engines)")
     ap.add_argument("--step-budget", type=int, default=None,
                     help="per-step token budget: decode always runs, "
-                         "leftover feeds at most one prefill chunk")
+                         "leftover feeds the FIFO prefix of due prefill "
+                         "chunks")
+    ap.add_argument("--prefill-pool", type=int, default=1,
+                    help="admit up to K chunked prefills concurrently; "
+                         "their chunks (and decode) fuse into one jitted "
+                         "step (requires --prefill-chunk)")
     ap.add_argument("--bucket-policy", default="pow2",
                     help="prefill pad-length policy: pow2 | exact | step:K")
     ap.add_argument("--replan-interval", type=int, default=None,
@@ -97,8 +102,16 @@ def main() -> int:
     from repro.configs import get_config
     from repro.models import Model
     from repro.serving import (ColocatedContinuousEngine, ColocatedEngine,
-                               ContinuousEngine, Request, ServingEngine,
-                               poisson_requests)
+                               ContinuousEngine, EngineConfig, Request,
+                               ServingEngine, poisson_requests)
+
+    # One config for every continuous engine this driver can build.
+    config = EngineConfig(prefill_len=args.prompt_len,
+                          prefill_chunk=args.prefill_chunk,
+                          step_token_budget=args.step_budget,
+                          bucket_policy=args.bucket_policy,
+                          prefill_pool=args.prefill_pool,
+                          kernels=args.kernels)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -125,10 +138,7 @@ def main() -> int:
     if args.colocate_with is None:
         if args.arrival_rate is not None:
             kw = dict(batch_slots=args.batch, cache_cap=args.cache_cap,
-                      prefill_len=args.prompt_len,
-                      prefill_chunk=args.prefill_chunk,
-                      step_token_budget=args.step_budget,
-                      bucket_policy=args.bucket_policy, kernels=args.kernels)
+                      config=config)
             if mesh is not None:
                 from repro.core import synthetic_trace
                 from repro.serving import (DistributedEngine,
@@ -215,12 +225,8 @@ def main() -> int:
             replan = OnlineReplanner(planner, interval=args.replan_interval,
                                      threshold=args.replan_threshold)
         kw = dict(batch_slots=args.batch, cache_cap=args.cache_cap,
-                  prefill_len=args.prompt_len,
-                  prefill_chunk=args.prefill_chunk,
-                  step_token_budget=args.step_budget,
-                  bucket_policy=args.bucket_policy,
-                  pair=(list(plan.pair) if plan else None),
-                  replan=replan, kernels=args.kernels)
+                  config=config, pair=(list(plan.pair) if plan else None),
+                  replan=replan)
         if mesh is not None:
             from repro.serving import DistributedColocatedEngine
             eng = DistributedColocatedEngine(

@@ -1,13 +1,18 @@
 """Serving: static + continuous single-model engines, Aurora colocation
-(dual-model static + continuous, N-tenant continuous), live traffic
-monitoring + online re-planning/re-grouping, and the EP-sharded distributed
-engines (mesh decode, round-pipelined dispatch, live schedule refresh)."""
+(dual-model static + continuous, N-tenant continuous with live tenant
+churn), live traffic monitoring + online re-planning/re-grouping, and the
+EP-sharded distributed engines (mesh decode, round-pipelined dispatch, live
+schedule refresh). All engines are configured through one frozen
+``EngineConfig`` (admission policies, prefill pool, kernels, jit)."""
 
+from .config import (AdmissionPolicy, EngineConfig, FifoAdmission,
+                     LengthBucketedAdmission, TokenBudgetAdmission,
+                     make_bucketer)
 from .engine import (ContinuousEngine, Request, ServingEngine,
-                     make_bucketer, poisson_requests, serve_stream)
+                     poisson_requests, serve_stream)
 from .colocated import (ColocatedContinuousEngine, ColocatedEngine,
                         MultiTenantContinuousEngine, apply_pairing,
-                        build_lockstep_step, inverse_pair)
+                        build_lockstep_step, inverse_pair, reseat_pairing)
 from .distributed import (DistributedColocatedEngine, DistributedEngine,
                           DistributedMultiTenantEngine, device_traffic,
                           rounds_from_plan, rounds_from_trace,
@@ -18,8 +23,10 @@ __all__ = ["Request", "ServingEngine", "ContinuousEngine",
            "ColocatedEngine", "ColocatedContinuousEngine",
            "MultiTenantContinuousEngine", "DistributedEngine",
            "DistributedColocatedEngine", "DistributedMultiTenantEngine",
+           "EngineConfig", "AdmissionPolicy", "FifoAdmission",
+           "LengthBucketedAdmission", "TokenBudgetAdmission",
            "apply_pairing", "build_lockstep_step", "device_traffic",
            "inverse_pair", "make_bucketer", "poisson_requests",
-           "rounds_from_plan", "rounds_from_trace", "rounds_from_traffic",
-           "serve_stream", "TrafficMonitor", "OnlineReplanner",
-           "ReplanEvent"]
+           "reseat_pairing", "rounds_from_plan", "rounds_from_trace",
+           "rounds_from_traffic", "serve_stream", "TrafficMonitor",
+           "OnlineReplanner", "ReplanEvent"]

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import Model
+from repro.serving.config import EngineConfig, coerce_config
 
 
 def apply_pairing(params_b, pair: list[int], cfg_b):
@@ -59,6 +60,33 @@ def inverse_pair(pair: list[int]) -> list[int]:
     for slot, expert in enumerate(pair):
         inv[expert] = slot
     return inv
+
+
+def reseat_pairing(params, old_pair, new_pair, cfg):
+    """Re-realize a slot->expert pairing IN PLACE: undo the permutation
+    currently baked into ``params`` and apply the new one.
+
+    This is the one shared placement-identity checkpoint for every adoption
+    path (dual-model re-pair, N-tenant re-group, tenant churn): both maps
+    must be permutations of the expert ids — anything else would silently
+    duplicate or drop experts — and given that, the round-trip is exact:
+    ``apply_pairing`` moves expert weights and router columns together, so
+    the composed function (and every emitted token) is unchanged. Param
+    shapes are preserved, so jitted steps do not recompile.
+    """
+    old_pair, new_pair = list(old_pair), list(new_pair)
+    n = len(old_pair)
+    ids = list(range(n))
+    for name, pair in (("current", old_pair), ("new", new_pair)):
+        if sorted(pair) != ids:
+            raise ValueError(
+                f"{name} pairing {pair} is not a permutation of the expert "
+                f"ids 0..{n - 1} — re-seating it would duplicate/drop "
+                "experts")
+    if old_pair == new_pair:
+        return params
+    restored = apply_pairing(params, inverse_pair(old_pair), cfg)
+    return apply_pairing(restored, new_pair, cfg)
 
 
 def build_lockstep_step(models: list[Model], collect_stats: bool,
@@ -168,20 +196,18 @@ class ColocatedContinuousEngine:
 
     def __init__(self, model_a: Model, model_b: Model, params_a, params_b,
                  batch_slots: int, cache_cap: int,
-                 prefill_len: int | None = None, jit: bool = True,
-                 prefill_chunk: int | None = None,
-                 step_token_budget: int | None = None,
-                 bucket_policy="pow2", pair: list[int] | None = None,
-                 replan=None, monitor_halflife: float = 128.0,
-                 kernels=False, step_wrapper=None):
+                 config: EngineConfig | None = None,
+                 pair: list[int] | None = None,
+                 replan=None, monitor_halflife: float = 128.0, **legacy):
         from .engine import ContinuousEngine
         from .monitor import TrafficMonitor
 
-        if kernels:
-            # Kernelize BEFORE the pools and the fused lockstep step are
-            # built, so both models' decode/prefill programs share the path.
-            model_a = model_a.with_kernels(kernels)
-            model_b = model_b.with_kernels(kernels)
+        config = coerce_config(config, legacy, type(self).__name__)
+        self.config = config
+        # Kernelize BEFORE the pools and the fused lockstep step are built,
+        # so both models' decode/prefill programs share the path.
+        model_a = config.kernelize(model_a)
+        model_b = config.kernelize(model_b)
         self.model_a, self.model_b = model_a, model_b
         self.replan = replan
         self.monitor_a = self.monitor_b = None
@@ -214,19 +240,19 @@ class ColocatedContinuousEngine:
             # candidate pairings stay in one frame.
             self.monitor_b.slot_to_expert = list(self.pair)
 
-        kw = dict(prefill_len=prefill_len, jit=jit,
-                  prefill_chunk=prefill_chunk,
-                  step_token_budget=step_token_budget,
-                  bucket_policy=bucket_policy, step_wrapper=step_wrapper)
+        # Pools get the same config minus kernels (the models above are
+        # already kernelized — re-kernelizing in the pool would double-wrap).
+        pool_config = dataclasses.replace(config, kernels=False)
+        self._pool_config = pool_config
         self.pool_a = ContinuousEngine(model_a, params_a, batch_slots,
-                                       cache_cap, monitor=self.monitor_a,
-                                       **kw)
+                                       cache_cap, config=pool_config,
+                                       monitor=self.monitor_a)
         self.pool_b = ContinuousEngine(model_b, params_b, batch_slots,
-                                       cache_cap, monitor=self.monitor_b,
-                                       **kw)
+                                       cache_cap, config=pool_config,
+                                       monitor=self.monitor_b)
 
-        self._jit = jit
-        self._step_wrapper = step_wrapper or (lambda fn: fn)
+        self._jit = config.jit
+        self._step_wrapper = config.step_wrapper or (lambda fn: fn)
         self._build_lockstep()
         self.decode_steps = 0
 
@@ -241,21 +267,29 @@ class ColocatedContinuousEngine:
     def replan_events(self) -> list:
         return [] if self.replan is None else self.replan.events
 
+    def adopt(self, plan) -> None:
+        """Adopt a colocation ``Plan`` mid-stream: re-realize its pairing on
+        pool B's params via the shared ``reseat_pairing`` checkpoint.
+        Placement-only — param shapes are unchanged, so the jitted step does
+        not recompile and in-flight token streams are unaffected."""
+        new_pair = list(plan.pair)
+        self.pool_b.params = reseat_pairing(self.pool_b.params, self.pair,
+                                            new_pair, self.model_b.cfg)
+        self.pair = new_pair
+        if self.monitor_b is not None:
+            self.monitor_b.slot_to_expert = list(new_pair)
+        self.plan = plan
+
+    def _adopt_online(self, plan) -> None:
+        """Seam for the replanner loop (the distributed engine layers an
+        Aurora-rounds refresh on top)."""
+        self.adopt(plan)
+
     def _maybe_replan(self) -> None:
         new = self.replan.maybe_replan(self.decode_steps, self.monitor_a,
                                        self.monitor_b, self.pair)
-        if new is None:
-            return
-        # Placement-only re-pair: undo the realized permutation, apply the
-        # new one. Params shapes are unchanged, so the jitted step does not
-        # recompile and in-flight token streams are unaffected.
-        restored = apply_pairing(self.pool_b.params, inverse_pair(self.pair),
-                                 self.model_b.cfg)
-        self.pool_b.params = apply_pairing(restored, list(new.pair),
-                                           self.model_b.cfg)
-        self.pair = list(new.pair)
-        self.monitor_b.slot_to_expert = list(new.pair)
-        self.plan = new
+        if new is not None:
+            self._adopt_online(new)
 
     def step(self) -> bool:
         """Admit into both pools, then one fused lockstep decode."""
@@ -320,25 +354,25 @@ class MultiTenantContinuousEngine:
     """
 
     def __init__(self, models: list[Model], params: list, batch_slots: int,
-                 cache_cap: int, prefill_len: int | None = None,
-                 jit: bool = True, prefill_chunk: int | None = None,
-                 step_token_budget: int | None = None,
-                 bucket_policy="pow2",
+                 cache_cap: int, config: EngineConfig | None = None,
                  groups: list[tuple[int, ...]] | None = None,
-                 replan=None, monitor_halflife: float = 128.0,
-                 kernels=False, step_wrapper=None):
+                 replan=None, monitor_halflife: float = 128.0, **legacy):
         from .engine import ContinuousEngine
         from .monitor import TrafficMonitor
 
+        config = coerce_config(config, legacy, type(self).__name__)
+        self.config = config
         if len(models) < 2:
             raise ValueError("MultiTenantContinuousEngine needs >= 2 tenants "
                              "(use ContinuousEngine for one)")
         if len(params) != len(models):
             raise ValueError("one params tree per model required")
-        if kernels:
-            models = [m.with_kernels(kernels) for m in models]
+        models = [config.kernelize(m) for m in models]
         self.models = list(models)
         self.n_tenants = len(models)
+        self.batch_slots = batch_slots
+        self.cache_cap = cache_cap
+        self.monitor_halflife = monitor_halflife
         self.replan = replan
         self.monitors = None
         if replan is not None:
@@ -388,17 +422,17 @@ class MultiTenantContinuousEngine:
             for t in range(1, self.n_tenants):
                 self.monitors[t].slot_to_expert = [g[t] for g in self.groups]
 
-        kw = dict(prefill_len=prefill_len, jit=jit,
-                  prefill_chunk=prefill_chunk,
-                  step_token_budget=step_token_budget,
-                  bucket_policy=bucket_policy, step_wrapper=step_wrapper)
+        # Pools get the same config minus kernels (models above are already
+        # kernelized; see ColocatedContinuousEngine).
+        self._pool_config = dataclasses.replace(config, kernels=False)
         self.pools = [
             ContinuousEngine(m, p, batch_slots, cache_cap,
+                             config=self._pool_config,
                              monitor=(self.monitors[t] if self.monitors
-                                      else None), **kw)
+                                      else None))
             for t, (m, p) in enumerate(zip(models, params))]
-        self._jit = jit
-        self._step_wrapper = step_wrapper or (lambda fn: fn)
+        self._jit = config.jit
+        self._step_wrapper = config.step_wrapper or (lambda fn: fn)
         self._build_lockstep()
         self.decode_steps = 0
 
@@ -417,27 +451,121 @@ class MultiTenantContinuousEngine:
         """Slot->expert permutation realized for tenant t."""
         return [g[t] for g in self.groups]
 
-    def _maybe_regroup(self) -> None:
-        new = self.replan.maybe_regroup(self.decode_steps, self.monitors,
-                                        self.groups)
-        if new is None:
-            return
-        # Placement-only re-group: per tenant, undo the realized permutation
-        # and apply the new one. Param shapes are unchanged, so the fused
-        # step does not recompile and in-flight token streams are unaffected.
-        new_groups = [tuple(g) for g in new.groups]
-        for t in range(1, self.n_tenants):
+    def adopt(self, plan) -> None:
+        """Adopt a k-way grouping ``Plan`` mid-stream: per tenant, re-seat
+        the realized slot->expert permutation to the plan's via the shared
+        ``reseat_pairing`` checkpoint. Placement-only — param shapes are
+        unchanged, so the fused step does not recompile and in-flight token
+        streams are unaffected. All tenants are re-seated (tenant 0 included
+        — after churn the anchor column need not be the identity)."""
+        new_groups = [tuple(g) for g in plan.groups]
+        if any(len(g) != self.n_tenants for g in new_groups):
+            raise ValueError(
+                f"plan groups tenant count {[len(g) for g in new_groups]} "
+                f"!= engine tenant count {self.n_tenants}")
+        for t in range(self.n_tenants):
             old_p = self.tenant_pair(t)
             new_p = [g[t] for g in new_groups]
             if old_p == new_p:
                 continue
-            cfg = self.models[t].cfg
-            restored = apply_pairing(self.pools[t].params,
-                                     inverse_pair(old_p), cfg)
-            self.pools[t].params = apply_pairing(restored, new_p, cfg)
-            self.monitors[t].slot_to_expert = new_p
+            self.pools[t].params = reseat_pairing(
+                self.pools[t].params, old_p, new_p, self.models[t].cfg)
+            if self.monitors is not None:
+                self.monitors[t].slot_to_expert = new_p
         self.groups = new_groups
-        self.plan = new
+        self.plan = plan
+
+    def _adopt_online(self, plan) -> None:
+        """Seam for the replanner loop (the distributed engine layers an
+        Aurora-rounds refresh on top)."""
+        self.adopt(plan)
+
+    def _maybe_regroup(self) -> None:
+        new = self.replan.maybe_regroup(self.decode_steps, self.monitors,
+                                        self.groups)
+        if new is not None:
+            self._adopt_online(new)
+
+    # -- tenant churn ------------------------------------------------------
+    def admit_tenant(self, model: Model, params, *,
+                     pair: list[int] | None = None) -> int:
+        """Admit a NEW tenant into the live pool. Returns its tenant index.
+
+        ``params`` arrive in the LOGICAL (unpermuted) frame; ``pair`` is the
+        slot->expert placement to realize for it (identity when omitted) —
+        realized here via ``apply_pairing``, exactly as the constructor
+        documents for pre-permuted tenants. The tenant gets its own slot
+        pool and (under a replanner) its own ``TrafficMonitor``; colocation
+        groups gain its column, and the replanner re-derives the grouping
+        online once the fresh monitor passes warmup. Every existing tenant's
+        pool, cache, and token stream are untouched — admission is
+        placement-only for the incumbents (lockstep rows are tenant-
+        independent).
+        """
+        from .engine import ContinuousEngine
+        from .monitor import TrafficMonitor
+
+        model = self.config.kernelize(model)
+        cfg = model.cfg
+        n_e = len(self.groups)
+        if self.replan is not None:
+            if cfg.moe is None or cfg.moe.n_experts != n_e:
+                raise ValueError(
+                    "online re-grouping needs MoE tenants with equal expert "
+                    "counts (the grouping is expert<->expert)")
+            if model.n_moe_layers != self.models[0].n_moe_layers:
+                raise ValueError(
+                    "online re-grouping needs equal MoE layer counts "
+                    "(the planner simulates the traces layer-by-layer)")
+        pair = list(pair) if pair is not None else list(range(n_e))
+        if n_e and sorted(pair) != list(range(n_e)):
+            raise ValueError(f"pair {pair} is not a permutation of the "
+                             f"expert ids 0..{n_e - 1}")
+        if pair != list(range(n_e)):
+            params = apply_pairing(params, pair, cfg)
+        t = self.n_tenants
+        monitor = None
+        if self.monitors is not None:
+            monitor = TrafficMonitor(n_e, model.n_moe_layers,
+                                     name=f"{cfg.arch_id}#{t}",
+                                     halflife=self.monitor_halflife)
+            monitor.slot_to_expert = list(pair)
+            self.monitors.append(monitor)
+        self.models.append(model)
+        self.pools.append(ContinuousEngine(
+            model, params, self.batch_slots, self.cache_cap,
+            config=self._pool_config, monitor=monitor))
+        self.groups = [grp + (pair[g],) for g, grp in enumerate(self.groups)]
+        self.n_tenants += 1
+        self._build_lockstep()
+        return t
+
+    def evict_tenant(self, t: int):
+        """Remove tenant ``t`` from the live pool. Returns its (detached)
+        slot pool — still serveable standalone.
+
+        The tenant's queued and in-flight requests leave with its pool
+        (drain the engine first to finish them); its colocation column,
+        monitor, and lockstep row disappear. Every surviving tenant's pool
+        and cache are untouched, so eviction is placement-only for them —
+        their token streams are byte-identical to a churn-free run.
+        """
+        if not 0 <= t < self.n_tenants:
+            raise ValueError(f"no tenant {t} (have {self.n_tenants})")
+        if self.n_tenants <= 1:
+            raise ValueError("cannot evict the last tenant")
+        if self.n_tenants == 2 and self.replan is not None:
+            raise ValueError(
+                "eviction would leave one tenant — nothing to re-group; "
+                "drop the replanner (or keep >= 2 tenants)")
+        pool = self.pools.pop(t)
+        self.models.pop(t)
+        if self.monitors is not None:
+            self.monitors.pop(t)
+        self.groups = [g[:t] + g[t + 1:] for g in self.groups]
+        self.n_tenants -= 1
+        self._build_lockstep()
+        return pool
 
     def step(self) -> bool:
         """Admit into every pool, then one fused lockstep decode."""

@@ -1,0 +1,281 @@
+"""Engine configuration + admission policies: the serving public API.
+
+``EngineConfig`` is the one knob surface shared by every serving engine
+(single, colocated, multi-tenant, and their EP-sharded distributed
+variants). It absorbs what used to be a sprawl of per-engine constructor
+keywords; engines now take ``Engine(model, params, batch_slots, cache_cap,
+config=EngineConfig(...))``. The old keywords still work as deprecated
+shims (``coerce_config`` folds them into an ``EngineConfig`` and emits a
+``DeprecationWarning``) so downstream callers migrate on their own clock —
+the repo itself is fully migrated and CI runs with
+``-W error::DeprecationWarning``.
+
+``AdmissionPolicy`` replaces the loose ``prefill_chunk`` /
+``step_token_budget`` / ``bucket_policy`` trio with one object that decides
+how queued prompts enter the slot pool (t2t's ``data_reader.py`` bucketing
+schemes are the exemplar):
+
+* ``FifoAdmission`` — one-shot admission in arrival order: a free slot
+  absorbs the whole (bucketed) prompt in one prefill program.
+* ``LengthBucketedAdmission`` — chunked admission: prompts are bucketed to
+  a pad length and absorbed ``chunk`` tokens per engine step, so a long
+  prompt never stalls the decode loop for more than one chunk.
+* ``TokenBudgetAdmission`` — chunked admission under a per-step token
+  budget: decode always runs and eats ``num_active`` tokens of the budget;
+  prefill chunks only proceed on leftover budget.
+
+The legacy trio maps 1:1 onto the three policies (``resolve_admission``),
+so existing behavior is reproduced exactly — the policy object is the same
+scheduler, named.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Callable, Protocol, Sequence
+
+
+def make_bucketer(policy) -> Callable[[int], int]:
+    """Resolve a prefill bucketing policy to ``fn(prompt_len) -> pad_len``.
+
+    Policies:
+      "pow2"     next power of two — few compiled prefill programs (default)
+      "exact"    no padding — one compilation per distinct prompt length
+      "step:K"   round up to a multiple of K — linear compile count, less pad
+      callable   custom ``fn(n) -> >= n``
+    """
+    if callable(policy):
+        return policy
+    if policy == "pow2":
+        def pow2(n: int) -> int:
+            p = 1
+            while p < n:
+                p *= 2
+            return p
+        return pow2
+    if policy == "exact":
+        return lambda n: n
+    if isinstance(policy, str) and policy.startswith("step:"):
+        k = int(policy.split(":", 1)[1])
+        if k <= 0:
+            raise ValueError(f"bucket step must be positive, got {k}")
+        return lambda n: -(-n // k) * k
+    raise ValueError(f"unknown bucket policy {policy!r} "
+                     "(expected 'pow2', 'exact', 'step:K', or a callable)")
+
+
+class AdmissionPolicy(Protocol):
+    """How queued prompts enter the slot pool.
+
+    ``chunk`` is the per-step prefill granularity (None = one-shot whole
+    prompts), ``budget`` the per-step token budget (None = unbudgeted);
+    ``pad`` buckets a prompt length to its compiled pad length, and
+    ``chunk_budget`` is the scheduler decision: given the decode load and
+    the pending prefills' next chunk sizes (FIFO order), how many of those
+    chunks run this step (a prefix count — admission never reorders).
+    """
+
+    chunk: int | None
+    budget: int | None
+
+    def pad(self, prompt_len: int) -> int: ...
+
+    def chunk_budget(self, num_active: int,
+                     chunks: Sequence[int]) -> int: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class FifoAdmission:
+    """One-shot admission in arrival order (no chunking): each free slot
+    absorbs a whole bucketed prompt in one prefill program."""
+
+    bucket_policy: object = "pow2"
+    chunk = None
+    budget = None
+
+    def pad(self, prompt_len: int) -> int:
+        return make_bucketer(self.bucket_policy)(prompt_len)
+
+    def chunk_budget(self, num_active: int, chunks: Sequence[int]) -> int:
+        return len(chunks)
+
+
+@dataclasses.dataclass(frozen=True)
+class LengthBucketedAdmission:
+    """Chunked admission: prompts bucketed to a pad length and absorbed
+    ``chunk`` tokens per engine step, unbudgeted (every in-flight prefill
+    may advance one chunk per step)."""
+
+    chunk: int
+    bucket_policy: object = "pow2"
+    budget = None
+
+    def __post_init__(self):
+        if self.chunk <= 0:
+            raise ValueError("prefill_chunk must be a positive token count")
+
+    def pad(self, prompt_len: int) -> int:
+        return make_bucketer(self.bucket_policy)(prompt_len)
+
+    def chunk_budget(self, num_active: int, chunks: Sequence[int]) -> int:
+        return len(chunks)
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenBudgetAdmission:
+    """Chunked admission under a per-step token budget.
+
+    Decode always runs and eats ``num_active`` tokens of the budget; pending
+    prefills advance in FIFO order on the leftover — the prefix of chunks
+    whose sizes fit ``budget - num_active``. An empty pool bypasses the gate
+    entirely (nothing is decoding, so there is nothing to protect), which is
+    also the progress guarantee: decode drains slots, ``num_active`` falls,
+    and the leftover eventually covers the head chunk.
+    """
+
+    chunk: int
+    budget: int
+    bucket_policy: object = "pow2"
+
+    def __post_init__(self):
+        if self.chunk <= 0:
+            raise ValueError("prefill_chunk must be a positive token count")
+        if self.budget <= 0:
+            raise ValueError("step_token_budget must be a positive "
+                             "token count")
+
+    def pad(self, prompt_len: int) -> int:
+        return make_bucketer(self.bucket_policy)(prompt_len)
+
+    def chunk_budget(self, num_active: int, chunks: Sequence[int]) -> int:
+        if num_active == 0:
+            return len(chunks)
+        left = self.budget - num_active
+        k = 0
+        for c in chunks:
+            if c > left:
+                break
+            left -= c
+            k += 1
+        return k
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Scheduling/compilation knobs shared by every serving engine.
+
+    ``admission`` is the full-control path (any ``AdmissionPolicy``); the
+    ``prefill_chunk``/``step_token_budget``/``bucket_policy`` fields are the
+    shorthand that maps onto the three stock policies (and mirrors the old
+    keyword API) — set one or the other, not both.
+
+    ``prefill_pool = K`` admits up to K chunked prefills CONCURRENTLY: all
+    their due chunks (and the decode step, in the single-model engine) run
+    in ONE jitted program per engine step instead of one chunk per step.
+    Each prompt is still absorbed as batch-1 sub-calls inside that program,
+    so MoE capacity/drop semantics — computed per token group — are
+    bit-identical to serialized admission and token streams cannot change;
+    only the schedule (and the dispatch count) does. Requires chunked
+    admission.
+
+    ``kernels`` unifies kernel-path selection: ``False`` (dense reference),
+    ``True`` (default ``KernelConfig``), or an explicit ``KernelConfig`` —
+    one code path (``kernelize`` -> ``Model.with_kernels``, which also picks
+    ``moe_impl="kernel"`` for non-EP MoE configs).
+
+    ``step_wrapper`` wraps every compiled step (the distributed engines
+    compose their mesh-context wrapper under it); ``jit=False`` runs steps
+    eagerly (debugging).
+    """
+
+    prefill_len: int | None = None
+    prefill_chunk: int | None = None
+    step_token_budget: int | None = None
+    bucket_policy: object = "pow2"
+    prefill_pool: int = 1
+    admission: AdmissionPolicy | None = None
+    kernels: object = False          # bool | KernelConfig
+    jit: bool = True
+    step_wrapper: Callable | None = None
+
+    def __post_init__(self):
+        if self.admission is not None:
+            if (self.prefill_chunk is not None
+                    or self.step_token_budget is not None):
+                raise ValueError(
+                    "admission= replaces the prefill_chunk/step_token_budget "
+                    "shorthand — configure chunking inside the policy")
+            if self.bucket_policy != "pow2":
+                raise ValueError(
+                    "with admission= set, pass bucket_policy inside the "
+                    "admission policy (the config-level field would be "
+                    "silently ignored)")
+        if self.prefill_chunk is not None and self.prefill_chunk <= 0:
+            raise ValueError("prefill_chunk must be a positive token count")
+        if self.step_token_budget is not None and self.prefill_chunk is None:
+            raise ValueError(
+                "step_token_budget only gates CHUNKED prefill scheduling — "
+                "one-shot admission absorbs whole prompts regardless; set "
+                "prefill_chunk to give the budget something to schedule")
+        if self.prefill_pool < 1:
+            raise ValueError("prefill_pool must be >= 1")
+        if self.prefill_pool > 1 and self.resolve_admission().chunk is None:
+            raise ValueError(
+                "prefill_pool > 1 pools CHUNKED prefills — one-shot "
+                "admission has nothing to interleave; set prefill_chunk "
+                "(or a chunked admission policy)")
+
+    def resolve_admission(self) -> AdmissionPolicy:
+        """The admission policy this config realizes (explicit ``admission``
+        wins; else the legacy-trio mapping)."""
+        if self.admission is not None:
+            return self.admission
+        if self.prefill_chunk is None:
+            return FifoAdmission(bucket_policy=self.bucket_policy)
+        if self.step_token_budget is None:
+            return LengthBucketedAdmission(chunk=self.prefill_chunk,
+                                           bucket_policy=self.bucket_policy)
+        return TokenBudgetAdmission(chunk=self.prefill_chunk,
+                                    budget=self.step_token_budget,
+                                    bucket_policy=self.bucket_policy)
+
+    def kernelize(self, model):
+        """The ONE kernel-selection code path: route ``model`` through the
+        Pallas serving hot path per ``self.kernels`` (no-op when False;
+        ``Model.with_kernels`` picks ``moe_impl`` for bool/KernelConfig)."""
+        return model.with_kernels(self.kernels) if self.kernels else model
+
+
+# Old per-engine constructor keywords, foldable 1:1 into EngineConfig.
+_LEGACY_KEYS = ("prefill_len", "prefill_chunk", "step_token_budget",
+                "bucket_policy", "kernels", "jit", "step_wrapper")
+
+
+def coerce_config(config: EngineConfig | None, kwargs: dict, owner: str,
+                  strict: bool = True) -> EngineConfig:
+    """Deprecated-kwarg shim: pop legacy engine keywords out of ``kwargs``,
+    fold them into an ``EngineConfig`` (with a ``DeprecationWarning``), and
+    return the effective config.
+
+    ``strict=True`` (the engine constructors) rejects any leftover key —
+    the catch-all ``**legacy`` must not silently eat typos. The distributed
+    engines pre-coerce with ``strict=False`` because their ``kwargs`` still
+    carry real pass-through arguments (``monitor``, ``pair``, ...) for the
+    parent constructor, which then runs the strict pass on what remains.
+    """
+    legacy = {k: kwargs.pop(k) for k in _LEGACY_KEYS if k in kwargs}
+    if strict and kwargs:
+        raise TypeError(f"{owner}: unexpected keyword argument(s) "
+                        f"{sorted(kwargs)}")
+    if not legacy:
+        return config if config is not None else EngineConfig()
+    if config is not None:
+        raise ValueError(
+            f"{owner}: pass either config=EngineConfig(...) or the "
+            f"deprecated keyword(s) {sorted(legacy)}, not both")
+    warnings.warn(
+        f"{owner}({', '.join(sorted(legacy))}=...) is deprecated — pass "
+        "config=EngineConfig(...) (repro.serving.EngineConfig)",
+        DeprecationWarning, stacklevel=3)
+    return EngineConfig(**legacy)

@@ -41,6 +41,7 @@ from repro.models import Model
 from repro.sharding import make_pc
 
 from .colocated import ColocatedContinuousEngine, MultiTenantContinuousEngine
+from .config import EngineConfig, coerce_config
 from .engine import ContinuousEngine
 
 
@@ -192,6 +193,20 @@ def _with_mesh(mesh):
     return wrap
 
 
+def _mesh_config(config, kw, owner, mesh) -> EngineConfig:
+    """Resolve the effective ``EngineConfig`` for a Distributed* engine and
+    compose the mesh-context wrapper UNDER any user ``step_wrapper`` (the
+    mesh must be innermost — it has to be active when the compiled step
+    actually runs). Legacy keywords are coerced here non-strictly: ``kw``
+    still carries real pass-through arguments (``monitor``, ``pair``, ...)
+    for the parent constructor, which runs the strict pass on the rest."""
+    config = coerce_config(config, kw, owner, strict=False)
+    user = config.step_wrapper
+    inner = _with_mesh(mesh)
+    wrapper = inner if user is None else (lambda fn: user(inner(fn)))
+    return dataclasses.replace(config, step_wrapper=wrapper)
+
+
 # ---------------------------------------------------------------------------
 # Engines
 # ---------------------------------------------------------------------------
@@ -208,7 +223,9 @@ class DistributedEngine(ContinuousEngine):
 
     def __init__(self, model: Model, params, batch_slots: int,
                  cache_cap: int, *, mesh, moe_impl: str = "aurora",
-                 rounds=None, plan=None, overlap: bool = False, **kw):
+                 rounds=None, plan=None, overlap: bool = False,
+                 config: EngineConfig | None = None, **kw):
+        config = _mesh_config(config, kw, type(self).__name__, mesh)
         model = distribute(model, mesh, moe_impl=moe_impl, overlap=overlap)
         self.mesh = mesh
         self.n_ep = ep_size(model.pc)
@@ -216,7 +233,7 @@ class DistributedEngine(ContinuousEngine):
         if rounds is not None:
             model = _with_rounds(model, rounds)
         super().__init__(model, params, batch_slots, cache_cap,
-                         step_wrapper=_with_mesh(mesh), **kw)
+                         config=config, **kw)
 
     @property
     def rounds(self):
@@ -271,7 +288,9 @@ class DistributedColocatedEngine(ColocatedContinuousEngine):
     def __init__(self, model_a: Model, model_b: Model, params_a, params_b,
                  batch_slots: int, cache_cap: int, *, mesh,
                  moe_impl: str = "aurora", rounds=None, plan=None,
-                 overlap: bool = False, refresh_rounds: bool = True, **kw):
+                 overlap: bool = False, refresh_rounds: bool = True,
+                 config: EngineConfig | None = None, **kw):
+        config = _mesh_config(config, kw, type(self).__name__, mesh)
         model_a = distribute(model_a, mesh, moe_impl=moe_impl,
                              overlap=overlap)
         model_b = distribute(model_b, mesh, moe_impl=moe_impl,
@@ -286,7 +305,7 @@ class DistributedColocatedEngine(ColocatedContinuousEngine):
         if plan is not None and kw.get("pair") is None and plan.pair:
             kw["pair"] = list(plan.pair)
         super().__init__(model_a, model_b, params_a, params_b, batch_slots,
-                         cache_cap, step_wrapper=_with_mesh(mesh), **kw)
+                         cache_cap, config=config, **kw)
 
     @property
     def rounds(self):
@@ -303,20 +322,25 @@ class DistributedColocatedEngine(ColocatedContinuousEngine):
         self.model_a, self.model_b = self.pool_a.model, self.pool_b.model
         self._build_lockstep()
 
-    def adopt(self, plan):
-        rounds = resolve_rounds(plan, self.n_ep)
+    def adopt(self, source):
+        """One adoption surface for placement AND schedule: a full ``Plan``
+        re-realizes its pairing on pool B (placement-only, via the shared
+        ``reseat_pairing`` checkpoint) and then refreshes the ppermute
+        rounds from its schedules; a ``MoETrace`` / traffic matrix refreshes
+        rounds only. Returns the adopted rounds."""
+        if hasattr(source, "schedules") and source.pair:
+            ColocatedContinuousEngine.adopt(self, source)
+        rounds = resolve_rounds(source, self.n_ep)
         self.swap_rounds(rounds)
         return rounds
 
-    def _maybe_replan(self) -> None:
-        prev = self.plan
-        super()._maybe_replan()
-        if (self.refresh_rounds and self.plan is not prev
-                and self.model_a.pc.moe_impl == "aurora"):
+    def _adopt_online(self, plan) -> None:
+        ColocatedContinuousEngine.adopt(self, plan)
+        if self.refresh_rounds and self.model_a.pc.moe_impl == "aurora":
             # The adopted plan was computed from the LIVE traces, so its
             # schedules already reflect current traffic under the new
             # pairing — exactly what the rounds should realize.
-            self.adopt(self.plan)
+            self.swap_rounds(resolve_rounds(plan, self.n_ep))
 
 
 class DistributedMultiTenantEngine(MultiTenantContinuousEngine):
@@ -327,7 +351,9 @@ class DistributedMultiTenantEngine(MultiTenantContinuousEngine):
     def __init__(self, models: list[Model], params: list, batch_slots: int,
                  cache_cap: int, *, mesh, moe_impl: str = "aurora",
                  rounds=None, plan=None, overlap: bool = False,
-                 refresh_rounds: bool = True, **kw):
+                 refresh_rounds: bool = True,
+                 config: EngineConfig | None = None, **kw):
+        config = _mesh_config(config, kw, type(self).__name__, mesh)
         models = [distribute(m, mesh, moe_impl=moe_impl, overlap=overlap)
                   for m in models]
         self.mesh = mesh
@@ -339,7 +365,7 @@ class DistributedMultiTenantEngine(MultiTenantContinuousEngine):
         if plan is not None and kw.get("groups") is None and plan.groups:
             kw["groups"] = [tuple(g) for g in plan.groups]
         super().__init__(models, params, batch_slots, cache_cap,
-                         step_wrapper=_with_mesh(mesh), **kw)
+                         config=config, **kw)
 
     @property
     def rounds(self):
@@ -354,14 +380,18 @@ class DistributedMultiTenantEngine(MultiTenantContinuousEngine):
         self.models = [p.model for p in self.pools]
         self._build_lockstep()
 
-    def adopt(self, plan):
-        rounds = resolve_rounds(plan, self.n_ep)
+    def adopt(self, source):
+        """One adoption surface: a full ``Plan`` re-seats every tenant to
+        its grouping (placement-only) and refreshes the rounds; a
+        ``MoETrace`` / traffic matrix refreshes rounds only. Returns the
+        adopted rounds."""
+        if hasattr(source, "schedules") and source.groups:
+            MultiTenantContinuousEngine.adopt(self, source)
+        rounds = resolve_rounds(source, self.n_ep)
         self.swap_rounds(rounds)
         return rounds
 
-    def _maybe_regroup(self) -> None:
-        prev = self.plan
-        super()._maybe_regroup()
-        if (self.refresh_rounds and self.plan is not prev
-                and self.models[0].pc.moe_impl == "aurora"):
-            self.adopt(self.plan)
+    def _adopt_online(self, plan) -> None:
+        MultiTenantContinuousEngine.adopt(self, plan)
+        if self.refresh_rounds and self.models[0].pc.moe_impl == "aurora":
+            self.swap_rounds(resolve_rounds(plan, self.n_ep))

@@ -15,29 +15,45 @@ reusable while long requests keep decoding. Same math as the static engine
 (per-row attention masking via the per-slot length vector), different
 schedule.
 
-**Chunked prefill** (``prefill_chunk=C``): instead of absorbing a whole
-prompt in one admission step — stalling every active slot's decode behind a
-long prefill — the prompt is consumed ``C`` tokens per engine step straight
-into its slot's row of the shared cache (``Model.prefill_chunk_slot``:
-slice, continue, merge in one donated program). Between chunks the decode
-step freezes the pending slot's row (``row_mask``), so the partial state
-survives interleaved decodes. Each step runs under a token budget: decode
-always runs; leftover budget feeds at most ONE prefill chunk
-(``step_token_budget``). Token streams are identical to one-shot admission
-(prefill continuation is exact — see ``models.transformer.forward``); only
-the schedule changes.
+All scheduling/compilation knobs arrive through one frozen ``EngineConfig``
+(``repro.serving.config``): ``Engine(model, params, batch_slots, cache_cap,
+config=EngineConfig(...))``. The old per-engine keywords remain as
+deprecated shims.
+
+**Chunked prefill** (``EngineConfig(prefill_chunk=C)``): instead of
+absorbing a whole prompt in one admission step — stalling every active
+slot's decode behind a long prefill — the prompt is consumed ``C`` tokens
+per engine step straight into its slot's row of the shared cache
+(``Model.prefill_chunk_slot``: slice, continue, merge in one donated
+program). Between chunks the decode step freezes the pending slot's row
+(``row_mask``), so the partial state survives interleaved decodes. An
+``AdmissionPolicy`` decides which pending chunks run each step: decode
+always runs; under ``TokenBudgetAdmission`` leftover budget feeds the
+FIFO prefix of due chunks. Token streams are identical to one-shot
+admission (prefill continuation is exact — see
+``models.transformer.forward``); only the schedule changes.
+
+**Prefill pool** (``EngineConfig(prefill_pool=K)``): up to K chunked
+prefills live in flight at once, and every engine step runs ALL their due
+chunks plus the decode step as ONE jitted program — prefill effectively
+overlaps decode by sharing its dispatch instead of serializing admission
+one chunk per step. Each prompt still advances as batch-1 sub-calls inside
+that program, so MoE capacity/drop semantics (computed per token group)
+are bit-identical to serialized admission; completed prompts merge into
+their reserved slots as they finish.
 
 **Live routing stats** (``monitor=TrafficMonitor(...)``): decode steps and
 prefills report per-layer expert routing counts, feeding the traffic-driven
 re-planner (``repro.serving.monitor``).
 
-**Kernel path** (``kernels=True`` or a ``KernelConfig``): the engine's jitted
-steps run through the Pallas serving hot path — sort-based ragged MoE
-dispatch into the fused grouped FFN and flash-decode attention over the
-per-slot cache (``Model.with_kernels``). Same routing/capacity semantics,
-so token streams match the dense path; routing counts still flow to the
-monitor (derived from the routing output by the shared ``routed_counts``
-scatter, no one-hot).
+**Kernel path** (``EngineConfig(kernels=True)`` or a ``KernelConfig``): the
+engine's jitted steps run through the Pallas serving hot path — sort-based
+ragged MoE dispatch into the fused grouped FFN and flash-decode attention
+over the per-slot cache (``EngineConfig.kernelize`` ->
+``Model.with_kernels``, the one kernel-selection path). Same
+routing/capacity semantics, so token streams match the dense path; routing
+counts still flow to the monitor (derived from the routing output by the
+shared ``routed_counts`` scatter, no one-hot).
 """
 
 from __future__ import annotations
@@ -45,42 +61,17 @@ from __future__ import annotations
 import collections
 import dataclasses
 from functools import partial
-from typing import Callable, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import Model
+from repro.serving.config import EngineConfig, coerce_config, make_bucketer
 
-
-def make_bucketer(policy) -> Callable[[int], int]:
-    """Resolve a prefill bucketing policy to ``fn(prompt_len) -> pad_len``.
-
-    Policies (ROADMAP follow-up: beyond hardcoded powers of two):
-      "pow2"     next power of two — few compiled prefill programs (default)
-      "exact"    no padding — one compilation per distinct prompt length
-      "step:K"   round up to a multiple of K — linear compile count, less pad
-      callable   custom ``fn(n) -> >= n``
-    """
-    if callable(policy):
-        return policy
-    if policy == "pow2":
-        def pow2(n: int) -> int:
-            p = 1
-            while p < n:
-                p *= 2
-            return p
-        return pow2
-    if policy == "exact":
-        return lambda n: n
-    if isinstance(policy, str) and policy.startswith("step:"):
-        k = int(policy.split(":", 1)[1])
-        if k <= 0:
-            raise ValueError(f"bucket step must be positive, got {k}")
-        return lambda n: -(-n // k) * k
-    raise ValueError(f"unknown bucket policy {policy!r} "
-                     "(expected 'pow2', 'exact', 'step:K', or a callable)")
+__all__ = ["Request", "poisson_requests", "serve_stream", "make_bucketer",
+           "ServingEngine", "ContinuousEngine"]
 
 
 @dataclasses.dataclass
@@ -200,41 +191,36 @@ class ContinuousEngine:
 
     def __init__(self, model: Model, params, batch_slots: int,
                  cache_cap: int, src_len: int = 0,
-                 prefill_len: int | None = None, jit: bool = True,
-                 prefill_chunk: int | None = None,
-                 step_token_budget: int | None = None,
-                 bucket_policy="pow2", monitor=None, kernels=False,
-                 step_wrapper: Callable | None = None):
-        if kernels:
-            model = model.with_kernels(kernels)
+                 config: EngineConfig | None = None, monitor=None,
+                 **legacy):
+        config = coerce_config(config, legacy, type(self).__name__)
+        self.config = config
+        model = config.kernelize(model)
         self.model = model
         self.params = params
         self.batch_slots = batch_slots
         self.cache_cap = cache_cap
         self.src_len = src_len
-        self.prefill_len = prefill_len
-        if prefill_chunk is not None and prefill_chunk <= 0:
-            raise ValueError("prefill_chunk must be a positive token count")
-        if step_token_budget is not None and prefill_chunk is None:
-            raise ValueError(
-                "step_token_budget only gates CHUNKED prefill scheduling — "
-                "one-shot admission absorbs whole prompts regardless; set "
-                "prefill_chunk to give the budget something to schedule")
-        self.prefill_chunk = prefill_chunk
-        self.step_token_budget = step_token_budget
-        self._bucketer = make_bucketer(bucket_policy)
+        self.admission = config.resolve_admission()
+        # Derived views kept for callers that inspected the old attributes.
+        self.prefill_len = config.prefill_len
+        self.prefill_chunk = self.admission.chunk
+        self.step_token_budget = self.admission.budget
+        self._bucketer = make_bucketer(self.admission.bucket_policy)
+        self._pool_size = config.prefill_pool
         self.monitor = monitor
         self.cache = model.init_cache(batch_slots, cache_cap,
                                       src_len=src_len, per_slot_len=True)
         self.tokens = jnp.zeros((batch_slots, 1), jnp.int32)
         self.queue: collections.deque[Request] = collections.deque()
         self.slots: list[Request | None] = [None] * batch_slots
-        self._pending = None        # in-flight chunked prefill (at most one)
-        self._jit = jit
+        # In-flight chunked prefills, FIFO: [req, slot, padded_toks, done].
+        self._pending: list[list] = []
+        self._jit = config.jit
         # Distributed engines wrap every compiled step so it runs under the
         # mesh context (``with_sharding_constraint`` needs an active mesh on
         # legacy jax); identity for the single-device engines.
-        self._step_wrapper = step_wrapper or (lambda fn: fn)
+        self._step_wrapper = config.step_wrapper or (lambda fn: fn)
         self._build_steps()
         self.decode_steps = 0
 
@@ -263,6 +249,55 @@ class ContinuousEngine:
         fn_d = model.decode_step_stats if stats else model.decode_step
         self._decode = wrap(jax.jit(fn_d, donate_argnums=(2,))
                             if jit else fn_d)
+        if self._pool_size > 1:
+            fn_pool = self._make_pool_fn(stats)
+            self._pool_step = wrap(
+                jax.jit(fn_pool, static_argnums=(0, 1), donate_argnums=(4,))
+                if jit else fn_pool)
+
+    def _make_pool_fn(self, stats: bool):
+        """The pooled-admission program: K chunked prefills (and, when
+        ``decode`` is set, the decode step over all slots) threaded through
+        the shared donated cache in ONE jitted function.
+
+        Each prefill stays a batch-1 ``prefill_chunk_slot`` sub-call — MoE
+        capacity and dispatch ranks are computed per token group, so
+        batching the K chunks into one (K, C) group would route with K*C
+        tokens of rank competition and break token identity with serialized
+        admission. Composing the sub-calls keeps the math bit-identical
+        while XLA fuses/schedules them as one program (one dispatch per
+        engine step instead of up to K+1).
+
+        ``firsts`` (per-chunk fresh-slot flags) and ``decode`` are static:
+        the program retraces per (pool shape, firsts, decode) combination,
+        bounded in practice by the chunk bucketing.
+        """
+        model = self.model
+        chunk = partial(model.prefill_chunk_slot, cap=self.cache_cap,
+                        src_len=self.src_len, collect_moe_stats=stats)
+        dec = model.decode_step_stats if stats else model.decode_step
+
+        def pool_fn(firsts, decode, params, toks, cache, slots, tokens,
+                    mask):
+            chunk_out = []
+            for inp, slot, first in zip(toks, slots, firsts):
+                out = chunk(params, inp, cache, slot, first=first)
+                if stats:
+                    logits, cache, st = out
+                else:
+                    (logits, cache), st = out, None
+                chunk_out.append((logits, st))
+            dec_out = None
+            if decode:
+                out = dec(params, tokens, cache, mask)
+                if stats:
+                    logits, cache, st = out
+                else:
+                    (logits, cache), st = out, None
+                dec_out = (logits, st)
+            return chunk_out, dec_out, cache
+
+        return pool_fn
 
     def _rebind(self, model: Model) -> None:
         """Swap the model (e.g. a ``ParallelContext`` with fresh ppermute
@@ -311,6 +346,18 @@ class ContinuousEngine:
             spec = ReplicationSpec.from_counts(counts)
         self._set_replication(spec)
 
+    def adopt(self, plan) -> None:
+        """Unified adoption surface (one verb across every engine): take
+        whatever placement evidence the caller has and re-realize it
+        placement-only, mid-stream. For the single-model engine that is
+        hot-expert replication: a full planner ``Plan`` (its
+        ``.replication`` host map), a bare per-expert host-map/copy-count
+        sequence, or ``None`` to drop back to unreplicated serving. The
+        colocated/multi-tenant engines extend this verb to pairing/grouping,
+        the distributed engines to Aurora round refresh."""
+        rep = plan.replication if hasattr(plan, "schedules") else plan
+        self.adopt_replication(rep)
+
     # -- scheduler ---------------------------------------------------------
     @property
     def num_active(self) -> int:
@@ -318,8 +365,8 @@ class ContinuousEngine:
 
     @property
     def num_pending(self) -> int:
-        """In-flight chunked prefills (0 or 1)."""
-        return int(self._pending is not None)
+        """In-flight chunked prefills (up to ``config.prefill_pool``)."""
+        return len(self._pending)
 
     def submit(self, req: Request) -> None:
         # Final per-slot length is pad(prompt) + max_new_tokens - 1 (the
@@ -363,10 +410,10 @@ class ContinuousEngine:
         return p
 
     def _free_slot(self) -> int | None:
-        """First free slot not reserved by the in-flight prefill."""
-        reserved = self._pending[1] if self._pending is not None else -1
+        """First free slot not reserved by an in-flight prefill."""
+        reserved = {p[1] for p in self._pending}
         for i, r in enumerate(self.slots):
-            if r is None and i != reserved:
+            if r is None and i not in reserved:
                 return i
         return None
 
@@ -404,33 +451,39 @@ class ContinuousEngine:
         if self.prefill_chunk is None:
             self._admit()
             return False
+        if self._pool_size > 1:
+            return self._pool_tick(fuse_decode=False)
         return self._prefill_tick()
 
+    def _start_pending(self, slot: int) -> None:
+        """Pop the queue head into a reserved slot as an in-flight prefill."""
+        r = self.queue.popleft()
+        p = self._bucket(len(r.prompt))
+        toks = np.zeros((1, p), np.int32)
+        toks[0, p - len(r.prompt):] = r.prompt          # left-pad with 0
+        self._pending.append([r, slot, toks, 0])
+
     def _prefill_tick(self) -> bool:
-        """Budgeted chunked admission: start or advance the single in-flight
-        prefill by at most one ``prefill_chunk``-token chunk. Every chunk
-        lands directly in the slot's row of the shared cache; between chunks
-        the decode step freezes that row (``row_mask``), so the partial
-        state survives interleaved decode ticks untouched."""
-        if self._pending is None:
+        """Serialized chunked admission (``prefill_pool=1``): start or
+        advance the single in-flight prefill by at most one
+        ``prefill_chunk``-token chunk, as the admission policy allows. Every
+        chunk lands directly in the slot's row of the shared cache; between
+        chunks the decode step freezes that row (``row_mask``), so the
+        partial state survives interleaved decode ticks untouched."""
+        if not self._pending:
             slot = self._free_slot()
             if not self.queue or slot is None:
                 return False
-            r = self.queue.popleft()
-            p = self._bucket(len(r.prompt))
-            toks = np.zeros((1, p), np.int32)
-            toks[0, p - len(r.prompt):] = r.prompt      # left-pad with 0
-            self._pending = [r, slot, toks, 0]
-        r, slot, toks, done = self._pending
+            self._start_pending(slot)
+        r, slot, toks, done = self._pending[0]
         c = min(self.prefill_chunk, toks.shape[1] - done)
-        if self.step_token_budget is not None and self.num_active > 0:
-            # Decode always runs and eats num_active tokens of the budget;
-            # the chunk only proceeds on leftover budget. Progress is
-            # guaranteed: decode drains slots, so num_active falls and the
-            # leftover eventually covers a chunk (or the pool empties and
-            # the budget gate is bypassed entirely).
-            if self.step_token_budget - self.num_active < c:
-                return False
+        # Decode always runs and eats num_active tokens of any budget; the
+        # chunk only proceeds when the policy admits it. Progress is
+        # guaranteed: decode drains slots, so num_active falls and the
+        # leftover eventually covers a chunk (or the pool empties and the
+        # budget gate is bypassed entirely).
+        if self.admission.chunk_budget(self.num_active, [c]) < 1:
+            return False
         chunk_toks = {"tokens": jnp.asarray(toks[:, done:done + c])}
         # The first chunk starts the slot from a fresh zero state (no
         # leakage from the previous occupant); later chunks resume from the
@@ -447,10 +500,64 @@ class ContinuousEngine:
             logits, self.cache = out
         done += c
         if done < toks.shape[1]:
-            self._pending = [r, slot, toks, done]
+            self._pending[0][3] = done
             return True
-        self._pending = None
+        self._pending.pop(0)
         self._finish_admission(r, slot, logits)
+        return True
+
+    def _pool_tick(self, fuse_decode: bool) -> bool:
+        """Pooled chunked admission (``prefill_pool=K``): top the pool up
+        from the queue, then run every policy-admitted due chunk — and, when
+        ``fuse_decode`` is set and slots are occupied, the decode step — as
+        ONE jitted program against the shared cache.
+
+        FIFO discipline throughout (the pool tops up in arrival order and
+        the policy admits a prefix), so emitted token streams are identical
+        to serialized admission; only the schedule changes. Bookkeeping
+        order matters: ``_postdecode`` replaces ``self.tokens`` wholesale
+        with this step's argmax, so it must land BEFORE
+        ``_finish_admission`` writes a freshly admitted slot's first token.
+        """
+        while len(self._pending) < self._pool_size and self.queue:
+            slot = self._free_slot()
+            if slot is None:
+                break
+            self._start_pending(slot)
+        chunks = [min(self.prefill_chunk, p[2].shape[1] - p[3])
+                  for p in self._pending]
+        k = min(self.admission.chunk_budget(self.num_active, chunks),
+                len(chunks))
+        decode = fuse_decode and self.num_active > 0
+        if k == 0 and not decode:
+            return False
+        sel = self._pending[:k]
+        toks = tuple({"tokens": jnp.asarray(p[2][:, p[3]:p[3] + c])}
+                     for p, c in zip(sel, chunks))
+        slot_ids = tuple(jnp.int32(p[1]) for p in sel)
+        firsts = tuple(p[3] == 0 for p in sel)
+        mask = np.array([r is not None for r in self.slots], bool)
+        chunk_out, dec_out, self.cache = self._pool_step(
+            firsts, bool(decode), self.params, toks, self.cache, slot_ids,
+            self.tokens, jnp.asarray(mask))
+        if decode:
+            dlogits, dstats = dec_out
+            if self.monitor is not None:
+                self.monitor.observe(dstats, mask)
+            self.decode_steps += 1
+            self._postdecode(dlogits)
+        finished = []
+        for p, c, (logits, pstats) in zip(sel, chunks, chunk_out):
+            r, slot, tk, done = p
+            if self.monitor is not None:
+                self._observe_prefill(
+                    pstats, pad=(tk.shape[1] - len(r.prompt)) - done)
+            p[3] = done + c
+            if p[3] >= tk.shape[1]:
+                finished.append((p, logits))
+        for p, logits in finished:
+            self._pending.remove(p)
+            self._finish_admission(p[0], p[1], logits)
         return True
 
     def _observe_prefill(self, stats, pad: int) -> None:
@@ -495,8 +602,16 @@ class ContinuousEngine:
         return logits
 
     def step(self) -> bool:
-        """Admit (whole prefills, or one budgeted chunk), then decode all
-        slots once. Returns False when idle."""
+        """Admit (whole prefills, or policy-admitted chunks), then decode
+        all slots once. Returns False when idle.
+
+        With a prefill pool (``prefill_pool > 1``) the whole step — every
+        due prefill chunk AND the decode — is one fused program: a finishing
+        request's first decode shifts one engine step later than in the
+        serialized schedule, but per-request token streams are unchanged
+        (its first token comes from the prefill logits either way)."""
+        if self._pool_size > 1:
+            return self._pool_tick(fuse_decode=True)
         worked = self._admit_tick()
         if self.num_active == 0:
             return worked

@@ -1,0 +1,251 @@
+"""EngineConfig / admission API: pooled concurrent prefill identity,
+legacy-kwarg shims, admission policies, and live tenant churn.
+
+The anchor invariants: the prefill pool and tenant admission/eviction are
+SCHEDULE and MEMBERSHIP changes — byte-identical token streams for every
+request (pool) and every surviving tenant (churn)."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.serving import (ColocatedContinuousEngine, ContinuousEngine,
+                           EngineConfig, FifoAdmission,
+                           LengthBucketedAdmission,
+                           MultiTenantContinuousEngine, Request,
+                           TokenBudgetAdmission, apply_pairing,
+                           reseat_pairing)
+
+
+def _model(arch="qwen3-32b", seed=0):
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+def _requests(n=6, seed=0, plen=12, max_new=4, vocab=500):
+    rng = np.random.default_rng(seed)
+    # Bursty arrivals: several multi-chunk prompts in flight at once, the
+    # regime where pooled admission actually diverges from serialized
+    # admission in schedule.
+    arrivals = [0.0, 0.0, 1.0, 1.0, 2.0, 5.0, 6.0, 8.0]
+    return [Request(prompt=list(rng.integers(1, vocab, plen)),
+                    max_new_tokens=max_new, arrival=arrivals[i % 8])
+            for i in range(n)]
+
+
+# -- EngineConfig validation ------------------------------------------------
+
+def test_engine_config_validation():
+    with pytest.raises(ValueError, match="admission"):
+        EngineConfig(admission=FifoAdmission(), prefill_chunk=2)
+    with pytest.raises(ValueError, match="admission"):
+        EngineConfig(admission=FifoAdmission(), bucket_policy="exact")
+    with pytest.raises(ValueError, match="chunk"):
+        EngineConfig(prefill_chunk=0)
+    with pytest.raises(ValueError, match="budget"):
+        EngineConfig(step_token_budget=5)          # budget needs chunking
+    with pytest.raises(ValueError, match="pool"):
+        EngineConfig(prefill_pool=0)
+    with pytest.raises(ValueError, match="pool"):
+        EngineConfig(prefill_pool=2)               # pool needs chunking
+    with pytest.raises(ValueError, match="chunk"):
+        LengthBucketedAdmission(chunk=0)
+
+
+def test_engine_config_resolves_admission():
+    assert isinstance(EngineConfig().resolve_admission(), FifoAdmission)
+    a = EngineConfig(prefill_chunk=4).resolve_admission()
+    assert isinstance(a, LengthBucketedAdmission) and a.chunk == 4
+    b = EngineConfig(prefill_chunk=4,
+                     step_token_budget=9).resolve_admission()
+    assert isinstance(b, TokenBudgetAdmission) and b.budget == 9
+    custom = TokenBudgetAdmission(chunk=2, budget=6, bucket_policy="exact")
+    assert EngineConfig(admission=custom).resolve_admission() is custom
+
+
+def test_admission_policy_budgets():
+    fifo = FifoAdmission()
+    assert fifo.chunk is None and fifo.budget is None
+    assert fifo.chunk_budget(3, [1, 2]) == 2       # no budget: admit all
+    tb = TokenBudgetAdmission(chunk=4, budget=9)
+    # 2 active decode rows leave 7 tokens: one 4-chunk + one 3-chunk fit,
+    # the next 4-chunk does not (greedy FIFO prefix, no reordering).
+    assert tb.chunk_budget(2, [4, 3, 4]) == 2
+    # An idle engine bypasses the budget — nothing is decoding, so there
+    # is nothing to protect (the progress guarantee).
+    assert tb.chunk_budget(0, [99]) == 1
+
+
+# -- legacy-kwarg shims -----------------------------------------------------
+
+def test_legacy_kwargs_warn_and_roundtrip():
+    cfg, model, params = _model()
+    with pytest.warns(DeprecationWarning, match="ContinuousEngine"):
+        eng = ContinuousEngine(model, params, 2, 32, prefill_chunk=4,
+                               step_token_budget=9)
+    assert eng.config == EngineConfig(prefill_chunk=4, step_token_budget=9)
+    assert eng.prefill_chunk == 4 and eng.step_token_budget == 9
+    with pytest.raises(ValueError, match="both"):
+        ContinuousEngine(model, params, 2, 32,
+                         config=EngineConfig(prefill_len=4), prefill_len=4)
+    with pytest.raises(TypeError, match="prefil_chunk"):
+        ContinuousEngine(model, params, 2, 32, prefil_chunk=4)
+
+
+def test_legacy_kwargs_warn_once_per_engine():
+    cfg, ma, pa = _model("phi3.5-moe-42b-a6.6b", seed=0)
+    _, mb, pb = _model("phi3.5-moe-42b-a6.6b", seed=1)
+    with pytest.warns(DeprecationWarning) as rec:
+        ColocatedContinuousEngine(ma, mb, pa, pb, 2, 16, prefill_len=6)
+    assert len([w for w in rec
+                if issubclass(w.category, DeprecationWarning)]) == 1
+    with pytest.warns(DeprecationWarning) as rec:
+        MultiTenantContinuousEngine([ma, mb], [pa, pb], 2, 16,
+                                    prefill_len=6)
+    assert len([w for w in rec
+                if issubclass(w.category, DeprecationWarning)]) == 1
+
+
+# -- pooled concurrent prefill ----------------------------------------------
+
+@pytest.mark.parametrize("budget", [None, 9])
+def test_pooled_prefill_token_identity(budget):
+    """K=4 concurrent chunked prefills emit exactly the tokens of
+    serialized admission on the same bursty stream — with and without a
+    step token budget throttling the pool."""
+    cfg, model, params = _model()
+    serial = ContinuousEngine(
+        model, params, 3, 32,
+        config=EngineConfig(prefill_chunk=4, step_token_budget=budget))
+    ref = serial.serve(_requests(vocab=cfg.vocab))
+    pooled = ContinuousEngine(
+        model, params, 3, 32,
+        config=EngineConfig(prefill_chunk=4, step_token_budget=budget,
+                            prefill_pool=4))
+    out = pooled.serve(_requests(vocab=cfg.vocab))
+    assert [r.out_tokens for r in ref] == [r.out_tokens for r in out]
+    for r in out:
+        assert len(r.out_tokens) == r.max_new_tokens
+
+
+def test_pooled_prefill_ssm_state():
+    """The pool's fused chunk sub-calls thread one donated cache through K
+    prompts — recurrent (conv/SSD) state must continue per-slot exactly as
+    the serialized path's."""
+    cfg, model, params = _model("mamba2-1.3b")
+    mk = lambda: _requests(4, seed=2, plen=8, vocab=cfg.vocab)
+    ref = ContinuousEngine(
+        model, params, 2, 32,
+        config=EngineConfig(prefill_chunk=4)).serve(mk())
+    out = ContinuousEngine(
+        model, params, 2, 32,
+        config=EngineConfig(prefill_chunk=4, prefill_pool=3)).serve(mk())
+    assert [r.out_tokens for r in ref] == [r.out_tokens for r in out]
+
+
+# -- live tenant churn ------------------------------------------------------
+
+def _moe_models(n, arch="phi3.5-moe-42b-a6.6b"):
+    cfg = get_config(arch).reduced()
+    models = [Model(cfg) for _ in range(n)]
+    params = [m.init(jax.random.PRNGKey(t)) for t, m in enumerate(models)]
+    return cfg, models, params
+
+
+def _streams(n, seed0=1, plen=6, max_new=3, vocab=500):
+    return [_requests(2, seed=seed0 + t, plen=plen, max_new=max_new,
+                      vocab=vocab) for t in range(n)]
+
+
+def test_tenant_join_leave_placement_only():
+    """A join + serve + leave cycle is invisible to the incumbent tenants:
+    their token streams are byte-identical to a churn-free run, and the
+    joiner's own tokens do not depend on its expert pairing (placement
+    only)."""
+    cfg, models, params = _moe_models(2)
+    joiner = Model(cfg)
+    jp = joiner.init(jax.random.PRNGKey(9))
+    n_e = cfg.moe.n_experts
+
+    ref = MultiTenantContinuousEngine(models, params, 2, 32)
+    ref_a = ref.serve(_streams(2, seed0=1))
+    ref_b = ref.serve(_streams(2, seed0=5))
+
+    out_by_pair = {}
+    for pair in (list(range(n_e)), list(reversed(range(n_e)))):
+        eng = MultiTenantContinuousEngine(models, params, 2, 32)
+        got_a = eng.serve(_streams(2, seed0=1))
+        t_new = eng.admit_tenant(joiner, jp, pair=pair)
+        assert t_new == 2 and eng.n_tenants == 3
+        assert all(len(g) == 3 for g in eng.groups)
+        late = _streams(1, seed0=9)[0]
+        got_b = eng.serve([*_streams(2, seed0=5), late])
+        detached = eng.evict_tenant(t_new)
+        assert eng.n_tenants == 2
+        assert all(len(g) == 2 for g in eng.groups)
+        assert detached.num_active == 0
+        for got, want in ((got_a, ref_a), (got_b, ref_b)):
+            for t in range(2):
+                assert ([r.out_tokens for r in got[t]]
+                        == [r.out_tokens for r in want[t]]), f"tenant {t}"
+        out_by_pair[tuple(pair)] = [r.out_tokens for r in late]
+    a, b = out_by_pair.values()
+    assert a == b, "joiner's pairing changed its tokens"
+
+
+def test_tenant_churn_validates():
+    cfg, models, params = _moe_models(2)
+    eng = MultiTenantContinuousEngine(models, params, 2, 32)
+    with pytest.raises(ValueError, match="permutation"):
+        eng.admit_tenant(models[0], params[0], pair=[0, 0, 1, 2])
+    t = eng.admit_tenant(models[0], params[0])
+    eng.evict_tenant(t)
+    eng.evict_tenant(1)
+    with pytest.raises(ValueError, match="last"):
+        eng.evict_tenant(0)
+    with pytest.raises(ValueError, match="tenant"):
+        eng.evict_tenant(5)
+
+
+def test_reseat_pairing_validates_and_roundtrips():
+    cfg, models, params = _moe_models(1)
+    n_e = cfg.moe.n_experts
+    ident = list(range(n_e))
+    rev = list(reversed(ident))
+    with pytest.raises(ValueError, match="permutation"):
+        reseat_pairing(params[0], ident, [0] * n_e, cfg)
+    with pytest.raises(ValueError, match="permutation"):
+        reseat_pairing(params[0], [0] * n_e, ident, cfg)
+    # no-op when unchanged, exact inverse composition otherwise
+    assert reseat_pairing(params[0], rev, rev, cfg) is params[0]
+    there = reseat_pairing(params[0], ident, rev, cfg)
+    back = reseat_pairing(there, rev, ident, cfg)
+    for x, y in zip(jax.tree.leaves(params[0]), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree.leaves(there)[0]),
+        np.asarray(jax.tree.leaves(apply_pairing(params[0], rev, cfg))[0]))
+
+
+def test_adopt_dispatches_plans():
+    """The unified ``adopt`` entry point routes a bare replication map
+    through ``adopt_replication`` without changing tokens."""
+    cfg, models, params = _moe_models(1)
+    mk = lambda: _requests(3, seed=3, plen=6, vocab=cfg.vocab)
+    ref = ContinuousEngine(models[0], params[0], 2, 32).serve(mk())
+    eng = ContinuousEngine(models[0], params[0], 2, 32)
+    for r in mk():
+        eng.submit(r)
+    reqs, step = list(eng.queue), 0
+    ident = [[e] for e in range(cfg.moe.n_experts)]
+    while eng.step():
+        step += 1
+        if step == 2:
+            eng.adopt(ident)
+    assert [r.out_tokens for r in reqs] == [r.out_tokens for r in ref]

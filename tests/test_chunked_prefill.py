@@ -10,7 +10,8 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import Model
-from repro.serving import ContinuousEngine, Request, make_bucketer
+from repro.serving import (ContinuousEngine, EngineConfig, Request,
+                           make_bucketer)
 
 
 def _model(arch, seed=0, cfg_tweak=None):
@@ -42,8 +43,9 @@ def test_chunked_prefill_token_identity(arch):
     cfg, model, params = _model(arch)
     ref = ContinuousEngine(model, params, 2, 48).serve(_requests())
     for chunk in (2, 4):
-        out = ContinuousEngine(model, params, 2, 48,
-                               prefill_chunk=chunk).serve(_requests())
+        out = ContinuousEngine(
+            model, params, 2, 48,
+            config=EngineConfig(prefill_chunk=chunk)).serve(_requests())
         assert [r.out_tokens for r in ref] == [r.out_tokens for r in out]
 
 
@@ -73,8 +75,10 @@ def test_step_token_budget_preserves_tokens():
     emitted tokens, and every request still completes."""
     cfg, model, params = _model("qwen3-32b")
     ref = ContinuousEngine(model, params, 2, 48).serve(_requests())
-    out = ContinuousEngine(model, params, 2, 48, prefill_chunk=4,
-                           step_token_budget=5).serve(_requests())
+    out = ContinuousEngine(
+        model, params, 2, 48,
+        config=EngineConfig(prefill_chunk=4,
+                            step_token_budget=5)).serve(_requests())
     assert [r.out_tokens for r in ref] == [r.out_tokens for r in out]
     for r in out:
         assert len(r.out_tokens) == r.max_new_tokens
@@ -101,8 +105,10 @@ def test_engine_bucket_policy_token_counts(policy):
     (pad length changes WHICH tokens greedy decoding picks — left-pad is
     part of the model input — so we check counts/ranges, not identity)."""
     cfg, model, params = _model("qwen3-32b")
-    out = ContinuousEngine(model, params, 2, 48, bucket_policy=policy,
-                           prefill_chunk=2).serve(_requests())
+    out = ContinuousEngine(
+        model, params, 2, 48,
+        config=EngineConfig(bucket_policy=policy,
+                            prefill_chunk=2)).serve(_requests())
     for r in out:
         assert len(r.out_tokens) == r.max_new_tokens
         assert all(0 <= t < cfg.vocab for t in r.out_tokens)
@@ -115,9 +121,11 @@ def test_exact_bucket_matches_exact_prefill_len():
     mk = lambda: [Request(prompt=[i + 1, i + 2, i + 3, i + 4],
                           max_new_tokens=4, arrival=float(i))
                   for i in range(3)]
-    a = ContinuousEngine(model, params, 2, 32, prefill_len=4).serve(mk())
+    a = ContinuousEngine(model, params, 2, 32,
+                         config=EngineConfig(prefill_len=4)).serve(mk())
     b = ContinuousEngine(model, params, 2, 32,
-                         bucket_policy="exact").serve(mk())
+                         config=EngineConfig(bucket_policy="exact")).serve(
+                             mk())
     assert [r.out_tokens for r in a] == [r.out_tokens for r in b]
 
 
@@ -165,12 +173,14 @@ def test_window_fit_prompt_chunks_despite_pow2_pad():
         cfg_tweak=lambda c: dataclasses.replace(c, sliding_window=12))
     mk = lambda: [Request(prompt=list(range(1, 11)), max_new_tokens=4)]
     out = ContinuousEngine(model, params, 1, 64,
-                           prefill_chunk=4).serve(mk())
+                           config=EngineConfig(prefill_chunk=4)).serve(mk())
     # Reference: one-shot admission padded to the SAME (clamped) length.
-    ref = ContinuousEngine(model, params, 1, 64, prefill_len=12).serve(mk())
+    ref = ContinuousEngine(model, params, 1, 64,
+                           config=EngineConfig(prefill_len=12)).serve(mk())
     assert [r.out_tokens for r in ref] == [r.out_tokens for r in out]
     # A prompt that genuinely wraps the 12-ring is still refused loudly.
-    eng = ContinuousEngine(model, params, 1, 64, prefill_chunk=4)
+    eng = ContinuousEngine(model, params, 1, 64,
+                           config=EngineConfig(prefill_chunk=4))
     with pytest.raises(ValueError, match="chunk"):
         eng.submit(Request(prompt=list(range(1, 15)), max_new_tokens=2))
 
@@ -180,15 +190,18 @@ def test_chunked_rejects_unsupported_shapes():
     sliding-window ring that wraps mid-prompt loses slot identity — both
     must be refused loudly at submit time, not silently miscomputed."""
     cfg, model, params = _model("deepseek-v3-671b")
-    eng = ContinuousEngine(model, params, 1, 32, prefill_chunk=2)
+    eng = ContinuousEngine(model, params, 1, 32,
+                           config=EngineConfig(prefill_chunk=2))
     with pytest.raises(ValueError, match="chunk"):
         eng.submit(Request(prompt=[1, 2, 3, 4], max_new_tokens=2))
 
     cfg_g, model_g, params_g = _model("gemma3-27b")   # window reduced to 16
-    eng_g = ContinuousEngine(model_g, params_g, 1, 64, prefill_chunk=4)
+    eng_g = ContinuousEngine(model_g, params_g, 1, 64,
+                             config=EngineConfig(prefill_chunk=4))
     with pytest.raises(ValueError, match="chunk"):
         eng_g.submit(Request(prompt=list(range(1, 21)), max_new_tokens=2))
     # ... but prompts inside the window are fine.
-    out = ContinuousEngine(model_g, params_g, 1, 64, prefill_chunk=4).serve(
+    out = ContinuousEngine(model_g, params_g, 1, 64,
+                           config=EngineConfig(prefill_chunk=4)).serve(
         [Request(prompt=[1, 2, 3, 4, 5, 6, 7, 8], max_new_tokens=3)])
     assert len(out[0].out_tokens) == 3

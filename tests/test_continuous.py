@@ -9,8 +9,8 @@ import pytest
 from repro.configs import get_config
 from repro.models import Model
 from repro.serving import (ColocatedContinuousEngine, ColocatedEngine,
-                           ContinuousEngine, Request, ServingEngine,
-                           apply_pairing, inverse_pair)
+                           ContinuousEngine, EngineConfig, Request,
+                           ServingEngine, apply_pairing, inverse_pair)
 
 
 def _model(arch):
@@ -41,7 +41,7 @@ def test_continuous_matches_static_at_t0(arch):
     static = ServingEngine(model, params, batch_slots=4, cache_cap=32)
     ref = static.serve(_requests())
     cont = ContinuousEngine(model, params, batch_slots=4, cache_cap=32,
-                            prefill_len=4)
+                            config=EngineConfig(prefill_len=4))
     out = cont.serve(_requests())
     for r, o in zip(ref, out):
         assert r.out_tokens == o.out_tokens
@@ -53,7 +53,7 @@ def test_staggered_arrivals_complete_with_correct_counts():
                     max_new_tokens=3 + i, arrival=float(2 * i))
             for i in range(5)]
     eng = ContinuousEngine(model, params, batch_slots=2, cache_cap=32,
-                           prefill_len=4)
+                           config=EngineConfig(prefill_len=4))
     out = eng.serve(reqs)
     for r in out:
         assert len(r.out_tokens) == r.max_new_tokens
@@ -71,11 +71,11 @@ def test_slot_reuse_does_not_leak_cache_state():
             # arrives after both slots have been used and one freed
             Request(prompt=[2, 7, 1, 8], max_new_tokens=5, arrival=6.0)]
     eng = ContinuousEngine(model, params, batch_slots=2, cache_cap=32,
-                           prefill_len=4)
+                           config=EngineConfig(prefill_len=4))
     out = eng.serve(reqs)
     for r in out:
         solo = ContinuousEngine(model, params, batch_slots=1, cache_cap=32,
-                                prefill_len=4)
+                                config=EngineConfig(prefill_len=4))
         ref = solo.serve([Request(prompt=list(r.prompt),
                                   max_new_tokens=r.max_new_tokens)])[0]
         assert r.out_tokens == ref.out_tokens
@@ -88,10 +88,10 @@ def test_continuous_ssm_state_isolation():
     reqs = [Request(prompt=[9, 9, 9, 9], max_new_tokens=3, arrival=0.0),
             Request(prompt=[1, 2, 3, 4], max_new_tokens=4, arrival=4.0)]
     eng = ContinuousEngine(model, params, batch_slots=1, cache_cap=32,
-                           prefill_len=4)
+                           config=EngineConfig(prefill_len=4))
     out = eng.serve(reqs)
     solo = ContinuousEngine(model, params, batch_slots=1, cache_cap=32,
-                            prefill_len=4)
+                            config=EngineConfig(prefill_len=4))
     ref = solo.serve([Request(prompt=[1, 2, 3, 4], max_new_tokens=4)])[0]
     assert out[1].out_tokens == ref.out_tokens
 
@@ -106,10 +106,12 @@ def test_colocated_continuous_matches_solo_pools():
                     Request([4, 3, 2, 1], 4, arrival=2.0)]
     mk_b = lambda: [Request([5, 6, 7, 8], 6, arrival=1.0)]
     eng = ColocatedContinuousEngine(ma, mb, pa, pb, batch_slots=2,
-                                    cache_cap=16, prefill_len=4)
+                                    cache_cap=16,
+                                    config=EngineConfig(prefill_len=4))
     ra, rb = eng.serve(mk_a(), mk_b())
-    solo_a = ContinuousEngine(ma, pa, 2, 16, prefill_len=4).serve(mk_a())
-    solo_b = ContinuousEngine(mb, pb, 2, 16, prefill_len=4).serve(mk_b())
+    cfg4 = EngineConfig(prefill_len=4)
+    solo_a = ContinuousEngine(ma, pa, 2, 16, config=cfg4).serve(mk_a())
+    solo_b = ContinuousEngine(mb, pb, 2, 16, config=cfg4).serve(mk_b())
     assert [r.out_tokens for r in ra] == [r.out_tokens for r in solo_a]
     assert [r.out_tokens for r in rb] == [r.out_tokens for r in solo_b]
 

@@ -101,7 +101,8 @@ def test_distributed_engine_adopt_swaps_rounds_placement_only():
     from repro.core import synthetic_trace
     from repro.launch.mesh import make_ep_mesh
     from repro.models import Model
-    from repro.serving import DistributedEngine, Request, TrafficMonitor
+    from repro.serving import (DistributedEngine, EngineConfig, Request,
+                               TrafficMonitor)
 
     cfg = get_config("phi3.5-moe-42b-a6.6b").reduced()
     cfg = dataclasses.replace(
@@ -118,7 +119,8 @@ def test_distributed_engine_adopt_swaps_rounds_placement_only():
     def serve(adopt_at, monitor=None):
         eng = DistributedEngine(model, params, batch_slots=2, cache_cap=32,
                                 mesh=mesh, rounds=None, plan=hist,
-                                overlap=True, prefill_len=8, monitor=monitor)
+                                overlap=True, monitor=monitor,
+                                config=EngineConfig(prefill_len=8))
         r0 = eng.rounds
         for pr in prompts:
             eng.submit(Request(prompt=list(pr), max_new_tokens=6))
@@ -155,7 +157,7 @@ def test_distributed_engine_adopts_replicated_plan_placement_only():
         trace_from_counts
     from repro.launch.mesh import make_ep_mesh
     from repro.models import Model
-    from repro.serving import DistributedEngine, Request
+    from repro.serving import DistributedEngine, EngineConfig, Request
 
     cfg = get_config("phi3.5-moe-42b-a6.6b").reduced()
     cfg = dataclasses.replace(
@@ -177,7 +179,8 @@ def test_distributed_engine_adopts_replicated_plan_placement_only():
     def serve(adopt_at):
         eng = DistributedEngine(model, params, batch_slots=2, cache_cap=32,
                                 mesh=mesh, rounds=None, plan=skew,
-                                overlap=True, prefill_len=8)
+                                overlap=True,
+                                config=EngineConfig(prefill_len=8))
         for pr in prompts:
             eng.submit(Request(prompt=list(pr), max_new_tokens=6))
         reqs, steps = list(eng.queue), 0
@@ -220,8 +223,8 @@ def test_distributed_colocated_replan_refreshes_rounds_placement_only():
     from repro.core import AuroraPlanner, homogeneous_cluster, synthetic_trace
     from repro.launch.mesh import make_ep_mesh
     from repro.models import Model
-    from repro.serving import (DistributedColocatedEngine, OnlineReplanner,
-                               Request, apply_pairing)
+    from repro.serving import (DistributedColocatedEngine, EngineConfig,
+                               OnlineReplanner, Request, apply_pairing)
 
     cfg = get_config("phi3.5-moe-42b-a6.6b").reduced()
     cfg = dataclasses.replace(
@@ -248,7 +251,8 @@ def test_distributed_colocated_replan_refreshes_rounds_placement_only():
         eng = DistributedColocatedEngine(
             model_a, model_b, params_a, pb, batch_slots=2, cache_cap=16,
             mesh=mesh, plan=plan0, overlap=True, refresh_rounds=refresh,
-            prefill_len=8, replan=rp, monitor_halflife=8.0)
+            config=EngineConfig(prefill_len=8), replan=rp,
+            monitor_halflife=8.0)
         r0 = eng.rounds
         reqs_a = [Request(prompt=list(r.prompt), max_new_tokens=4,
                           arrival=r.arrival) for r in streams[0]]

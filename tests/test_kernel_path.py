@@ -19,15 +19,15 @@ from repro.models import KernelConfig, Model, NO_PARALLEL, ParallelContext
 from repro.models.moe import (capacity, dispatch_indices, init_moe,
                               moe_apply, routed_counts, sort_dispatch)
 from repro.serving import (ColocatedContinuousEngine, ContinuousEngine,
-                           MultiTenantContinuousEngine, OnlineReplanner,
-                           Request, TrafficMonitor)
+                           EngineConfig, MultiTenantContinuousEngine,
+                           OnlineReplanner, Request, TrafficMonitor)
 
 INTERPRET_TIER = os.environ.get("REPRO_KERNEL_TIER") == "interpret"
 
 
 def _engine_kernels():
-    """``kernels=`` argument for engine tests: plain fallback normally,
-    Pallas interpret mode when the interpret tier is selected."""
+    """``EngineConfig.kernels`` value for engine tests: plain fallback
+    normally, Pallas interpret mode when the interpret tier is selected."""
     return KernelConfig(interpret=True) if INTERPRET_TIER else True
 
 
@@ -174,10 +174,12 @@ def test_continuous_engine_kernel_tokens_and_logits():
     to tolerance (checked on a prefill + decode pair with matched caches)."""
     cfg, model, params = _model()
     reqs = lambda: _requests(6, seed=1, max_new=6, vocab=cfg.vocab)
-    dense = ContinuousEngine(model, params, 3, 48, prefill_len=8)
+    dense = ContinuousEngine(model, params, 3, 48,
+                             config=EngineConfig(prefill_len=8))
     out_d = dense.serve(reqs())
-    kern = ContinuousEngine(model, params, 3, 48, prefill_len=8,
-                            kernels=_engine_kernels())
+    kern = ContinuousEngine(
+        model, params, 3, 48,
+        config=EngineConfig(prefill_len=8, kernels=_engine_kernels()))
     out_k = kern.serve(reqs())
     assert [r.out_tokens for r in out_d] == [r.out_tokens for r in out_k]
 
@@ -204,11 +206,14 @@ def test_kernel_engine_monitor_counts_match_dense():
     cfg, model, params = _model()
     reqs = lambda: _requests(4, seed=2, max_new=4, vocab=cfg.vocab)
     mon_d = TrafficMonitor(cfg.moe.n_experts, model.n_moe_layers)
-    ContinuousEngine(model, params, 2, 48, prefill_len=8,
+    ContinuousEngine(model, params, 2, 48,
+                     config=EngineConfig(prefill_len=8),
                      monitor=mon_d).serve(reqs())
     mon_k = TrafficMonitor(cfg.moe.n_experts, model.n_moe_layers)
-    ContinuousEngine(model, params, 2, 48, prefill_len=8, monitor=mon_k,
-                     kernels=_engine_kernels()).serve(reqs())
+    ContinuousEngine(
+        model, params, 2, 48,
+        config=EngineConfig(prefill_len=8, kernels=_engine_kernels()),
+        monitor=mon_k).serve(reqs())
     assert mon_k.observations == mon_d.observations
     np.testing.assert_allclose(mon_k.rates, mon_d.rates, atol=1e-9)
 
@@ -226,12 +231,13 @@ def test_replan_drift_with_kernels():
 
     mk_a = lambda: _requests(5, seed=3)
     mk_b = lambda: _requests(4, seed=4)
-    ref = ColocatedContinuousEngine(ma, mb, pa, pb, 2, 48, kernels=kern)
+    ref = ColocatedContinuousEngine(ma, mb, pa, pb, 2, 48,
+                                    config=EngineConfig(kernels=kern))
     ra0, rb0 = ref.serve(mk_a(), mk_b())
 
     rp = OnlineReplanner(planner, interval=3, threshold=-1.0, warmup=1)
     eng = ColocatedContinuousEngine(ma, mb, pa, pb, 2, 48, replan=rp,
-                                    kernels=kern)
+                                    config=EngineConfig(kernels=kern))
     ra1, rb1 = eng.serve(mk_a(), mk_b())
     assert [r.out_tokens for r in ra0] == [r.out_tokens for r in ra1]
     assert [r.out_tokens for r in rb0] == [r.out_tokens for r in rb1]
@@ -245,11 +251,11 @@ def test_multi_tenant_kernel_tokens_identical():
     _, m1, p1 = _model(seed=1)
     streams = lambda: [_requests(3, seed=5), _requests(3, seed=6)]
     dense = MultiTenantContinuousEngine([m0, m1], [p0, p1], 2, 48,
-                                        prefill_len=8)
+                                        config=EngineConfig(prefill_len=8))
     out_d = dense.serve(streams())
-    kern = MultiTenantContinuousEngine([m0, m1], [p0, p1], 2, 48,
-                                       prefill_len=8,
-                                       kernels=_engine_kernels())
+    kern = MultiTenantContinuousEngine(
+        [m0, m1], [p0, p1], 2, 48,
+        config=EngineConfig(prefill_len=8, kernels=_engine_kernels()))
     out_k = kern.serve(streams())
     for sd, sk in zip(out_d, out_k):
         assert [r.out_tokens for r in sd] == [r.out_tokens for r in sk]

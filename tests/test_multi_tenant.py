@@ -22,8 +22,8 @@ from repro.core import (AuroraPlanner, aggregate_traffic,
 from repro.core.cluster import Cluster, V50G, V100G
 from repro.models import Model
 from repro.serving import (ColocatedContinuousEngine, ContinuousEngine,
-                           MultiTenantContinuousEngine, OnlineReplanner,
-                           Request, apply_pairing)
+                           EngineConfig, MultiTenantContinuousEngine,
+                           OnlineReplanner, Request, apply_pairing)
 
 
 def _model(arch, seed=0):
@@ -187,10 +187,12 @@ def test_multi_engine_n2_token_identical_to_colocated():
     mk = lambda s, n: _requests(n, seed=s)
 
     co = ColocatedContinuousEngine(ma, mb, pa, pb_paired, 2, 32,
-                                   prefill_len=6, pair=pair0)
+                                   config=EngineConfig(prefill_len=6),
+                                   pair=pair0)
     ca, cb = co.serve(mk(1, 3), mk(2, 2))
     mu = MultiTenantContinuousEngine(
-        [ma, mb], [pa, pb_paired], 2, 32, prefill_len=6,
+        [ma, mb], [pa, pb_paired], 2, 32,
+        config=EngineConfig(prefill_len=6),
         groups=[(g, pair0[g]) for g in range(4)])
     sa, sb = mu.serve([mk(1, 3), mk(2, 2)])
     assert [r.out_tokens for r in sa] == [r.out_tokens for r in ca]
@@ -203,11 +205,13 @@ def test_multi_engine_n3_matches_solo_pools():
         _, m, p = _model("phi3.5-moe-42b-a6.6b", seed=s)
         ms.append(m)
         ps.append(p)
-    eng = MultiTenantContinuousEngine(ms, ps, 2, 32, prefill_len=6)
+    eng = MultiTenantContinuousEngine(ms, ps, 2, 32,
+                                      config=EngineConfig(prefill_len=6))
     streams = eng.serve([_requests(3, 1), _requests(2, 2), _requests(3, 3)])
     for t, reqs_seed in enumerate([(3, 1), (2, 2), (3, 3)]):
-        solo = ContinuousEngine(ms[t], ps[t], 2, 32, prefill_len=6).serve(
-            _requests(*reqs_seed))
+        solo = ContinuousEngine(
+            ms[t], ps[t], 2, 32, config=EngineConfig(prefill_len=6)).serve(
+                _requests(*reqs_seed))
         assert ([r.out_tokens for r in streams[t]]
                 == [r.out_tokens for r in solo]), f"tenant {t}"
 
@@ -225,10 +229,12 @@ def test_multi_engine_regroup_is_placement_only_n3():
     planner = AuroraPlanner(homogeneous_cluster(cfg.moe.n_experts))
     mk = lambda: [_requests(3, 1), _requests(2, 2), _requests(3, 3)]
 
-    ref = MultiTenantContinuousEngine(ms, ps, 2, 48, prefill_chunk=2)
+    ref = MultiTenantContinuousEngine(ms, ps, 2, 48,
+                                      config=EngineConfig(prefill_chunk=2))
     out0 = ref.serve(mk())
     rp = OnlineReplanner(planner, interval=3, threshold=-1.0, warmup=1)
-    eng = MultiTenantContinuousEngine(ms, ps, 2, 48, prefill_chunk=2,
+    eng = MultiTenantContinuousEngine(ms, ps, 2, 48,
+                                      config=EngineConfig(prefill_chunk=2),
                                       replan=rp)
     out1 = eng.serve(mk())
     for t in range(3):

@@ -10,7 +10,8 @@ from repro.core import (AuroraPlanner, diff_plans, homogeneous_cluster,
                         synthetic_trace, trace_from_counts)
 from repro.models import Model
 from repro.serving import (ColocatedContinuousEngine, ContinuousEngine,
-                           OnlineReplanner, Request, TrafficMonitor)
+                           EngineConfig, OnlineReplanner, Request,
+                           TrafficMonitor)
 
 
 def _model(arch, seed=0):
@@ -78,7 +79,8 @@ def test_monitor_harvests_engine_routing():
     top_k choices per active row per MoE layer per observation."""
     cfg, model, params = _model("phi3.5-moe-42b-a6.6b")
     mon = TrafficMonitor(cfg.moe.n_experts, model.n_moe_layers)
-    eng = ContinuousEngine(model, params, 2, 48, prefill_chunk=2,
+    eng = ContinuousEngine(model, params, 2, 48,
+                           config=EngineConfig(prefill_chunk=2),
                            monitor=mon)
     eng.serve(_requests())
     assert mon.observations > 0
@@ -126,13 +128,15 @@ def test_replan_never_changes_tokens():
 
     mk_a = lambda: _requests(5, seed=3)
     mk_b = lambda: _requests(4, seed=4)
-    ref = ColocatedContinuousEngine(ma, mb, pa, pb, 2, 48, prefill_chunk=2)
+    ref = ColocatedContinuousEngine(ma, mb, pa, pb, 2, 48,
+                                    config=EngineConfig(prefill_chunk=2))
     ra0, rb0 = ref.serve(mk_a(), mk_b())
 
     # threshold < 0 applies EVERY candidate whose pairing differs — the
     # most churn the loop can produce, the strongest invariant check.
     rp = OnlineReplanner(planner, interval=3, threshold=-1.0, warmup=1)
-    eng = ColocatedContinuousEngine(ma, mb, pa, pb, 2, 48, prefill_chunk=2,
+    eng = ColocatedContinuousEngine(ma, mb, pa, pb, 2, 48,
+                                    config=EngineConfig(prefill_chunk=2),
                                     replan=rp)
     ra1, rb1 = eng.serve(mk_a(), mk_b())
     assert [r.out_tokens for r in ra0] == [r.out_tokens for r in ra1]

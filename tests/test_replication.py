@@ -15,8 +15,8 @@ from repro.core import (AuroraPlanner, homogeneous_cluster,
 from repro.models import KernelConfig, Model, NO_PARALLEL, ParallelContext
 from repro.models.moe import (ReplicationSpec, dereplicate_moe_params,
                               init_moe, moe_apply, replicate_moe_params)
-from repro.serving import (ContinuousEngine, OnlineReplanner, Request,
-                           TrafficMonitor)
+from repro.serving import (ContinuousEngine, EngineConfig, OnlineReplanner,
+                           Request, TrafficMonitor)
 
 
 # -- traffic math -----------------------------------------------------------
@@ -181,7 +181,8 @@ def test_engine_adopt_replication_token_identity(kernels):
     params = model.init(jax.random.PRNGKey(0))
 
     def serve(adopt_at=None):
-        eng = ContinuousEngine(model, params, 2, 32, kernels=kernels)
+        eng = ContinuousEngine(model, params, 2, 32,
+                               config=EngineConfig(kernels=kernels))
         for r in _requests(cfg.vocab):
             eng.submit(r)
         reqs, step = list(eng.queue), 0
