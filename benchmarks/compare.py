@@ -5,12 +5,17 @@
 
 Reads two ``BENCH_serving.json`` files (``serving_bench.py --json`` output),
 extracts a fixed set of named metrics, prints a trend table, and — for the
-metrics marked *gated* (absolute throughputs) — exits non-zero when any one
-regressed by more than ``--threshold`` (default 20%). Ratio metrics
-(speedups, stall cuts, predicted-time gains) are reported but not gated:
-they compare two legs measured in the same process and are already
-machine-normalized, while run-to-run throughput is the trajectory the
-ROADMAP wants guarded.
+metrics marked *gated* (absolute throughputs, plus the sweep section's
+step-clock SLO attainments) — exits non-zero when any one regressed by more
+than ``--threshold`` (default 20%). Ratio metrics (speedups, stall cuts,
+predicted-time gains) are reported but not gated: they compare two legs
+measured in the same process and are already machine-normalized, while
+run-to-run throughput is the trajectory the ROADMAP wants guarded.
+
+A top-level section in the NEW record that this table does not know also
+fails the gate — an unknown section is a set of silently-ungated metrics,
+so adding a bench section must come with its METRICS entries (or an
+explicit KNOWN_SECTIONS listing).
 
 The markdown table is appended to ``--summary`` when given, else to
 ``$GITHUB_STEP_SUMMARY`` when set (the Actions job summary).
@@ -100,34 +105,56 @@ METRICS = [
     (f"multi N={n} aurora-vs-random gain",
      lambda r, n=n: _get(r, f"multi.tenants.{n}.gain"), True, False)
     for n in (2, 3, 4)
+] + [
+    # Four-scenario SLO sweep: attainment is measured on the deterministic
+    # step clock, so it only moves when the SCHEDULE changes — gate it.
+    # The sweep's wall-clock throughput stays informational (eight engine
+    # legs in one process are re-jit dominated on CI runners).
+    metric
+    for cell in ("exclusive+homogeneous", "exclusive+heterogeneous",
+                 "colocated+homogeneous", "colocated+heterogeneous")
+    for metric in [
+        (f"sweep {cell} ttft attainment",
+         lambda r, c=cell: _get(r, f"sweep.scenarios.{c}.ttft_attainment"),
+         True, True),
+        (f"sweep {cell} tpot attainment",
+         lambda r, c=cell: _get(r, f"sweep.scenarios.{c}.tpot_attainment"),
+         True, True),
+        (f"sweep {cell} tok/s",
+         lambda r, c=cell: _get(r, f"sweep.scenarios.{c}.tok_per_s"),
+         True, False),
+    ]
 ]
 
 
 # Sections the metric table knows how to read. Anything else appearing at
-# the top level of a record is reported as new/dropped instead of being
-# silently ignored — adding a bench section must never break the trend gate.
+# the top level of a record FAILS the gate: a section this compare.py does
+# not know is a section whose metrics are silently ungated, which is exactly
+# the drift the gate exists to prevent — adding a bench section must come
+# with its METRICS entries (or an explicit KNOWN_SECTIONS listing).
 KNOWN_SECTIONS = {"admission", "continuous", "chunked", "drift", "kernels",
-                  "multi", "overlap", "skew"}
+                  "multi", "overlap", "skew", "sweep"}
 
 
 def _section_rows(baseline: dict, new: dict):
-    """Presence diff over top-level sections the metric table does NOT read:
-    a section that exists in only one run (or that this compare.py predates)
-    is an informational row, never a KeyError and never gated. Known
-    sections are covered metric-by-metric above, where one-sided values
-    already render as "new"/"dropped"."""
-    rows = []
+    """Presence diff over top-level sections the metric table does NOT read.
+    A section present in only the baseline is informational ("dropped" —
+    the new run simply did not request it); a section the NEW run emits that
+    this table cannot read is a hard failure row (its metrics would
+    otherwise bypass the gate unreviewed). Known sections are covered
+    metric-by-metric above, where one-sided values already render as
+    "new"/"dropped"."""
+    rows, unknown = [], []
     for key in sorted(set(baseline) | set(new)):
         if key in KNOWN_SECTIONS:
             continue
-        if key not in baseline:
-            rows.append((f"section '{key}'", None, None, None, "new"))
-        elif key not in new:
+        if key not in new:
             rows.append((f"section '{key}'", None, None, None, "dropped"))
         else:
             rows.append((f"section '{key}'", None, None, None,
-                         "unrecognized (not gated)"))
-    return rows
+                         "UNRECOGNIZED"))
+            unknown.append(key)
+    return rows, unknown
 
 
 def compare(baseline: dict, new: dict, threshold: float):
@@ -157,7 +184,11 @@ def compare(baseline: dict, new: dict, threshold: float):
         elif change < -threshold:
             status = "down (not gated)"
         rows.append((name, old_v, new_v, delta, status))
-    rows.extend(_section_rows(baseline, new))
+    section_rows, unknown = _section_rows(baseline, new)
+    rows.extend(section_rows)
+    for key in unknown:
+        regressions.append((f"unrecognized section '{key}'",
+                            None, None, None))
     return rows, regressions
 
 
@@ -187,11 +218,11 @@ def render_markdown(rows, threshold: float, regressions) -> str:
         o = "—" if old_v is None else f"{old_v:.3f}"
         n = "—" if new_v is None else f"{new_v:.3f}"
         d = "—" if delta is None else f"{delta:+.1%}"
-        badge = "❌" if status == "REGRESSED" else "✅" if status == "ok" \
-            else "ℹ️"
+        badge = "❌" if status in ("REGRESSED", "UNRECOGNIZED") \
+            else "✅" if status == "ok" else "ℹ️"
         lines.append(f"| {name} | {o} | {n} | {d} | {badge} {status} |")
     lines.append("")
-    lines.append("**FAIL**: throughput regression past the gate."
+    lines.append("**FAIL**: a gated check failed."
                  if regressions else "**PASS**: no gated regression.")
     return "\n".join(lines) + "\n"
 
@@ -222,10 +253,14 @@ def main() -> int:
             f.write(render_markdown(rows, args.threshold, regressions))
 
     if regressions:
-        print(f"\nFAIL: {len(regressions)} throughput metric(s) regressed "
-              f"past {args.threshold:.0%}:")
+        print(f"\nFAIL: {len(regressions)} gated check(s) failed "
+              f"(threshold {args.threshold:.0%}):")
         for name, old_v, new_v, delta in regressions:
-            print(f"  {name}: {old_v:.3f} -> {new_v:.3f} ({delta:+.1%})")
+            if delta is None:
+                print(f"  {name}: add METRICS entries (or list it in "
+                      "KNOWN_SECTIONS) before gating can pass")
+            else:
+                print(f"  {name}: {old_v:.3f} -> {new_v:.3f} ({delta:+.1%})")
         return 1
     print(f"\nPASS: no gated metric regressed past {args.threshold:.0%}")
     return 0

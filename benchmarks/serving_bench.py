@@ -7,6 +7,7 @@ multi-tenant colocation.
   PYTHONPATH=src python -m benchmarks.serving_bench --drift     # + re-plan
   PYTHONPATH=src python -m benchmarks.serving_bench --skew      # replication
   PYTHONPATH=src python -m benchmarks.serving_bench --multi     # N tenants
+  PYTHONPATH=src python -m benchmarks.serving_bench --sweep     # 4 scenarios
   PYTHONPATH=src python -m benchmarks.serving_bench --all --json BENCH_serving.json
 
 Each section is a pass/fail experiment:
@@ -57,6 +58,18 @@ Each section is a pass/fail experiment:
   (tenant params physically permuted) and under identity placement: token
   streams must be identical (grouping is placement-only), and the fused
   N-tenant engine's measured throughput is recorded for the trend gate.
+* **sweep** — the four-scenario SLO matrix (not part of ``--all``; it has a
+  dedicated CI step). One Zipf-drifting Poisson stream is served under every
+  cluster scenario — exclusive/colocated x homogeneous/heterogeneous — each
+  closing its own live re-planning loop (replicate / reassign / replan /
+  regroup) under deadline-aware ``EdfAdmission`` with ``TenantSpec`` SLO
+  targets. Per scenario: >= 1 live adoption, token streams byte-identical to
+  a static leg, and step-clock p95 TTFT/TPOT SLO attainment reported as
+  trend-gated metrics.
+
+Every section's JSON legs share one base schema (``_leg``): ``tokens``,
+``wall_s``, ``tok_per_s``, plus section-specific extras — ``compare.py``
+keys off these names and rejects sections it does not know.
 """
 
 from __future__ import annotations
@@ -88,6 +101,18 @@ def _clone(reqs):
 
     return [Request(prompt=list(r.prompt), max_new_tokens=r.max_new_tokens,
                     arrival=r.arrival) for r in reqs]
+
+
+def _leg(tokens, wall_s, **extra):
+    """One engine-leg record in the SHARED schema: every section's per-leg
+    dict carries ``tokens`` / ``wall_s`` / ``tok_per_s`` under these exact
+    snake_case names (compare.py indexes them by path — a stray alias like
+    ``tokens_per_sec`` or ``ttftP95`` would silently fall out of the trend
+    table). Section-specific extras ride along unchanged."""
+    rec = {"tokens": int(tokens), "wall_s": float(wall_s),
+           "tok_per_s": float(tokens / wall_s) if wall_s > 0 else 0.0}
+    rec.update(extra)
+    return rec
 
 
 def _timed_serve(eng, reqs):
@@ -135,6 +160,58 @@ def _ttft_serve(eng, reqs):
             t += 1.0
     wall = time.perf_counter() - t0
     return wall, [first_at[id(r)] - submit_at[id(r)] for r in pend]
+
+
+def _slo_serve(step_fn, pools, on_step=None):
+    """Arrival/STEP-clock SLO driver: ``serve_stream``'s loop with the
+    engine-step counter as the latency clock. Per request it records TTFT
+    (steps from arrival to first emitted token) and mean TPOT (steps per
+    subsequent token) — deterministic functions of the schedule alone, so
+    the sweep's CI attainment gate sees real scheduling changes, never
+    machine noise. ``on_step(step_index)`` runs after every engine step
+    (the sweep's external adoption loops live there).
+
+    Returns ``(ttfts, tpots, steps, wall_s)``; latencies are in stream
+    order across pools.
+    """
+    streams = [[eng, sorted(reqs, key=lambda r: r.arrival), 0]
+               for eng, reqs in pools]
+    t, steps = 0.0, 0
+    first, last = {}, {}
+    t0 = time.perf_counter()
+    while any(i < len(p) or e.queue or e.num_active or e.num_pending
+              for e, p, i in streams):
+        for s in streams:
+            eng, pend, i = s
+            while i < len(pend) and pend[i].arrival <= t:
+                eng.submit(pend[i])
+                i += 1
+            s[2] = i
+        busy = step_fn()
+        steps += 1
+        if on_step is not None:
+            on_step(steps)
+        for _, pend, i in streams:
+            for r in pend[:i]:
+                k = id(r)
+                if r.out_tokens and k not in first:
+                    first[k] = t
+                if len(r.out_tokens) >= r.max_new_tokens and k not in last:
+                    last[k] = t
+        due = [p[i].arrival for _, p, i in streams if i < len(p)]
+        if not busy and due:
+            t = max(t + 1.0, min(due))               # jump idle gaps
+        else:
+            t += 1.0
+    wall = time.perf_counter() - t0
+    ttfts, tpots = [], []
+    for _, pend, _ in streams:
+        for r in pend:
+            ttfts.append(first[id(r)] + 1.0 - r.arrival)
+            if len(r.out_tokens) > 1:
+                tpots.append((last[id(r)] - first[id(r)])
+                             / (len(r.out_tokens) - 1))
+    return ttfts, tpots, steps, wall
 
 
 # ---------------------------------------------------------------------------
@@ -204,8 +281,8 @@ def bench(arch="qwen3-32b", n_requests=16, batch_slots=4, prompt_len=8,
           f"{repeats} paired reps), {eff:.2f}x per-step efficiency")
     return {
         "arch": arch, "n_requests": n_requests, "batch_slots": batch_slots,
-        "static": {"tokens": s_tok, "steps": s_steps, "wall_s": s_wall},
-        "continuous": {"tokens": c_tok, "steps": c_steps, "wall_s": c_wall},
+        "static": _leg(s_tok, s_wall, steps=s_steps),
+        "continuous": _leg(c_tok, c_wall, steps=c_steps),
         "wall_speedup": wall_ratio, "step_efficiency": eff,
         "ok": bool(wall_ratio >= 1.0 and c_steps <= s_steps),
     }
@@ -356,12 +433,11 @@ def bench_admission(arch="qwen3-32b", n_requests=12, batch_slots=4,
 
     results = {}
     for name, reps in runs.items():
-        results[name] = {
-            "tokens": reps[-1][2],
-            "wall_s": float(np.median([w for w, _, _ in reps])),
-            "tok_per_s": float(np.median([t / w for w, _, t in reps])),
-            "ttft_p95_s": float(np.median([p for _, p, _ in reps])),
-        }
+        results[name] = _leg(
+            reps[-1][2], float(np.median([w for w, _, _ in reps])),
+            ttft_p95_s=float(np.median([p for _, p, _ in reps])))
+        results[name]["tok_per_s"] = float(
+            np.median([t / w for w, _, t in reps]))
     cut = float(np.median([s[1] / p[1] for s, p in
                            zip(runs["serial"], runs["pooled"])]))
 
@@ -463,16 +539,15 @@ def bench_kernels(arch="phi3.5-moe-42b-a6.6b", n_experts=32, n_requests=10,
 
     results = {}
     for name, rs in runs.items():
-        results[name] = {
-            "tokens": sum(len(toks) for toks in outs[name]),
-            "steps": len(rs[-1][1]),
-            "wall_s": float(np.median([t.sum() for _, t in rs])),
-            "tok_per_s": float(np.median([r for r, _ in rs])),
-            "p95_step_ms": float(np.median(
+        results[name] = _leg(
+            sum(len(toks) for toks in outs[name]),
+            float(np.median([t.sum() for _, t in rs])),
+            steps=len(rs[-1][1]),
+            p95_step_ms=float(np.median(
                 [np.percentile(t, 95) for _, t in rs]) * 1e3),
-            "mean_step_ms": float(np.median(
-                [t.mean() for _, t in rs]) * 1e3),
-        }
+            mean_step_ms=float(np.median(
+                [t.mean() for _, t in rs]) * 1e3))
+        results[name]["tok_per_s"] = float(np.median([r for r, _ in rs]))
     speedup = float(np.median(
         [runs["kernel"][i][0] / runs["dense"][i][0] for i in range(repeats)]))
 
@@ -855,11 +930,10 @@ def bench_skew(arch="phi3.5-moe-42b-a6.6b", n_phase=10, batch_slots=2,
 
     results = {}
     for name, rs in runs.items():
-        results[name] = {
-            "tokens": rs[-1][0],
-            "wall_s": float(np.median([w for _, w in rs])),
-            "tok_per_s": float(np.median([t / w for t, w in rs])),
-        }
+        results[name] = _leg(rs[-1][0],
+                             float(np.median([w for _, w in rs])))
+        results[name]["tok_per_s"] = float(
+            np.median([t / w for t, w in rs]))
     final = current
     print(f"== skew bench: {arch} (reduced, {n} experts), Zipf(a={zipf_a}) "
           f"prompts, hot band flips mid-stream, replicate every {interval} "
@@ -1001,6 +1075,232 @@ def bench_multi(arch="phi3.5-moe-42b-a6.6b", tenant_counts=(2, 3, 4),
 
 
 # ---------------------------------------------------------------------------
+# Section 5: four-scenario SLO sweep (exclusive/colocated x homo/hetero)
+# ---------------------------------------------------------------------------
+
+def bench_sweep(arch="phi3.5-moe-42b-a6.6b", n_phase=10, batch_slots=2,
+                prompt_len=8, max_new=6, rate=0.6, interval=5, cache_cap=32,
+                halflife=8.0, zipf_a=1.3, ttft_slo=8.0, tpot_slo=1.5,
+                seed=0):
+    """One Zipf-drifting Poisson stream through ALL FOUR cluster scenarios.
+
+    The paper's core claim spans the exclusive/colocated x homo/hetero
+    matrix; this section closes the bench side of it. The SAME primary
+    stream (Zipf-banded prompts, hot band flips mid-stream) is served under
+    each cell's engine + live re-planning action:
+
+      exclusive+homogeneous    ``maybe_replicate`` (assignment is
+                               irrelevant there — observation 1 — so hot
+                               experts replicate instead)
+      exclusive+heterogeneous  ``maybe_reassign`` (Thm 5.1 expert↔GPU
+                               re-assignment on live traffic)
+      colocated+homogeneous    ``maybe_replan`` (Thm 6.2 re-pairing)
+      colocated+heterogeneous  hetero-aware ``maybe_regroup`` (grouping +
+                               §7.2 group↔device re-matching, realized as
+                               one placement-only reseat)
+
+    Every engine runs deadline-aware admission: ``TenantSpec`` SLO targets
+    (p95 TTFT / TPOT in engine-step units) stamp per-request deadlines and
+    ``EdfAdmission`` schedules against them. Gates per scenario: >= 1 live
+    adoption event, token streams byte-identical to a never-adopting static
+    leg (placement-only invariant, asserted), and per-scenario p95
+    TTFT/TPOT SLO attainment reported for the CI trend gate — measured on
+    the deterministic step clock, so attainment only moves when the
+    schedule itself changes.
+    """
+    import dataclasses
+
+    import jax
+    from repro.configs import get_config
+    from repro.core import (AuroraPlanner, heterogeneous_cluster,
+                            homogeneous_cluster)
+    from repro.models import Model
+    from repro.serving import (ColocatedContinuousEngine, ContinuousEngine,
+                               EdfAdmission, EngineConfig,
+                               MultiTenantContinuousEngine, OnlineReplanner,
+                               Request, TenantSpec, TrafficMonitor)
+
+    # Same widening as the drift/skew sections: reduced()'s 4 experts leave
+    # placement spaces too small for any planner choice to matter; the
+    # heterogeneous tier list also needs the device count divisible by 4.
+    cfg = get_config(arch).reduced()
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, n_experts=8))
+    n = cfg.moe.n_experts
+    model_a, model_b = Model(cfg), Model(cfg)
+    params_a = model_a.init(jax.random.PRNGKey(seed))
+    params_b = model_b.init(jax.random.PRNGKey(seed + 1))
+
+    v = cfg.vocab
+    band = max(v // 8, 4)
+    lows = [1, v // 2]
+
+    def zipf_stream(rng):
+        reqs, t = [], 0.0
+        for i in range(2 * n_phase):
+            t += float(rng.exponential(1.0 / rate))
+            lo = lows[i >= n_phase]                  # hot band flips here
+            ranks = (rng.zipf(zipf_a, prompt_len) - 1) % band
+            reqs.append(Request(prompt=[int(lo + r) for r in ranks],
+                                max_new_tokens=max_new, arrival=t))
+        return reqs
+
+    primary = zipf_stream(np.random.default_rng(seed))
+    secondary = zipf_stream(np.random.default_rng(seed + 1))
+
+    spec_a = TenantSpec(name="primary", ttft_p95=ttft_slo,
+                        tpot_p95=tpot_slo)
+    spec_b = TenantSpec(name="secondary", ttft_p95=ttft_slo,
+                        tpot_p95=tpot_slo)
+    admission = EdfAdmission(chunk=prompt_len,
+                             budget=prompt_len + batch_slots)
+
+    def config(tenants, **kw):
+        return EngineConfig(admission=admission, tenants=tenants, **kw)
+
+    def slo_record(action, adoptions, ttfts, tpots, steps, wall, tokens):
+        rec = _leg(tokens, wall, steps=steps, action=action,
+                   adoptions=int(adoptions))
+        rec["ttft_p95_steps"] = float(np.percentile(ttfts, 95))
+        rec["tpot_p95_steps"] = float(np.percentile(tpots, 95))
+        rec["ttft_attainment"] = float(
+            np.mean([t <= ttft_slo for t in ttfts]))
+        rec["tpot_attainment"] = float(
+            np.mean([t <= tpot_slo for t in tpots]))
+        return rec
+
+    def outs(streams):
+        return [[r.out_tokens for r in s] for s in streams]
+
+    scenarios = {}
+
+    # -- exclusive + homogeneous: online hot-expert replication ------------
+    planner = AuroraPlanner(homogeneous_cluster(n))
+    mon = TrafficMonitor(n, model_a.n_moe_layers, halflife=halflife)
+    rp = OnlineReplanner(planner, interval=interval, threshold=0.0,
+                         warmup=interval, predictive=True)
+    # Kernelized hot path as in the skew section: the sort-based dispatch's
+    # compute follows routed tokens, so widening the physical expert axis
+    # on adoption is near-free.
+    eng = ContinuousEngine(model_a, params_a, batch_slots, cache_cap,
+                           config=config((spec_a,), kernels=True),
+                           monitor=mon)
+    current = [None]
+
+    def adopt_replication(step):
+        plan = rp.maybe_replicate(step, mon, current[0],
+                                  total_multiple=None)
+        if plan is not None:
+            eng.adopt(plan)
+            current[0] = plan.replication
+
+    live = _clone(primary)
+    t1, t2, steps, wall = _slo_serve(eng.step, [(eng, live)],
+                                     on_step=adopt_replication)
+    static = ContinuousEngine(model_a, params_a, batch_slots, cache_cap,
+                              config=config((spec_a,), kernels=True))
+    ref = _clone(primary)
+    _slo_serve(static.step, [(static, ref)])
+    assert outs([live]) == outs([ref]), \
+        "replication adoption changed tokens (placement-only violated)"
+    scenarios["exclusive+homogeneous"] = slo_record(
+        "replicate", len([e for e in rp.events if e.applied]), t1, t2,
+        steps, wall, sum(len(r.out_tokens) for r in live))
+
+    # -- exclusive + heterogeneous: online expert<->GPU re-assignment ------
+    planner = AuroraPlanner(heterogeneous_cluster(n))
+    mon = TrafficMonitor(n, model_a.n_moe_layers, halflife=halflife)
+    rp = OnlineReplanner(planner, interval=interval, threshold=0.0,
+                         warmup=interval,
+                         baseline_assignment=list(range(n)))
+    eng = ContinuousEngine(model_a, params_a, batch_slots, cache_cap,
+                           config=config((spec_a,)), monitor=mon)
+
+    def adopt_assignment(step):
+        plan = rp.maybe_reassign(step, mon, eng.assignment)
+        if plan is not None:
+            eng.adopt(plan)
+
+    live = _clone(primary)
+    t1, t2, steps, wall = _slo_serve(eng.step, [(eng, live)],
+                                     on_step=adopt_assignment)
+    static = ContinuousEngine(model_a, params_a, batch_slots, cache_cap,
+                              config=config((spec_a,)))
+    ref = _clone(primary)
+    _slo_serve(static.step, [(static, ref)])
+    assert outs([live]) == outs([ref]), \
+        "re-assignment changed tokens (placement-only violated)"
+    scenarios["exclusive+heterogeneous"] = slo_record(
+        "reassign", len([e for e in rp.events if e.applied]), t1, t2,
+        steps, wall, sum(len(r.out_tokens) for r in live))
+
+    # -- colocated + homogeneous: online re-pairing ------------------------
+    rp = OnlineReplanner(AuroraPlanner(homogeneous_cluster(n)),
+                         interval=interval, threshold=0.0, warmup=interval)
+    eng = ColocatedContinuousEngine(model_a, model_b, params_a, params_b,
+                                    batch_slots, cache_cap,
+                                    config=config((spec_a, spec_b)),
+                                    replan=rp, monitor_halflife=halflife)
+    live_a, live_b = _clone(primary), _clone(secondary)
+    t1, t2, steps, wall = _slo_serve(
+        eng.step, [(eng.pool_a, live_a), (eng.pool_b, live_b)])
+    static = ColocatedContinuousEngine(model_a, model_b, params_a, params_b,
+                                       batch_slots, cache_cap,
+                                       config=config((spec_a, spec_b)))
+    ref_a, ref_b = _clone(primary), _clone(secondary)
+    _slo_serve(static.step,
+               [(static.pool_a, ref_a), (static.pool_b, ref_b)])
+    assert outs([live_a, live_b]) == outs([ref_a, ref_b]), \
+        "re-pairing changed tokens (placement-only violated)"
+    scenarios["colocated+homogeneous"] = slo_record(
+        "replan", len([e for e in rp.events if e.applied]), t1, t2,
+        steps, wall,
+        sum(len(r.out_tokens) for r in live_a + live_b))
+
+    # -- colocated + heterogeneous: hetero-aware re-grouping ---------------
+    rp = OnlineReplanner(AuroraPlanner(heterogeneous_cluster(n)),
+                         interval=interval, threshold=0.0, warmup=interval)
+    eng = MultiTenantContinuousEngine([model_a, model_b],
+                                      [params_a, params_b], batch_slots,
+                                      cache_cap,
+                                      config=config((spec_a, spec_b)),
+                                      replan=rp, monitor_halflife=halflife)
+    live_a, live_b = _clone(primary), _clone(secondary)
+    t1, t2, steps, wall = _slo_serve(
+        eng.step, [(eng.pools[0], live_a), (eng.pools[1], live_b)])
+    static = MultiTenantContinuousEngine([model_a, model_b],
+                                         [params_a, params_b], batch_slots,
+                                         cache_cap,
+                                         config=config((spec_a, spec_b)))
+    ref_a, ref_b = _clone(primary), _clone(secondary)
+    _slo_serve(static.step,
+               [(static.pools[0], ref_a), (static.pools[1], ref_b)])
+    assert outs([live_a, live_b]) == outs([ref_a, ref_b]), \
+        "hetero re-grouping changed tokens (placement-only violated)"
+    scenarios["colocated+heterogeneous"] = slo_record(
+        "regroup", len([e for e in rp.events if e.applied]), t1, t2,
+        steps, wall,
+        sum(len(r.out_tokens) for r in live_a + live_b))
+
+    print(f"== SLO sweep: {arch} (reduced, {n} experts), same Zipf-drifting "
+          f"stream, EDF admission, targets ttft<={ttft_slo:g} "
+          f"tpot<={tpot_slo:g} steps ==")
+    print(f"{'scenario':<26} {'action':<10} {'adopt':>5} {'ttft p95':>9} "
+          f"{'tpot p95':>9} {'ttft att':>9} {'tpot att':>9} {'tok/s':>8}")
+    for name, r in scenarios.items():
+        print(f"{name:<26} {r['action']:<10} {r['adoptions']:>5} "
+              f"{r['ttft_p95_steps']:>9.1f} {r['tpot_p95_steps']:>9.2f} "
+              f"{r['ttft_attainment']:>9.2f} {r['tpot_attainment']:>9.2f} "
+              f"{r['tok_per_s']:>8.1f}")
+    ok = all(r["adoptions"] >= 1 for r in scenarios.values())
+    print("every scenario adopted >= 1 live plan; token streams identical "
+          "across adoption legs" if ok else
+          "FAIL: a scenario never adopted a live plan")
+    return {"arch": arch, "n_experts": n, "ttft_slo": ttft_slo,
+            "tpot_slo": tpot_slo, "scenarios": scenarios, "ok": bool(ok)}
+
+
+# ---------------------------------------------------------------------------
 # Driver
 # ---------------------------------------------------------------------------
 
@@ -1030,8 +1330,12 @@ def main() -> int:
     ap.add_argument("--overlap", action="store_true",
                     help="run the sync-vs-pipelined distributed dispatch "
                          "section (subprocess with a host-device mesh)")
+    ap.add_argument("--sweep", action="store_true",
+                    help="run the four-scenario SLO sweep (one stream "
+                         "through exclusive/colocated x homo/hetero; not "
+                         "part of --all — it has its own CI step)")
     ap.add_argument("--all", action="store_true",
-                    help="run every section")
+                    help="run every section (except --sweep)")
     ap.add_argument("--small", action="store_true",
                     help="CI smoke sizes (fewer/shorter requests)")
     ap.add_argument("--json", default=None,
@@ -1041,7 +1345,8 @@ def main() -> int:
     sections = {}
     run_classic = args.all or not (args.chunked or args.drift or args.multi
                                    or args.kernels or args.overlap
-                                   or args.skew or args.admission)
+                                   or args.skew or args.admission
+                                   or args.sweep)
     run_chunked = args.all or args.chunked or args.drift
     run_admission = args.all or args.admission
     run_drift = args.all or args.drift
@@ -1102,6 +1407,13 @@ def main() -> int:
         # process's single-device state, so --small only trims repetitions.
         kw = dict(reps=10) if args.small else {}
         sections["overlap"] = bench_overlap(**kw)
+    if args.sweep:
+        # Deliberately outside --all: four engines x two legs each is the
+        # most expensive section, and its attainment metrics get their own
+        # baseline-gated CI step.
+        kw = (dict(n_phase=6, max_new=4) if args.small else {})
+        sections["sweep"] = bench_sweep(arch=args.moe_arch, seed=args.seed,
+                                        **kw)
 
     if args.json:
         with open(args.json, "w") as f:

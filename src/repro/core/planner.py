@@ -304,6 +304,18 @@ class AuroraPlanner:
         ])
 
     # -- plan evaluation (re-planning support) ------------------------------
+    def evaluate_exclusive(self, trace: MoETrace,
+                           expert_to_device) -> SimResult:
+        """Predicted inference time of an EXISTING expert→device assignment
+        on (possibly new) traces — ``plan_exclusive``'s simulator leg without
+        re-planning; the scoring leg of online re-assignment (scenario 2)."""
+        e2d = np.asarray(expert_to_device)
+        return _mean_sim([
+            exclusive_inference_time(trace, l, self.cluster, e2d,
+                                     policy="aurora")
+            for l in range(len(trace.layers))
+        ])
+
     def evaluate_colocated(self, trace_a: MoETrace, trace_b: MoETrace,
                            pair: list[int],
                            slot_to_device: np.ndarray | None = None

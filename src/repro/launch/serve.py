@@ -16,6 +16,15 @@ pairing with AuroraPlanner from a synthetic routing trace, permutes model B's
 experts accordingly, and serves both streams through one interleaved XLA
 program (see serving/colocated.py).
 
+``--ttft-slo`` / ``--tpot-slo`` declare per-tenant SLO targets (p95, in
+engine-step units): each served model gets a ``TenantSpec``, every request's
+deadline is stamped from it at submit, and admission switches to
+deadline-aware EDF (``EdfAdmission`` — earliest effective deadline first,
+starvation-free via aging) over the same chunk and budget:
+
+  python -m repro.launch.serve --arch qwen3-32b --reduced \
+      --arrival-rate 0.5 --prefill-chunk 4 --ttft-slo 12 --tpot-slo 2
+
 ``--mesh N`` serves EP-sharded over an N-device mesh (on a CPU host the
 platform is split into N virtual devices — the flag must land before jax
 initializes, which is why it is handled first). ``--moe-impl aurora``
@@ -66,6 +75,13 @@ def main() -> int:
     ap.add_argument("--replan-threshold", type=float, default=0.02,
                     help="min relative predicted-time improvement before a "
                          "re-plan is applied")
+    ap.add_argument("--ttft-slo", type=float, default=None,
+                    help="p95 TTFT target in engine steps: declares a "
+                         "TenantSpec SLO (stamps per-request deadlines) and "
+                         "switches admission to deadline-aware EDF")
+    ap.add_argument("--tpot-slo", type=float, default=None,
+                    help="p95 TPOT target in engine steps (declared on the "
+                         "TenantSpec next to --ttft-slo)")
     ap.add_argument("--kernels", action="store_true",
                     help="continuous engines: serve through the Pallas "
                          "kernel path (sort-based ragged MoE dispatch + "
@@ -102,16 +118,41 @@ def main() -> int:
     from repro.configs import get_config
     from repro.models import Model
     from repro.serving import (ColocatedContinuousEngine, ColocatedEngine,
-                               ContinuousEngine, EngineConfig, Request,
-                               ServingEngine, poisson_requests)
+                               ContinuousEngine, EdfAdmission, EngineConfig,
+                               Request, ServingEngine, TenantSpec,
+                               poisson_requests)
 
-    # One config for every continuous engine this driver can build.
-    config = EngineConfig(prefill_len=args.prompt_len,
-                          prefill_chunk=args.prefill_chunk,
-                          step_token_budget=args.step_budget,
-                          bucket_policy=args.bucket_policy,
-                          prefill_pool=args.prefill_pool,
-                          kernels=args.kernels)
+    # One config for every continuous engine this driver can build. SLO
+    # flags declare TenantSpecs (one per served model — they stamp each
+    # request's deadline) and replace the chunk/budget shorthand with
+    # deadline-aware EDF admission over the same chunk and budget.
+    slo = args.ttft_slo is not None or args.tpot_slo is not None
+    if slo:
+        names = [args.arch] + ([args.colocate_with] if args.colocate_with
+                               else [])
+        tenants = tuple(TenantSpec(name=name, ttft_p95=args.ttft_slo,
+                                   tpot_p95=args.tpot_slo)
+                        for name in names)
+        config = EngineConfig(
+            prefill_len=args.prompt_len,
+            admission=EdfAdmission(
+                chunk=args.prefill_chunk or args.prompt_len,
+                budget=args.step_budget,
+                bucket_policy=args.bucket_policy),
+            prefill_pool=args.prefill_pool, kernels=args.kernels,
+            tenants=tenants)
+        print(f"SLO targets (engine steps): ttft_p95<="
+              f"{args.ttft_slo if args.ttft_slo is not None else 'none'} "
+              f"tpot_p95<="
+              f"{args.tpot_slo if args.tpot_slo is not None else 'none'} "
+              f"-> EDF admission, {len(tenants)} tenant spec(s)")
+    else:
+        config = EngineConfig(prefill_len=args.prompt_len,
+                              prefill_chunk=args.prefill_chunk,
+                              step_token_budget=args.step_budget,
+                              bucket_policy=args.bucket_policy,
+                              prefill_pool=args.prefill_pool,
+                              kernels=args.kernels)
 
     cfg = get_config(args.arch)
     if args.reduced:

@@ -5,9 +5,10 @@ EP-sharded distributed engines (mesh decode, round-pipelined dispatch, live
 schedule refresh). All engines are configured through one frozen
 ``EngineConfig`` (admission policies, prefill pool, kernels, jit)."""
 
-from .config import (AdmissionPolicy, EngineConfig, FifoAdmission,
-                     LengthBucketedAdmission, TokenBudgetAdmission,
-                     make_bucketer)
+from .config import (AdmissionPolicy, EdfAdmission, EngineConfig,
+                     FifoAdmission, LengthBucketedAdmission, RequestSpec,
+                     TenantSpec, TokenBudgetAdmission, coerce_admission,
+                     make_bucketer, scale_admission)
 from .engine import (ContinuousEngine, Request, ServingEngine,
                      poisson_requests, serve_stream)
 from .colocated import (ColocatedContinuousEngine, ColocatedEngine,
@@ -25,6 +26,8 @@ __all__ = ["Request", "ServingEngine", "ContinuousEngine",
            "DistributedColocatedEngine", "DistributedMultiTenantEngine",
            "EngineConfig", "AdmissionPolicy", "FifoAdmission",
            "LengthBucketedAdmission", "TokenBudgetAdmission",
+           "EdfAdmission", "RequestSpec", "TenantSpec", "coerce_admission",
+           "scale_admission",
            "apply_pairing", "build_lockstep_step", "device_traffic",
            "inverse_pair", "make_bucketer", "poisson_requests",
            "reseat_pairing", "rounds_from_plan", "rounds_from_trace",

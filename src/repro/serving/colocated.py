@@ -27,7 +27,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import Model
-from repro.serving.config import EngineConfig, coerce_config
+from repro.serving.config import (EngineConfig, TenantSpec, coerce_config,
+                                  scale_admission)
+
+
+def _pool_config_for(config: EngineConfig, spec: TenantSpec | None):
+    """Single-tenant pool view of a (possibly multi-tenant) EngineConfig:
+    kernels off (the engine kernelizes each model once, up front — the pool
+    re-kernelizing would double-wrap), the tenant's own ``TenantSpec``
+    installed so the pool stamps its SLO deadlines, and the shared admission
+    budget scaled by the tenant's ``rate_share``."""
+    admission = config.resolve_admission()
+    if spec is not None and spec.rate_share is not None:
+        admission = scale_admission(admission, spec.rate_share)
+    # The resolved policy subsumes the chunk/budget/bucket shorthand —
+    # clear those fields so the replaced config stays self-consistent.
+    return dataclasses.replace(
+        config, kernels=False, admission=admission, prefill_chunk=None,
+        step_token_budget=None, bucket_policy="pow2",
+        tenants=(spec,) if spec is not None else ())
 
 
 def apply_pairing(params_b, pair: list[int], cfg_b):
@@ -240,16 +258,24 @@ class ColocatedContinuousEngine:
             # candidate pairings stay in one frame.
             self.monitor_b.slot_to_expert = list(self.pair)
 
-        # Pools get the same config minus kernels (the models above are
-        # already kernelized — re-kernelizing in the pool would double-wrap).
-        pool_config = dataclasses.replace(config, kernels=False)
-        self._pool_config = pool_config
-        self.pool_a = ContinuousEngine(model_a, params_a, batch_slots,
-                                       cache_cap, config=pool_config,
-                                       monitor=self.monitor_a)
-        self.pool_b = ContinuousEngine(model_b, params_b, batch_slots,
-                                       cache_cap, config=pool_config,
-                                       monitor=self.monitor_b)
+        # Each pool gets a single-tenant view of the config: kernels off
+        # (the models above are already kernelized), its own TenantSpec for
+        # SLO deadlines, and its rate-share slice of the admission budget.
+        if config.tenants and len(config.tenants) != 2:
+            raise ValueError(
+                f"{len(config.tenants)} TenantSpecs for the dual-model "
+                "engine — declare exactly two (model A then model B) or "
+                "none")
+        self.tenant_specs = (list(config.tenants) if config.tenants
+                             else [None, None])
+        self.pool_a = ContinuousEngine(
+            model_a, params_a, batch_slots, cache_cap,
+            config=_pool_config_for(config, self.tenant_specs[0]),
+            monitor=self.monitor_a)
+        self.pool_b = ContinuousEngine(
+            model_b, params_b, batch_slots, cache_cap,
+            config=_pool_config_for(config, self.tenant_specs[1]),
+            monitor=self.monitor_b)
 
         self._jit = config.jit
         self._step_wrapper = config.step_wrapper or (lambda fn: fn)
@@ -345,6 +371,13 @@ class MultiTenantContinuousEngine:
     tenant t's params with ``apply_pairing(params_t, [g[t] for g in groups])``
     for t >= 1 — placement-only, so any grouping serves identical tokens.
 
+    Alternatively, construct from ``config.tenants`` alone: each
+    ``TenantSpec`` carries its model, LOGICAL params, placement ``pair``,
+    and SLO targets; the engine realizes the pairings, derives ``groups``,
+    and gives every tenant's pool its own deadline source and rate-share
+    slice of the admission budget — the same spec type ``admit_tenant``
+    accepts for live churn.
+
     With ``replan=OnlineReplanner(...)`` every tenant harvests live routing
     counts into its own ``TrafficMonitor`` and the planner periodically
     re-groups from the N live traces (``OnlineReplanner.maybe_regroup``);
@@ -353,15 +386,62 @@ class MultiTenantContinuousEngine:
     streams provably unchanged.
     """
 
-    def __init__(self, models: list[Model], params: list, batch_slots: int,
-                 cache_cap: int, config: EngineConfig | None = None,
+    def __init__(self, models: list[Model] | None = None,
+                 params: list | None = None, batch_slots: int = None,
+                 cache_cap: int = None, config: EngineConfig | None = None,
                  groups: list[tuple[int, ...]] | None = None,
                  replan=None, monitor_halflife: float = 128.0, **legacy):
         from .engine import ContinuousEngine
         from .monitor import TrafficMonitor
 
+        if batch_slots is None or cache_cap is None:
+            raise TypeError("batch_slots and cache_cap are required")
         config = coerce_config(config, legacy, type(self).__name__)
         self.config = config
+        if models is None:
+            # Config-driven construction: every tenant (model, params,
+            # placement) comes from one validated TenantSpec — the same
+            # spec type admit_tenant accepts for live churn.
+            if params is not None:
+                raise ValueError("params without models — declare both on "
+                                 "the TenantSpecs instead")
+            if groups is not None:
+                raise ValueError("groups conflict with config-driven "
+                                 "construction — declare per-tenant "
+                                 "placement via TenantSpec.pair")
+            specs = list(config.tenants)
+            if len(specs) < 2:
+                raise ValueError(
+                    "config-driven construction needs >= 2 TenantSpecs in "
+                    "config.tenants (or pass models/params explicitly)")
+            missing = [t for t, s in enumerate(specs)
+                       if s.model is None or s.params is None]
+            if missing:
+                raise ValueError(
+                    f"TenantSpecs {missing} declare no model/params — "
+                    "config-driven construction needs both on every spec")
+            models = [s.model for s in specs]
+            n_e = (models[0].cfg.moe.n_experts
+                   if models[0].cfg.moe is not None else 0)
+            pairs = [list(s.pair) if s.pair is not None else list(range(n_e))
+                     for s in specs]
+            if pairs and pairs[0] != list(range(len(pairs[0]))):
+                raise ValueError("tenant 0 anchors the slots — its "
+                                 "TenantSpec.pair must be the identity")
+            # Specs carry LOGICAL (unpermuted) params; realize each
+            # tenant's placement here, exactly as admit_tenant does.
+            params = [apply_pairing(s.params, p, s.model.cfg)
+                      if p != list(range(len(p))) else s.params
+                      for s, p in zip(specs, pairs)]
+            groups = [tuple(p[g] for p in pairs)
+                      for g in range(len(pairs[0]) if pairs else 0)] or None
+        else:
+            specs = list(config.tenants)
+            if specs and len(specs) != len(models):
+                raise ValueError(f"{len(specs)} TenantSpecs for "
+                                 f"{len(models)} models — declare one per "
+                                 "tenant or none")
+        self.tenant_specs = specs or [None] * len(models)
         if len(models) < 2:
             raise ValueError("MultiTenantContinuousEngine needs >= 2 tenants "
                              "(use ContinuousEngine for one)")
@@ -422,12 +502,12 @@ class MultiTenantContinuousEngine:
             for t in range(1, self.n_tenants):
                 self.monitors[t].slot_to_expert = [g[t] for g in self.groups]
 
-        # Pools get the same config minus kernels (models above are already
-        # kernelized; see ColocatedContinuousEngine).
-        self._pool_config = dataclasses.replace(config, kernels=False)
+        # Each pool gets a single-tenant view of the config (kernels off,
+        # its own TenantSpec, rate-share-scaled admission budget).
         self.pools = [
             ContinuousEngine(m, p, batch_slots, cache_cap,
-                             config=self._pool_config,
+                             config=_pool_config_for(
+                                 config, self.tenant_specs[t]),
                              monitor=(self.monitors[t] if self.monitors
                                       else None))
             for t, (m, p) in enumerate(zip(models, params))]
@@ -487,24 +567,44 @@ class MultiTenantContinuousEngine:
             self._adopt_online(new)
 
     # -- tenant churn ------------------------------------------------------
-    def admit_tenant(self, model: Model, params, *,
-                     pair: list[int] | None = None) -> int:
+    def admit_tenant(self, model: Model | TenantSpec = None, params=None, *,
+                     pair: list[int] | None = None,
+                     spec: TenantSpec | None = None) -> int:
         """Admit a NEW tenant into the live pool. Returns its tenant index.
 
-        ``params`` arrive in the LOGICAL (unpermuted) frame; ``pair`` is the
-        slot->expert placement to realize for it (identity when omitted) —
-        realized here via ``apply_pairing``, exactly as the constructor
-        documents for pre-permuted tenants. The tenant gets its own slot
-        pool and (under a replanner) its own ``TrafficMonitor``; colocation
-        groups gain its column, and the replanner re-derives the grouping
-        online once the fresh monitor passes warmup. Every existing tenant's
-        pool, cache, and token stream are untouched — admission is
-        placement-only for the incumbents (lockstep rows are tenant-
-        independent).
+        Accepts either a ``TenantSpec`` carrying model/params/pair (and SLO
+        targets, honored by the new pool) — the same validated type
+        ``EngineConfig.tenants`` uses for construction — or the unbundled
+        ``(model, params, pair=...)`` spelling. ``params`` arrive in the
+        LOGICAL (unpermuted) frame; ``pair`` is the slot->expert placement
+        to realize for it (identity when omitted) — realized here via
+        ``apply_pairing``, exactly as the constructor documents for
+        pre-permuted tenants. The tenant gets its own slot pool and (under
+        a replanner) its own ``TrafficMonitor``; colocation groups gain its
+        column, and the replanner re-derives the grouping online once the
+        fresh monitor passes warmup. Every existing tenant's pool, cache,
+        and token stream are untouched — admission is placement-only for
+        the incumbents (lockstep rows are tenant-independent).
         """
         from .engine import ContinuousEngine
         from .monitor import TrafficMonitor
 
+        if isinstance(model, TenantSpec):
+            if spec is not None:
+                raise ValueError("pass the TenantSpec once (positionally "
+                                 "or as spec=, not both)")
+            spec, model = model, None
+        if spec is not None:
+            if model is not None or params is not None or pair is not None:
+                raise ValueError("pass EITHER a TenantSpec or unbundled "
+                                 "model/params/pair — not both")
+            if spec.model is None or spec.params is None:
+                raise ValueError("admit_tenant needs model and params on "
+                                 "the TenantSpec")
+            model, params, pair = spec.model, spec.params, spec.pair
+        elif model is None or params is None:
+            raise TypeError("admit_tenant needs a TenantSpec or "
+                            "(model, params)")
         model = self.config.kernelize(model)
         cfg = model.cfg
         n_e = len(self.groups)
@@ -534,7 +634,8 @@ class MultiTenantContinuousEngine:
         self.models.append(model)
         self.pools.append(ContinuousEngine(
             model, params, self.batch_slots, self.cache_cap,
-            config=self._pool_config, monitor=monitor))
+            config=_pool_config_for(self.config, spec), monitor=monitor))
+        self.tenant_specs.append(spec)
         self.groups = [grp + (pair[g],) for g, grp in enumerate(self.groups)]
         self.n_tenants += 1
         self._build_lockstep()
@@ -560,6 +661,7 @@ class MultiTenantContinuousEngine:
                 "drop the replanner (or keep >= 2 tenants)")
         pool = self.pools.pop(t)
         self.models.pop(t)
+        self.tenant_specs.pop(t)
         if self.monitors is not None:
             self.monitors.pop(t)
         self.groups = [g[:t] + g[t + 1:] for g in self.groups]

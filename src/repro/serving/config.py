@@ -23,15 +23,43 @@ schemes are the exemplar):
 * ``TokenBudgetAdmission`` — chunked admission under a per-step token
   budget: decode always runs and eats ``num_active`` tokens of the budget;
   prefill chunks only proceed on leftover budget.
+* ``EdfAdmission`` — deadline-aware token-budget admission:
+  earliest-deadline-first within the chunk budget, starvation-free via
+  aging (``age_limit`` caps every request's effective deadline at
+  ``arrival + age_limit``, so deadline-free traffic cannot be starved by a
+  stream of tight deadlines).
 
-The legacy trio maps 1:1 onto the three policies (``resolve_admission``),
-so existing behavior is reproduced exactly — the policy object is the same
-scheduler, named.
+Policies see the scheduler state as ``RequestSpec`` objects (arrival time,
+prompt length, SLO deadline, tenant id, next chunk size) through two
+methods: ``select(num_active, reqs)`` picks which due prefill chunks run
+this engine step (in run order — deadline policies may reorder), and
+``order(reqs)`` is the queue discipline for topping up the prefill pool.
+Reordering is placement-only: each request's token stream depends only on
+its own slot rows, so any admission order emits byte-identical tokens —
+only TTFT/TPOT (the schedule) moves.
+
+The pre-SLO protocol method — ``chunk_budget(num_active, chunks)`` over
+bare chunk-size ints — remains as a deprecation shim mirroring
+``coerce_config``: third-party policies that only implement it are wrapped
+(one ``DeprecationWarning`` per config) into the ``select`` interface, and
+the stock policies still answer ``chunk_budget`` calls (same warning) by
+delegating to ``select``.
+
+Per-tenant SLO targets are declared on ``EngineConfig.tenants`` as
+``TenantSpec`` entries (p95 TTFT / p95 TPOT targets in engine-step units,
+rate share of the step token budget, and — for the multi-tenant engine —
+the tenant's model/params/pairing), which the engines translate into
+per-request deadlines at ``submit`` time.
+
+The legacy trio maps 1:1 onto the three original policies
+(``resolve_admission``), so existing behavior is reproduced exactly — the
+policy object is the same scheduler, named.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 import warnings
 from typing import Callable, Protocol, Sequence
 
@@ -65,15 +93,62 @@ def make_bucketer(policy) -> Callable[[int], int]:
                      "(expected 'pow2', 'exact', 'step:K', or a callable)")
 
 
+@dataclasses.dataclass(frozen=True)
+class RequestSpec:
+    """What an admission policy sees about one pending request.
+
+    ``chunk`` is the request's next due prefill chunk size in tokens (the
+    whole padded prompt for one-shot admission, the first chunk for queue
+    ordering); ``deadline`` is the absolute SLO deadline in engine-step
+    time (``math.inf`` = no deadline); ``tenant`` is an opaque tenant id.
+    """
+
+    chunk: int
+    prompt_len: int = 0
+    arrival: float = 0.0
+    deadline: float = math.inf
+    tenant: object = None
+
+    def __post_init__(self):
+        if self.chunk < 0:
+            raise ValueError("chunk must be a non-negative token count")
+        if math.isnan(self.deadline):
+            raise ValueError("deadline must be a time or math.inf, not NaN")
+
+
+def _fifo_order(reqs: Sequence[RequestSpec]) -> tuple[int, ...]:
+    return tuple(range(len(reqs)))
+
+
+def _deprecated_chunk_budget(policy, num_active: int,
+                             chunks: Sequence[int]) -> int:
+    warnings.warn(
+        f"{type(policy).__name__}.chunk_budget(num_active, chunks) is "
+        "deprecated — admission policies now expose select(num_active, "
+        "reqs) over RequestSpec objects (repro.serving.RequestSpec)",
+        DeprecationWarning, stacklevel=3)
+    return len(policy.select(num_active,
+                             [RequestSpec(chunk=int(c)) for c in chunks]))
+
+
 class AdmissionPolicy(Protocol):
     """How queued prompts enter the slot pool.
 
     ``chunk`` is the per-step prefill granularity (None = one-shot whole
     prompts), ``budget`` the per-step token budget (None = unbudgeted);
-    ``pad`` buckets a prompt length to its compiled pad length, and
-    ``chunk_budget`` is the scheduler decision: given the decode load and
-    the pending prefills' next chunk sizes (FIFO order), how many of those
-    chunks run this step (a prefix count — admission never reorders).
+    ``pad`` buckets a prompt length to its compiled pad length.
+
+    ``select`` is the scheduler decision: given the decode load and the
+    pending prefills' ``RequestSpec``s (arrival order), which of their due
+    chunks run this step — returned as indices in run order, so a
+    deadline-aware policy may reorder. ``order`` is the queue discipline:
+    the priority order in which queued requests should enter the prefill
+    pool. Both are placement-only decisions — any ordering emits identical
+    token streams; only the schedule (TTFT/TPOT) changes.
+
+    The old ``chunk_budget(num_active, chunks)`` int-based signature is
+    deprecated; policies that only implement it are shimmed into ``select``
+    with a ``DeprecationWarning`` (see ``coerce_admission``).
     """
 
     chunk: int | None
@@ -81,8 +156,10 @@ class AdmissionPolicy(Protocol):
 
     def pad(self, prompt_len: int) -> int: ...
 
-    def chunk_budget(self, num_active: int,
-                     chunks: Sequence[int]) -> int: ...
+    def select(self, num_active: int,
+               reqs: Sequence[RequestSpec]) -> tuple[int, ...]: ...
+
+    def order(self, reqs: Sequence[RequestSpec]) -> tuple[int, ...]: ...
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,8 +174,15 @@ class FifoAdmission:
     def pad(self, prompt_len: int) -> int:
         return make_bucketer(self.bucket_policy)(prompt_len)
 
+    def select(self, num_active: int,
+               reqs: Sequence[RequestSpec]) -> tuple[int, ...]:
+        return _fifo_order(reqs)
+
+    def order(self, reqs: Sequence[RequestSpec]) -> tuple[int, ...]:
+        return _fifo_order(reqs)
+
     def chunk_budget(self, num_active: int, chunks: Sequence[int]) -> int:
-        return len(chunks)
+        return _deprecated_chunk_budget(self, num_active, chunks)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,8 +202,15 @@ class LengthBucketedAdmission:
     def pad(self, prompt_len: int) -> int:
         return make_bucketer(self.bucket_policy)(prompt_len)
 
+    def select(self, num_active: int,
+               reqs: Sequence[RequestSpec]) -> tuple[int, ...]:
+        return _fifo_order(reqs)
+
+    def order(self, reqs: Sequence[RequestSpec]) -> tuple[int, ...]:
+        return _fifo_order(reqs)
+
     def chunk_budget(self, num_active: int, chunks: Sequence[int]) -> int:
-        return len(chunks)
+        return _deprecated_chunk_budget(self, num_active, chunks)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -148,17 +239,216 @@ class TokenBudgetAdmission:
     def pad(self, prompt_len: int) -> int:
         return make_bucketer(self.bucket_policy)(prompt_len)
 
-    def chunk_budget(self, num_active: int, chunks: Sequence[int]) -> int:
+    def select(self, num_active: int,
+               reqs: Sequence[RequestSpec]) -> tuple[int, ...]:
         if num_active == 0:
-            return len(chunks)
+            return _fifo_order(reqs)
         left = self.budget - num_active
         k = 0
-        for c in chunks:
-            if c > left:
+        for r in reqs:
+            if r.chunk > left:
                 break
-            left -= c
+            left -= r.chunk
             k += 1
-        return k
+        return tuple(range(k))
+
+    def order(self, reqs: Sequence[RequestSpec]) -> tuple[int, ...]:
+        return _fifo_order(reqs)
+
+    def chunk_budget(self, num_active: int, chunks: Sequence[int]) -> int:
+        return _deprecated_chunk_budget(self, num_active, chunks)
+
+
+@dataclasses.dataclass(frozen=True)
+class EdfAdmission:
+    """Deadline-aware token-budget admission: earliest-deadline-first
+    within the chunk budget, starvation-free via aging.
+
+    Pending chunks are ranked by effective deadline
+    ``min(deadline, arrival + age_limit)`` (ties broken by arrival, then
+    submission order) — so a request with no SLO deadline competes as if
+    due ``age_limit`` steps after it arrived, which bounds every request's
+    wait behind tighter-deadline traffic (the aging guarantee: no
+    starvation, however adversarial the deadline stream).
+
+    Selection is WORK-CONSERVING: chunks are admitted greedily in deadline
+    order while they fit ``budget - num_active``, and a chunk that does not
+    fit is skipped rather than blocking later chunks that do — the engine
+    never idles leftover budget while some due chunk would fit it. With
+    ``budget=None`` every due chunk runs, in deadline order. The idle-engine
+    bypass (``num_active == 0``) and the progress guarantee match
+    ``TokenBudgetAdmission``.
+
+    Reordering is placement-only: a request's tokens depend only on its own
+    slot rows, so EDF emits byte-identical streams to FIFO — for a
+    single-tenant stream with uniform deadlines even the schedule matches
+    (the ranking degenerates to arrival order).
+    """
+
+    chunk: int
+    budget: int | None = None
+    bucket_policy: object = "pow2"
+    age_limit: float = 256.0
+
+    def __post_init__(self):
+        if self.chunk <= 0:
+            raise ValueError("prefill_chunk must be a positive token count")
+        if self.budget is not None and self.budget <= 0:
+            raise ValueError("step_token_budget must be a positive "
+                             "token count")
+        if not self.age_limit > 0:
+            raise ValueError("age_limit must be a positive step count "
+                             "(it is the starvation bound)")
+
+    def pad(self, prompt_len: int) -> int:
+        return make_bucketer(self.bucket_policy)(prompt_len)
+
+    def _rank(self, reqs: Sequence[RequestSpec]) -> list[int]:
+        key = lambda i: (min(reqs[i].deadline,
+                             reqs[i].arrival + self.age_limit),
+                         reqs[i].arrival, i)
+        return sorted(range(len(reqs)), key=key)
+
+    def select(self, num_active: int,
+               reqs: Sequence[RequestSpec]) -> tuple[int, ...]:
+        ranked = self._rank(reqs)
+        if self.budget is None or num_active == 0:
+            return tuple(ranked)
+        left = self.budget - num_active
+        take = []
+        for i in ranked:
+            if reqs[i].chunk <= left:
+                take.append(i)
+                left -= reqs[i].chunk
+        return tuple(take)
+
+    def order(self, reqs: Sequence[RequestSpec]) -> tuple[int, ...]:
+        return tuple(self._rank(reqs))
+
+    def chunk_budget(self, num_active: int, chunks: Sequence[int]) -> int:
+        return _deprecated_chunk_budget(self, num_active, chunks)
+
+
+class _LegacyAdmission:
+    """Deprecation shim for pre-``select`` admission policies (the old
+    int-based ``chunk_budget`` protocol): adapts them to the ``select`` /
+    ``order`` interface by forwarding bare chunk sizes and admitting the
+    returned prefix. Created (with one ``DeprecationWarning``) by
+    ``coerce_admission`` — mirroring ``coerce_config``'s legacy-kwarg
+    shim."""
+
+    def __init__(self, policy):
+        self._policy = policy
+        self.chunk = getattr(policy, "chunk", None)
+        self.budget = getattr(policy, "budget", None)
+        self.bucket_policy = getattr(policy, "bucket_policy", "pow2")
+
+    def pad(self, prompt_len: int) -> int:
+        return self._policy.pad(prompt_len)
+
+    def select(self, num_active: int,
+               reqs: Sequence[RequestSpec]) -> tuple[int, ...]:
+        k = self._policy.chunk_budget(num_active, [r.chunk for r in reqs])
+        return tuple(range(min(int(k), len(reqs))))
+
+    def order(self, reqs: Sequence[RequestSpec]) -> tuple[int, ...]:
+        return _fifo_order(reqs)
+
+
+def coerce_admission(policy, owner: str = "EngineConfig"):
+    """Adapt ``policy`` to the ``select``-based ``AdmissionPolicy`` protocol.
+
+    Policies already speaking ``select`` pass through; legacy policies that
+    only implement the deprecated int-based ``chunk_budget(num_active,
+    chunks)`` are wrapped in ``_LegacyAdmission`` with a single
+    ``DeprecationWarning`` (per call — ``EngineConfig.resolve_admission``
+    caches the result, so an engine warns once)."""
+    if hasattr(policy, "select"):
+        return policy
+    if hasattr(policy, "chunk_budget"):
+        warnings.warn(
+            f"{owner}: admission policy {type(policy).__name__} only "
+            "implements the deprecated int-based chunk_budget(num_active, "
+            "chunks) — implement select(num_active, reqs) over "
+            "repro.serving.RequestSpec objects instead",
+            DeprecationWarning, stacklevel=3)
+        return _LegacyAdmission(policy)
+    raise TypeError(
+        f"{owner}: {type(policy).__name__} is not an admission policy "
+        "(needs select(num_active, reqs) — see "
+        "repro.serving.AdmissionPolicy)")
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant's declaration: SLO targets plus (for the multi-tenant
+    engine) its model, params, and expert pairing.
+
+    SLO targets are in ENGINE-STEP time units (the same clock as
+    ``Request.arrival``): ``ttft_p95`` is the p95 time-to-first-token
+    target — engines turn it into per-request deadlines
+    (``arrival + ttft_p95``) at submit time, which is what deadline-aware
+    policies like ``EdfAdmission`` schedule against; ``tpot_p95`` is the
+    p95 time-per-output-token target (reported by the SLO bench sweep, not
+    a scheduling input). ``rate_share`` is the tenant's fraction of the
+    step token budget — the multi-tenant engine scales a budgeted
+    admission policy's ``budget`` by it, so one tenant's prefill burst
+    cannot eat the whole step. Shares across one config must sum to <= 1.
+
+    ``model``/``params``/``pair`` fold the multi-tenant constructor
+    plumbing into the spec: ``MultiTenantContinuousEngine(batch_slots,
+    cache_cap, config=EngineConfig(tenants=(TenantSpec(model=..,
+    params=..), ...)))`` replaces the parallel models/params lists, and
+    ``admit_tenant(TenantSpec(...))`` admits with the same validated type.
+    ``params`` arrive in the LOGICAL (unpermuted) frame; ``pair`` is the
+    slot->expert placement the engine realizes (identity when None).
+    """
+
+    name: str | None = None
+    ttft_p95: float | None = None
+    tpot_p95: float | None = None
+    rate_share: float | None = None
+    model: object = None
+    params: object = None
+    pair: tuple[int, ...] | None = None
+
+    def __post_init__(self):
+        for field in ("ttft_p95", "tpot_p95"):
+            v = getattr(self, field)
+            if v is not None and not v > 0:
+                raise ValueError(f"{field} must be a positive engine-step "
+                                 f"count, got {v!r}")
+        if self.rate_share is not None and not 0 < self.rate_share <= 1:
+            raise ValueError("rate_share must be in (0, 1] — it is the "
+                             "tenant's fraction of the step token budget, "
+                             f"got {self.rate_share!r}")
+        if self.pair is not None:
+            object.__setattr__(self, "pair",
+                               tuple(int(x) for x in self.pair))
+        if self.params is not None and self.model is None:
+            raise ValueError("TenantSpec.params without model — the engine "
+                             "needs both to host the tenant")
+
+    def deadline(self, arrival: float) -> float:
+        """Absolute SLO deadline for a request arriving at ``arrival``
+        (``math.inf`` when the tenant declares no TTFT target)."""
+        if self.ttft_p95 is None:
+            return math.inf
+        return arrival + self.ttft_p95
+
+
+def scale_admission(policy, rate_share: float | None):
+    """Per-tenant view of a budgeted admission policy: the tenant's pool
+    gets ``budget * rate_share`` (floored at one chunk so progress is never
+    configured away). Unbudgeted policies and ``None`` shares pass through
+    unchanged."""
+    budget = getattr(policy, "budget", None)
+    if (rate_share is None or budget is None
+            or not dataclasses.is_dataclass(policy)):
+        return policy
+    chunk = getattr(policy, "chunk", None) or 1
+    return dataclasses.replace(
+        policy, budget=max(int(chunk), int(round(budget * rate_share))))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -195,11 +485,23 @@ class EngineConfig:
     bucket_policy: object = "pow2"
     prefill_pool: int = 1
     admission: AdmissionPolicy | None = None
+    tenants: tuple[TenantSpec, ...] = ()
     kernels: object = False          # bool | KernelConfig
     jit: bool = True
     step_wrapper: Callable | None = None
 
     def __post_init__(self):
+        object.__setattr__(self, "tenants", tuple(self.tenants))
+        for t in self.tenants:
+            if not isinstance(t, TenantSpec):
+                raise ValueError(f"tenants must be TenantSpec entries, "
+                                 f"got {type(t).__name__}")
+        shares = [t.rate_share for t in self.tenants
+                  if t.rate_share is not None]
+        if sum(shares) > 1 + 1e-9:
+            raise ValueError(f"tenant rate_shares sum to {sum(shares)} > 1 "
+                             "— shares are fractions of ONE step token "
+                             "budget")
         if self.admission is not None:
             if (self.prefill_chunk is not None
                     or self.step_token_budget is not None):
@@ -228,17 +530,26 @@ class EngineConfig:
 
     def resolve_admission(self) -> AdmissionPolicy:
         """The admission policy this config realizes (explicit ``admission``
-        wins; else the legacy-trio mapping)."""
+        wins; else the legacy-trio mapping). Legacy ``chunk_budget``-only
+        policies are shimmed to the ``select`` protocol here
+        (``coerce_admission``), cached so the shim's single
+        ``DeprecationWarning`` fires once per config."""
+        cached = getattr(self, "_resolved_admission", None)
+        if cached is not None:
+            return cached
         if self.admission is not None:
-            return self.admission
-        if self.prefill_chunk is None:
-            return FifoAdmission(bucket_policy=self.bucket_policy)
-        if self.step_token_budget is None:
-            return LengthBucketedAdmission(chunk=self.prefill_chunk,
-                                           bucket_policy=self.bucket_policy)
-        return TokenBudgetAdmission(chunk=self.prefill_chunk,
-                                    budget=self.step_token_budget,
-                                    bucket_policy=self.bucket_policy)
+            resolved = coerce_admission(self.admission)
+        elif self.prefill_chunk is None:
+            resolved = FifoAdmission(bucket_policy=self.bucket_policy)
+        elif self.step_token_budget is None:
+            resolved = LengthBucketedAdmission(
+                chunk=self.prefill_chunk, bucket_policy=self.bucket_policy)
+        else:
+            resolved = TokenBudgetAdmission(
+                chunk=self.prefill_chunk, budget=self.step_token_budget,
+                bucket_policy=self.bucket_policy)
+        object.__setattr__(self, "_resolved_admission", resolved)
+        return resolved
 
     def kernelize(self, model):
         """The ONE kernel-selection code path: route ``model`` through the

@@ -257,9 +257,17 @@ class DistributedEngine(ContinuousEngine):
         also carries its hot-expert replication: the expert leaves are
         re-widened under the new host map (placement-only — see
         ``ContinuousEngine._set_replication``) before the rounds swap, so
-        one adoption moves placement AND schedule together. Returns the
-        adopted rounds."""
+        one adoption moves placement AND schedule together. An exclusive
+        plan whose only content is a fresh expert→device assignment
+        (scenario 2: ``OnlineReplanner.maybe_reassign``) re-seats the
+        expert leaves onto their new EP blocks first — placement-only as
+        well. Returns the adopted rounds."""
         if hasattr(plan, "schedules"):   # a full Plan carries placement too
+            if (plan.pair is None and plan.groups is None
+                    and plan.replication is None
+                    and self.assignment is not None
+                    and len(plan.expert_to_device) == len(self.assignment)):
+                self.adopt_assignment(plan.expert_to_device)
             rep = plan.replication
             if rep is not None:
                 n_phys = sum(len(h) for h in rep)

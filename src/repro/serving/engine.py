@@ -27,11 +27,14 @@ per engine step straight into its slot's row of the shared cache
 (``Model.prefill_chunk_slot``: slice, continue, merge in one donated
 program). Between chunks the decode step freezes the pending slot's row
 (``row_mask``), so the partial state survives interleaved decodes. An
-``AdmissionPolicy`` decides which pending chunks run each step: decode
-always runs; under ``TokenBudgetAdmission`` leftover budget feeds the
-FIFO prefix of due chunks. Token streams are identical to one-shot
-admission (prefill continuation is exact — see
-``models.transformer.forward``); only the schedule changes.
+``AdmissionPolicy`` decides which pending chunks run each step via
+``select`` over per-request ``RequestSpec``s (arrival, prompt length, SLO
+deadline, tenant): decode always runs; under ``TokenBudgetAdmission``
+leftover budget feeds the FIFO prefix of due chunks, under
+``EdfAdmission`` the earliest effective deadlines go first. Token streams
+are identical to one-shot admission regardless of order (prefill
+continuation is exact — see ``models.transformer.forward``); only the
+schedule changes.
 
 **Prefill pool** (``EngineConfig(prefill_pool=K)``): up to K chunked
 prefills live in flight at once, and every engine step runs ALL their due
@@ -60,6 +63,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 from functools import partial
 from typing import Sequence
 
@@ -68,7 +72,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import Model
-from repro.serving.config import EngineConfig, coerce_config, make_bucketer
+from repro.serving.config import (EngineConfig, RequestSpec, coerce_config,
+                                  make_bucketer)
 
 __all__ = ["Request", "poisson_requests", "serve_stream", "make_bucketer",
            "ServingEngine", "ContinuousEngine"]
@@ -79,6 +84,11 @@ class Request:
     prompt: Sequence[int]
     max_new_tokens: int = 16
     arrival: float = 0.0                 # engine-step time of arrival
+    # Absolute SLO deadline (engine-step time) fed to deadline-aware
+    # admission policies. None = derive from the engine's TenantSpec at
+    # submit (math.inf when the tenant declares no TTFT target).
+    deadline: float | None = None
+    tenant: object = None                # opaque tenant id for the policy
     out_tokens: list = dataclasses.field(default_factory=list)
 
 
@@ -202,6 +212,15 @@ class ContinuousEngine:
         self.cache_cap = cache_cap
         self.src_len = src_len
         self.admission = config.resolve_admission()
+        # The single-model engine hosts ONE tenant: its spec (SLO targets)
+        # turns into per-request deadlines at submit. The colocated /
+        # multi-tenant engines split their config's tenants across pools.
+        if len(config.tenants) > 1:
+            raise ValueError(
+                f"{type(self).__name__} hosts one tenant; "
+                f"config.tenants has {len(config.tenants)} — use "
+                "MultiTenantContinuousEngine for several")
+        self.tenant_spec = config.tenants[0] if config.tenants else None
         # Derived views kept for callers that inspected the old attributes.
         self.prefill_len = config.prefill_len
         self.prefill_chunk = self.admission.chunk
@@ -214,8 +233,14 @@ class ContinuousEngine:
         self.tokens = jnp.zeros((batch_slots, 1), jnp.int32)
         self.queue: collections.deque[Request] = collections.deque()
         self.slots: list[Request | None] = [None] * batch_slots
-        # In-flight chunked prefills, FIFO: [req, slot, padded_toks, done].
+        # In-flight chunked prefills, arrival order: [req, slot,
+        # padded_toks, done]. The admission policy's select() picks which
+        # of their due chunks run each step (deadline policies reorder).
         self._pending: list[list] = []
+        # Exclusive-scenario expert->device assignment REALIZED in params
+        # (identity unless an exclusive plan was adopted); None = non-MoE.
+        self.assignment = (list(range(model.cfg.moe.n_experts))
+                          if model.cfg.moe is not None else None)
         self._jit = config.jit
         # Distributed engines wrap every compiled step so it runs under the
         # mesh context (``with_sharding_constraint`` needs an active mesh on
@@ -346,17 +371,61 @@ class ContinuousEngine:
             spec = ReplicationSpec.from_counts(counts)
         self._set_replication(spec)
 
+    def adopt_assignment(self, expert_to_device) -> None:
+        """Adopt an exclusive-scenario expert->GPU assignment (Thm 5.1)
+        placement-only: device slot d's expert leaves are re-seated so
+        expert e sits on ``expert_to_device[e]``, and the router columns
+        follow (``reseat_pairing``), so the composed function — and every
+        emitted token — is unchanged. The monitor's stats frame is updated
+        to the new slot->expert map.
+
+        In this engine "device slot" is a position along the expert axis —
+        exactly how EP sharding places contiguous expert blocks, so the
+        same adoption is a REAL device move under ``DistributedEngine``."""
+        from repro.serving.colocated import inverse_pair, reseat_pairing
+        if self.assignment is None:
+            raise ValueError("adopt_assignment needs an MoE model "
+                             "(expert->device assignment is per expert)")
+        e2d = [int(x) for x in np.asarray(expert_to_device).tolist()]
+        n_e = len(self.assignment)
+        if sorted(e2d) != list(range(n_e)):
+            raise ValueError(
+                f"expert_to_device {e2d} is not a permutation of "
+                f"0..{n_e - 1} — exclusive assignment places one expert "
+                "per device")
+        if e2d == self.assignment:
+            return
+        if self.model.pc.moe_replication is not None:
+            raise ValueError(
+                "cannot re-seat an expert assignment while replicas are "
+                "live — adopt_replication(None) first (the replicated "
+                "leaves are in the widened physical frame)")
+        old_pair = inverse_pair(self.assignment)   # device slot -> expert
+        new_pair = inverse_pair(e2d)
+        self.params = reseat_pairing(self.params, old_pair, new_pair,
+                                     self.model.cfg)
+        self.assignment = e2d
+        if self.monitor is not None:
+            self.monitor.slot_to_expert = new_pair
+
     def adopt(self, plan) -> None:
         """Unified adoption surface (one verb across every engine): take
         whatever placement evidence the caller has and re-realize it
-        placement-only, mid-stream. For the single-model engine that is
-        hot-expert replication: a full planner ``Plan`` (its
-        ``.replication`` host map), a bare per-expert host-map/copy-count
-        sequence, or ``None`` to drop back to unreplicated serving. The
-        colocated/multi-tenant engines extend this verb to pairing/grouping,
-        the distributed engines to Aurora round refresh."""
-        rep = plan.replication if hasattr(plan, "schedules") else plan
-        self.adopt_replication(rep)
+        placement-only, mid-stream. For the single-model engine that is a
+        full exclusive-scenario ``Plan`` (its ``.expert_to_device``
+        assignment and/or ``.replication`` host map), a bare per-expert
+        host-map/copy-count sequence, or ``None`` to drop back to
+        unreplicated serving. The colocated/multi-tenant engines extend
+        this verb to pairing/grouping, the distributed engines to Aurora
+        round refresh."""
+        if not hasattr(plan, "schedules"):
+            self.adopt_replication(plan)
+            return
+        if (plan.pair is None and plan.groups is None
+                and plan.replication is None and self.assignment is not None
+                and len(plan.expert_to_device) == len(self.assignment)):
+            self.adopt_assignment(plan.expert_to_device)
+        self.adopt_replication(plan.replication)
 
     # -- scheduler ---------------------------------------------------------
     @property
@@ -386,6 +455,13 @@ class ContinuousEngine:
                 "chunked (MLA / encoder-decoder, or a prompt that WRAPS "
                 "the sliding-window ring — prompts inside the ring chunk "
                 "fine) — use prefill_chunk=None for this engine")
+        if req.deadline is None:
+            # Per-request deadlines default from the tenant's SLO target
+            # (TenantSpec.ttft_p95); no tenant or no target = no deadline.
+            req.deadline = (self.tenant_spec.deadline(req.arrival)
+                            if self.tenant_spec is not None else math.inf)
+        if req.tenant is None and self.tenant_spec is not None:
+            req.tenant = self.tenant_spec.name
         self.queue.append(req)
 
     def _bucket(self, n: int) -> int:
@@ -417,6 +493,42 @@ class ContinuousEngine:
                 return i
         return None
 
+    def _spec(self, r: Request, chunk: int) -> RequestSpec:
+        """The admission policy's view of one pending request."""
+        return RequestSpec(
+            chunk=int(chunk), prompt_len=len(r.prompt), arrival=r.arrival,
+            deadline=math.inf if r.deadline is None else r.deadline,
+            tenant=r.tenant)
+
+    @staticmethod
+    def _check_selection(order, n: int) -> list[int]:
+        """Sanitize a policy's select()/order() result: indices must be
+        unique and in range (a buggy policy would otherwise run the same
+        chunk twice against the donated cache)."""
+        idx = [int(i) for i in order]
+        if len(set(idx)) != len(idx) or any(not 0 <= i < n for i in idx):
+            raise ValueError(
+                f"admission policy returned invalid indices {idx} for "
+                f"{n} pending requests (need unique ints in range)")
+        return idx
+
+    def _pop_queue(self) -> Request:
+        """Next queued request per the policy's queue discipline
+        (``order`` — FIFO for the stock policies, earliest effective
+        deadline for ``EdfAdmission``)."""
+        if len(self.queue) > 1:
+            specs = [self._spec(r, min(self.prefill_chunk
+                                       or self._bucket(len(r.prompt)),
+                                       self._bucket(len(r.prompt))))
+                     for r in self.queue]
+            order = self._check_selection(self.admission.order(specs),
+                                          len(specs))
+            if order:
+                r = self.queue[order[0]]
+                del self.queue[order[0]]
+                return r
+        return self.queue.popleft()
+
     def _finish_admission(self, r: Request, slot: int, logits) -> None:
         """Shared tail of one-shot and chunked admission: emit the first
         token and occupy the slot (unless the request is already done)."""
@@ -428,10 +540,11 @@ class ContinuousEngine:
             self.tokens = self.tokens.at[slot, 0].set(tok0)
 
     def _admit(self) -> None:
-        """Drain the queue into free slots (one-shot per-slot prefill each)."""
+        """Drain the queue into free slots (one-shot per-slot prefill each,
+        in the policy's queue order)."""
         while self.queue and None in self.slots:
             slot = self.slots.index(None)
-            r = self.queue.popleft()
+            r = self._pop_queue()
             p = self._bucket(len(r.prompt))
             toks = np.zeros((1, p), np.int32)
             toks[0, p - len(r.prompt):] = r.prompt      # left-pad with 0
@@ -456,8 +569,9 @@ class ContinuousEngine:
         return self._prefill_tick()
 
     def _start_pending(self, slot: int) -> None:
-        """Pop the queue head into a reserved slot as an in-flight prefill."""
-        r = self.queue.popleft()
+        """Pop the policy's next queued request into a reserved slot as an
+        in-flight prefill."""
+        r = self._pop_queue()
         p = self._bucket(len(r.prompt))
         toks = np.zeros((1, p), np.int32)
         toks[0, p - len(r.prompt):] = r.prompt          # left-pad with 0
@@ -482,7 +596,7 @@ class ContinuousEngine:
         # guaranteed: decode drains slots, so num_active falls and the
         # leftover eventually covers a chunk (or the pool empties and the
         # budget gate is bypassed entirely).
-        if self.admission.chunk_budget(self.num_active, [c]) < 1:
+        if not self.admission.select(self.num_active, [self._spec(r, c)]):
             return False
         chunk_toks = {"tokens": jnp.asarray(toks[:, done:done + c])}
         # The first chunk starts the slot from a fresh zero state (no
@@ -512,11 +626,13 @@ class ContinuousEngine:
         ``fuse_decode`` is set and slots are occupied, the decode step — as
         ONE jitted program against the shared cache.
 
-        FIFO discipline throughout (the pool tops up in arrival order and
-        the policy admits a prefix), so emitted token streams are identical
-        to serialized admission; only the schedule changes. Bookkeeping
-        order matters: ``_postdecode`` replaces ``self.tokens`` wholesale
-        with this step's argmax, so it must land BEFORE
+        The pool tops up in the policy's queue order and the policy's
+        ``select`` picks which due chunks run (the stock policies admit a
+        FIFO prefix; deadline policies reorder) — either way emitted token
+        streams are identical to serialized admission, since each request's
+        tokens depend only on its own slot rows; only the schedule changes.
+        Bookkeeping order matters: ``_postdecode`` replaces ``self.tokens``
+        wholesale with this step's argmax, so it must land BEFORE
         ``_finish_admission`` writes a freshly admitted slot's first token.
         """
         while len(self._pending) < self._pool_size and self.queue:
@@ -526,14 +642,17 @@ class ContinuousEngine:
             self._start_pending(slot)
         chunks = [min(self.prefill_chunk, p[2].shape[1] - p[3])
                   for p in self._pending]
-        k = min(self.admission.chunk_budget(self.num_active, chunks),
-                len(chunks))
+        specs = [self._spec(p[0], c)
+                 for p, c in zip(self._pending, chunks)]
+        picked = self._check_selection(
+            self.admission.select(self.num_active, specs), len(specs))
         decode = fuse_decode and self.num_active > 0
-        if k == 0 and not decode:
+        if not picked and not decode:
             return False
-        sel = self._pending[:k]
+        sel = [self._pending[i] for i in picked]
+        sel_chunks = [chunks[i] for i in picked]
         toks = tuple({"tokens": jnp.asarray(p[2][:, p[3]:p[3] + c])}
-                     for p, c in zip(sel, chunks))
+                     for p, c in zip(sel, sel_chunks))
         slot_ids = tuple(jnp.int32(p[1]) for p in sel)
         firsts = tuple(p[3] == 0 for p in sel)
         mask = np.array([r is not None for r in self.slots], bool)
@@ -547,7 +666,7 @@ class ContinuousEngine:
             self.decode_steps += 1
             self._postdecode(dlogits)
         finished = []
-        for p, c, (logits, pstats) in zip(sel, chunks, chunk_out):
+        for p, c, (logits, pstats) in zip(sel, sel_chunks, chunk_out):
             r, slot, tk, done = p
             if self.monitor is not None:
                 self._observe_prefill(

@@ -177,6 +177,9 @@ class ReplanEvent:
     # Replication events carry the candidate host map (replication[e] =
     # devices hosting expert e, home first); None for pairing/grouping.
     replication: tuple[tuple[int, ...], ...] | None = None
+    # Exclusive re-assignment events carry the candidate expert→device map
+    # (scenario 2); None for pairing/grouping/replication events.
+    assignment: tuple[int, ...] | None = None
 
 
 class OnlineReplanner:
@@ -196,7 +199,8 @@ class OnlineReplanner:
                  baseline_pair: list[int] | None = None,
                  baseline_groups: list[tuple[int, ...]] | None = None,
                  predictive: bool = False,
-                 baseline_replication=None):
+                 baseline_replication=None,
+                 baseline_assignment=None):
         if interval <= 0:
             raise ValueError("interval must be positive")
         self.planner = planner
@@ -222,6 +226,11 @@ class OnlineReplanner:
         self.baseline_replication = (
             None if baseline_replication is None
             else tuple(tuple(h) for h in baseline_replication))
+        # Frozen reference expert→device map for the exclusive
+        # re-assignment loop (scenario 2), scored at every checkpoint.
+        self.baseline_assignment = (
+            None if baseline_assignment is None
+            else [int(d) for d in baseline_assignment])
         self.events: list[ReplanEvent] = []
 
     def maybe_replan(self, step: int, monitor_a: TrafficMonitor,
@@ -252,6 +261,41 @@ class OnlineReplanner:
             pair=list(cand.pair), applied=apply, baseline_time=base_t))
         return cand if apply else None
 
+    def maybe_reassign(self, step: int, monitor: TrafficMonitor,
+                       current_assignment) -> Plan | None:
+        """Exclusive-deployment re-ASSIGNMENT (scenario 2): re-run Thm 5.1
+        on the live trace and compare against the CURRENT expert→device map
+        evaluated on the same trace. Returns the new plan to apply, or None
+        to keep. On homogeneous clusters ``plan_exclusive`` always returns
+        the identity map (observation 1: assignment is irrelevant there), so
+        this loop only ever fires on heterogeneous clusters."""
+        if step == 0 or step % self.interval:
+            return None
+        if monitor.observations < self.warmup:
+            return None
+        tr = monitor.trace(tokens_per_device=self.tokens_per_device)
+        cur = [int(d) for d in current_assignment]
+        stale = self.planner.evaluate_exclusive(tr, cur)
+        cand = self.planner.plan_exclusive(tr)
+        cand_e2d = [int(d) for d in cand.expert_to_device]
+        diff = PlanDiff(
+            pair_changed=False,
+            assignment_changed=cand_e2d != cur,
+            old_time=stale.inference_time,
+            new_time=cand.predicted.inference_time)
+        apply = (diff.assignment_changed
+                 and diff.rel_improvement > self.threshold)
+        base_t = None
+        if self.baseline_assignment is not None:
+            base_t = self.planner.evaluate_exclusive(
+                tr, self.baseline_assignment).inference_time
+        self.events.append(ReplanEvent(
+            step=step, stale_time=stale.inference_time,
+            candidate_time=cand.predicted.inference_time,
+            pair=[], applied=apply, baseline_time=base_t,
+            assignment=tuple(cand_e2d)))
+        return cand if apply else None
+
     def maybe_regroup(self, step: int, monitors: list[TrafficMonitor],
                       current_groups: list[tuple[int, ...]]) -> Plan | None:
         """N-tenant ``maybe_replan``: plan a fresh k-way grouping from the N
@@ -267,12 +311,28 @@ class OnlineReplanner:
         stale = self.planner.evaluate_multi(traces, cur)
         cand = self.planner.plan_multi(traces)
         cand_groups = [tuple(g) for g in cand.groups]
-        # Score the candidate under the IDENTITY slot->device assignment —
-        # what the engine actually realizes (re-grouping is placement-only;
-        # it never re-matches groups to devices). On homogeneous clusters
-        # this equals cand.predicted; on heterogeneous ones cand.predicted
-        # includes an unapplied device re-matching and would let phantom
-        # improvement defeat the hysteresis.
+        n = len(cand_groups)
+        s2d = np.asarray(cand.expert_to_device)
+        if not np.array_equal(s2d, np.arange(n)):
+            # Heterogeneous plan: §7.2's group↔device matching says group k
+            # belongs on device s2d[k]. The engine's slots ARE devices
+            # (identity frame), so REALIZE the matching as a row
+            # permutation — the group matched to device d moves to slot d —
+            # and hand the engine an identity-assignment plan. The
+            # re-matching becomes part of the same placement-only reseat
+            # (every tenant's column is still a permutation), so its gains
+            # are real, not phantom, and token identity is untouched.
+            inv = np.empty(n, dtype=int)
+            inv[s2d] = np.arange(n)
+            cand_groups = [cand_groups[int(inv[d])] for d in range(n)]
+            cand = dataclasses.replace(
+                cand, expert_to_device=np.arange(n),
+                groups=tuple(cand_groups),
+                pair=([g[1] for g in cand_groups]
+                      if cand.pair is not None else None))
+        # Score the candidate exactly as the engine will realize it:
+        # identity slot->device over the (possibly re-matched) groups. On
+        # homogeneous clusters this equals cand.predicted.
         cand_time = self.planner.evaluate_multi(
             traces, cand_groups).inference_time
         diff = PlanDiff(

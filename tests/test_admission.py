@@ -6,18 +6,20 @@ SCHEDULE and MEMBERSHIP changes — byte-identical token streams for every
 request (pool) and every surviving tenant (churn)."""
 
 import dataclasses
+import math
 
 import jax
 import numpy as np
 import pytest
+from _propcheck import given, settings, st  # hypothesis if installed
 
 from repro.configs import get_config
 from repro.models import Model
 from repro.serving import (ColocatedContinuousEngine, ContinuousEngine,
-                           EngineConfig, FifoAdmission,
+                           EdfAdmission, EngineConfig, FifoAdmission,
                            LengthBucketedAdmission,
-                           MultiTenantContinuousEngine, Request,
-                           TokenBudgetAdmission, apply_pairing,
+                           MultiTenantContinuousEngine, Request, RequestSpec,
+                           TenantSpec, TokenBudgetAdmission, apply_pairing,
                            reseat_pairing)
 
 
@@ -69,17 +71,136 @@ def test_engine_config_resolves_admission():
     assert EngineConfig(admission=custom).resolve_admission() is custom
 
 
+def _specs(*chunks):
+    return [RequestSpec(chunk=c) for c in chunks]
+
+
 def test_admission_policy_budgets():
     fifo = FifoAdmission()
     assert fifo.chunk is None and fifo.budget is None
-    assert fifo.chunk_budget(3, [1, 2]) == 2       # no budget: admit all
+    assert fifo.select(3, _specs(1, 2)) == (0, 1)  # no budget: admit all
     tb = TokenBudgetAdmission(chunk=4, budget=9)
     # 2 active decode rows leave 7 tokens: one 4-chunk + one 3-chunk fit,
     # the next 4-chunk does not (greedy FIFO prefix, no reordering).
-    assert tb.chunk_budget(2, [4, 3, 4]) == 2
+    assert tb.select(2, _specs(4, 3, 4)) == (0, 1)
     # An idle engine bypasses the budget — nothing is decoding, so there
     # is nothing to protect (the progress guarantee).
-    assert tb.chunk_budget(0, [99]) == 1
+    assert tb.select(0, _specs(99)) == (0,)
+
+
+def test_chunk_budget_deprecation_shim():
+    """The old int-based signature answers through the shim — one
+    DeprecationWarning, same prefix counts as before the redesign — both
+    on the stock policies and for legacy policies wrapped into select."""
+    tb = TokenBudgetAdmission(chunk=4, budget=9)
+    with pytest.warns(DeprecationWarning, match="select"):
+        assert tb.chunk_budget(2, [4, 3, 4]) == 2
+    with pytest.warns(DeprecationWarning, match="select"):
+        assert FifoAdmission().chunk_budget(3, [1, 2]) == 2
+
+    class OldPolicy:                      # pre-select third-party policy
+        chunk, budget = 4, 9
+        bucket_policy = "pow2"
+
+        def pad(self, n):
+            return n
+
+        def chunk_budget(self, num_active, chunks):
+            return 1 if chunks else 0
+
+    with pytest.warns(DeprecationWarning, match="chunk_budget") as rec:
+        shim = EngineConfig(admission=OldPolicy()).resolve_admission()
+    assert len([w for w in rec
+                if issubclass(w.category, DeprecationWarning)]) == 1
+    assert shim.select(2, _specs(4, 4)) == (0,)
+    assert shim.order(_specs(4, 4)) == (0, 1)
+    assert shim.chunk == 4 and shim.budget == 9
+    with pytest.raises(TypeError, match="admission"):
+        EngineConfig(admission=object()).resolve_admission()
+
+
+def test_edf_admission_policy():
+    """EDF ranks by effective deadline min(deadline, arrival + age_limit)
+    and admits work-conservingly under the budget."""
+    edf = EdfAdmission(chunk=4, budget=9)
+    specs = [RequestSpec(4, arrival=0.0, deadline=50.0),
+             RequestSpec(3, arrival=1.0, deadline=5.0),
+             RequestSpec(4, arrival=2.0, deadline=10.0)]
+    # Deadline order is (1, 2, 0); 2 decode rows leave 7 tokens: the
+    # 3-chunk and one 4-chunk fit, the last 4-chunk is SKIPPED, not
+    # blocking (work conservation).
+    assert edf.select(2, specs) == (1, 2)
+    assert edf.order(specs) == (1, 2, 0)
+    # Aging: a deadline-free request is treated as due age_limit after
+    # arrival, so it cannot starve behind later tight deadlines.
+    aged = EdfAdmission(chunk=4, budget=100, age_limit=10.0)
+    s = [RequestSpec(4, arrival=0.0),                    # due at 10
+         RequestSpec(4, arrival=9.0, deadline=12.0)]
+    assert aged.order(s) == (0, 1)
+    assert edf.select(0, specs) == (1, 2, 0)   # idle bypass, EDF order
+    with pytest.raises(ValueError, match="age_limit"):
+        EdfAdmission(chunk=4, age_limit=0.0)
+
+
+def _edf_cases():
+    """(num_active, budget, specs): random deadline streams, some requests
+    deadline-free (math.inf exercises the aging path)."""
+    def build(seed):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 9))
+        specs = [RequestSpec(
+            chunk=int(rng.integers(1, 7)),
+            arrival=float(rng.uniform(0, 32)),
+            deadline=(math.inf if rng.random() < 0.3
+                      else float(rng.uniform(0, 64))))
+            for _ in range(n)]
+        return int(rng.integers(1, 7)), int(rng.integers(1, 13)), specs
+    return st.integers(0, 10_000).map(build)
+
+
+@settings(max_examples=80, deadline=None)
+@given(_edf_cases())
+def test_edf_select_work_conserving_property(case):
+    """For EVERY deadline stream: the selection is a subsequence of the
+    effective-deadline ranking, spends within the budget, and is
+    work-conserving — no skipped chunk would still fit the leftover."""
+    num_active, budget, specs = case
+    edf = EdfAdmission(chunk=4, budget=budget, age_limit=16.0)
+    sel = edf.select(num_active, specs)
+    assert len(set(sel)) == len(sel)
+    ranked = edf.order(specs)
+    assert tuple(i for i in ranked if i in set(sel)) == sel, \
+        "selection must keep effective-deadline order"
+    if num_active == 0:
+        assert sel == ranked                    # idle bypass: admit all
+        return
+    spent = sum(specs[i].chunk for i in sel)
+    assert num_active + spent <= max(budget, num_active)
+    leftover = budget - num_active - spent
+    for i in set(range(len(specs))) - set(sel):
+        assert specs[i].chunk > leftover, \
+            f"req {i} fits the leftover budget but was not admitted"
+
+
+def test_edf_reordering_is_placement_only():
+    """Single tenant, uniform SLO: every effective deadline is
+    arrival + const, so EDF degenerates to FIFO — byte-identical tokens
+    AND identical schedule to the FIFO token-budget policy."""
+    cfg, model, params = _model()
+    spec = TenantSpec(name="t", ttft_p95=20.0, tpot_p95=4.0)
+    fifo = ContinuousEngine(
+        model, params, 3, 32,
+        config=EngineConfig(admission=TokenBudgetAdmission(chunk=4,
+                                                           budget=9)))
+    ref = fifo.serve(_requests(vocab=cfg.vocab))
+    edf = ContinuousEngine(
+        model, params, 3, 32,
+        config=EngineConfig(admission=EdfAdmission(chunk=4, budget=9),
+                            tenants=(spec,)))
+    out = edf.serve(_requests(vocab=cfg.vocab))
+    assert [r.out_tokens for r in ref] == [r.out_tokens for r in out]
+    assert all(r.deadline == r.arrival + 20.0 for r in out), \
+        "TenantSpec SLO must stamp each request's deadline"
 
 
 # -- legacy-kwarg shims -----------------------------------------------------

@@ -6,12 +6,13 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core import (AuroraPlanner, diff_plans, homogeneous_cluster,
-                        synthetic_trace, trace_from_counts)
+from repro.core import (AuroraPlanner, diff_plans, heterogeneous_cluster,
+                        homogeneous_cluster, synthetic_trace,
+                        trace_from_counts)
 from repro.models import Model
 from repro.serving import (ColocatedContinuousEngine, ContinuousEngine,
                            EngineConfig, OnlineReplanner, Request,
-                           TrafficMonitor)
+                           TrafficMonitor, inverse_pair)
 
 
 def _model(arch, seed=0):
@@ -144,6 +145,41 @@ def test_replan_never_changes_tokens():
     applied = [e for e in eng.replan_events if e.applied]
     assert applied, "forced re-planning never fired"
     assert eng.pair == applied[-1].pair
+
+
+def test_reassign_never_changes_tokens():
+    """Scenario 2 (exclusive + heterogeneous) re-assignment end to end: a
+    monitored stream with forced ``maybe_reassign`` adoptions emits exactly
+    the tokens of a run that never re-seats — the Thm 5.1 expert<->GPU move
+    is placement-only — and the monitor's stats frame follows the seats."""
+    cfg, model, params = _model("phi3.5-moe-42b-a6.6b")
+    n = cfg.moe.n_experts
+    mk = lambda: _requests(6, seed=7)
+    ref = ContinuousEngine(model, params, 2, 48,
+                           config=EngineConfig(prefill_chunk=2)).serve(mk())
+
+    mon = TrafficMonitor(n, model.n_moe_layers)
+    # threshold < 0 adopts EVERY candidate whose assignment differs — the
+    # most re-seating the loop can produce, the strongest invariant check.
+    rp = OnlineReplanner(AuroraPlanner(heterogeneous_cluster(n)),
+                         interval=2, threshold=-1.0, warmup=1)
+    eng = ContinuousEngine(model, params, 2, 48,
+                           config=EngineConfig(prefill_chunk=2),
+                           monitor=mon)
+    reqs = mk()
+    for r in reqs:
+        eng.submit(r)
+    step = 0
+    while eng.step():
+        step += 1
+        plan = rp.maybe_reassign(step, mon, eng.assignment)
+        if plan is not None:
+            eng.adopt(plan)
+    assert [r.out_tokens for r in reqs] == [r.out_tokens for r in ref]
+    applied = [e for e in rp.events if e.applied]
+    assert applied, "forced re-assignment never fired"
+    assert tuple(eng.assignment) == applied[-1].assignment
+    assert mon.slot_to_expert == inverse_pair(eng.assignment)
 
 
 def test_replan_hysteresis_keeps_plan():
