@@ -124,6 +124,25 @@ METRICS = [
          lambda r, c=cell: _get(r, f"sweep.scenarios.{c}.tok_per_s"),
          True, False),
     ]
+] + [
+    # Chaos section: the hard gates (both faults detected, lossless
+    # byte-identical recovery, typed shed reasons, admitted-TTFT bound) live
+    # in the section's own "ok" — serving_bench exits non-zero when they
+    # fail, before compare.py ever runs. Here the shed leg's ADMITTED
+    # throughput is trend-gated (shedding must protect admitted work, so a
+    # drop means recovery or admission got slower); the mesh legs are
+    # informational (an 8-virtual-device subprocess on 2 runner cores is
+    # jitter-dominated, and its identity gate is the "ok").
+    ("chaos shed admitted tok/s", _tok_per_s("chaos", "shed.shed"),
+     True, True),
+    ("chaos mesh faulted tok/s",
+     lambda r: _get(r, "chaos.mesh.faulted.tok_per_s"), True, False),
+    ("chaos mesh clean tok/s",
+     lambda r: _get(r, "chaos.mesh.reference.tok_per_s"), True, False),
+    ("chaos shed admitted ttft p95 (steps)",
+     lambda r: _get(r, "chaos.shed.shed.ttft_p95_steps"), False, False),
+    ("chaos shed count",
+     lambda r: _get(r, "chaos.shed.shed.shed"), True, False),
 ]
 
 
@@ -132,8 +151,8 @@ METRICS = [
 # not know is a section whose metrics are silently ungated, which is exactly
 # the drift the gate exists to prevent — adding a bench section must come
 # with its METRICS entries (or an explicit KNOWN_SECTIONS listing).
-KNOWN_SECTIONS = {"admission", "continuous", "chunked", "drift", "kernels",
-                  "multi", "overlap", "skew", "sweep"}
+KNOWN_SECTIONS = {"admission", "chaos", "continuous", "chunked", "drift",
+                  "kernels", "multi", "overlap", "skew", "sweep"}
 
 
 def _section_rows(baseline: dict, new: dict):

@@ -8,6 +8,7 @@ multi-tenant colocation.
   PYTHONPATH=src python -m benchmarks.serving_bench --skew      # replication
   PYTHONPATH=src python -m benchmarks.serving_bench --multi     # N tenants
   PYTHONPATH=src python -m benchmarks.serving_bench --sweep     # 4 scenarios
+  PYTHONPATH=src python -m benchmarks.serving_bench --chaos     # faults
   PYTHONPATH=src python -m benchmarks.serving_bench --all --json BENCH_serving.json
 
 Each section is a pass/fail experiment:
@@ -66,6 +67,16 @@ Each section is a pass/fail experiment:
   targets. Per scenario: >= 1 live adoption, token streams byte-identical to
   a static leg, and step-clock p95 TTFT/TPOT SLO attainment reported as
   trend-gated metrics.
+* **chaos** — fault-tolerant serving (not part of ``--all``; it has a
+  dedicated CI step). Mesh leg (subprocess, 8 host devices): one stream
+  served clean and under a ``FaultPlan`` that NaN-corrupts an expert and
+  fail-stops a device mid-stream; the ``ChaosHarness`` must detect both
+  (health monitor), roll back + repair the corrupt step, re-queue the dead
+  device's work, adopt a survivor-only degraded plan, and finish with
+  BYTE-IDENTICAL token streams. Shed leg: a same-instant overload burst
+  under ``EdfAdmission(shed=True)`` must reject the provably-late tail
+  with typed reasons while the admitted requests' p95 TTFT stays within
+  the no-overload bound and none of them starve.
 
 Every section's JSON legs share one base schema (``_leg``): ``tokens``,
 ``wall_s``, ``tok_per_s``, plus section-specific extras — ``compare.py``
@@ -113,6 +124,68 @@ def _leg(tokens, wall_s, **extra):
            "tok_per_s": float(tokens / wall_s) if wall_s > 0 else 0.0}
     rec.update(extra)
     return rec
+
+
+def _worker_env(n_devices: int) -> dict:
+    """Environment for a subprocess bench worker that needs its own
+    host-platform device mesh (the main bench process must keep one device
+    so the other sections' timings do not change)."""
+    import os
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count"
+                          f"={n_devices}").strip()
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "src"),
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    return env
+
+
+def _run_worker(script: str, env: dict, name: str, sentinel: str,
+                timeout: float = 1200, retries: int = 1):
+    """Run a subprocess bench worker with a hard timeout and ``retries``
+    re-attempts (host-device mesh workers share oversubscribed CI cores —
+    a hung collective must fail the LEG with a clear message, not hang the
+    whole bench job). Returns ``(record, None)`` parsed from the worker's
+    ``sentinel``-prefixed JSON line, or ``(None, error_message)`` after the
+    final attempt."""
+    import subprocess
+    import sys
+
+    last = ""
+    for attempt in range(1, retries + 2):
+        tag = f"{name} worker (attempt {attempt}/{retries + 1})"
+        try:
+            out = subprocess.run([sys.executable, "-c", script], env=env,
+                                 capture_output=True, text=True,
+                                 timeout=timeout)
+        except subprocess.TimeoutExpired as e:
+            last = f"{tag} timed out after {timeout:g}s"
+            print(last)
+            tail = (e.stdout or b"")
+            if tail:
+                print(tail.decode(errors="replace")[-2000:]
+                      if isinstance(tail, bytes) else str(tail)[-2000:])
+            continue
+        if out.returncode != 0:
+            last = f"{tag} exited {out.returncode}"
+            print(last)
+            print(out.stdout[-2000:])
+            print(out.stderr[-2000:])
+            continue
+        line = next((ln for ln in out.stdout.splitlines()
+                     if ln.startswith(sentinel)), None)
+        if line is None:
+            last = (f"{tag} exited 0 but never printed its "
+                    f"'{sentinel.strip()}' result line")
+            print(last)
+            print(out.stdout[-2000:])
+            continue
+        return json.loads(line.split(" ", 1)[1]), None
+    return None, last
 
 
 def _timed_serve(eng, reqs):
@@ -643,31 +716,13 @@ def bench_overlap(n_devices=8, n_experts=32, d_model=64, d_ff=128,
     when compute and communication interleave); the recorded throughputs
     feed the CI trend table.
     """
-    import os
-    import subprocess
-    import sys
-
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
-                        + f" --xla_force_host_platform_device_count"
-                          f"={n_devices}").strip()
-    env.setdefault("JAX_PLATFORMS", "cpu")
-    env["PYTHONPATH"] = os.pathsep.join(
-        [os.path.join(os.path.dirname(os.path.dirname(
-            os.path.abspath(__file__))), "src"),
-         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
     script = _OVERLAP_WORKER.format(
         n_devices=n_devices, n_experts=n_experts, d_model=d_model,
         d_ff=d_ff, t_decode=t_decode, s_prefill=s_prefill, reps=reps)
-    out = subprocess.run([sys.executable, "-c", script], env=env,
-                         capture_output=True, text=True, timeout=1200)
-    if out.returncode != 0:
-        print(out.stdout)
-        print(out.stderr)
-        return {"ok": False, "error": "overlap worker failed"}
-    rec = json.loads(next(line for line in out.stdout.splitlines()
-                          if line.startswith("OVERLAP_JSON ")
-                          ).split(" ", 1)[1])
+    rec, err = _run_worker(script, _worker_env(n_devices), "overlap",
+                           "OVERLAP_JSON ", timeout=1200, retries=1)
+    if rec is None:
+        return {"ok": False, "error": err}
     print(f"== overlap bench: {n_experts} experts EP-sharded over "
           f"{rec['n_devices']} host devices, {rec['rounds']} BvN rounds ==")
     print(f"{'dispatch':<10} {'decode tok/s':>13} {'prefill tok/s':>14}")
@@ -1301,6 +1356,247 @@ def bench_sweep(arch="phi3.5-moe-42b-a6.6b", n_phase=10, batch_slots=2,
 
 
 # ---------------------------------------------------------------------------
+# Section 6: chaos — fault injection, failover, and shed-mode admission
+# ---------------------------------------------------------------------------
+
+_CHAOS_WORKER = """
+import dataclasses, json, time
+import numpy as np
+import jax
+from repro.configs import get_config
+from repro.core import AuroraPlanner, homogeneous_cluster, synthetic_trace
+from repro.launch.mesh import make_ep_mesh
+from repro.models import Model
+from repro.serving import (ChaosHarness, DeviceLoss, DistributedEngine,
+                           EngineConfig, ExpertCorruption, FaultInjector,
+                           FaultPlan, HealthMonitor, Request)
+
+n_dev = {n_devices}
+cfg = get_config("{arch}").reduced()
+cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+    cfg.moe, n_experts={n_experts}, capacity_factor=8.0))
+model = Model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+mesh = make_ep_mesh(n_dev)
+trace = synthetic_trace("live", n_experts={n_experts}, n_layers=cfg.n_layers,
+                        seed=0)
+planner = AuroraPlanner(homogeneous_cluster(n_dev))
+
+def stream():
+    rng = np.random.default_rng(0)
+    return [Request(prompt=[int(x) for x in rng.integers(1, cfg.vocab, 6)],
+                    max_new_tokens={max_new}, arrival=float(i))
+            for i in range({n_requests})]
+
+# Reference: the same stream with no faults.
+ref_eng = DistributedEngine(model, params, 2, 32, mesh=mesh,
+                            config=EngineConfig(prefill_len=8))
+t0 = time.perf_counter()
+ref = ref_eng.serve(stream())
+ref_wall = time.perf_counter() - t0
+out_ref = [r.out_tokens for r in ref]
+
+# Chaos: a device dies mid-stream AND an expert's weights corrupt; the
+# harness must detect both, roll back / repair the NaN step, re-queue the
+# lost device's work, and adopt a survivor-only degraded plan.
+plan = FaultPlan(faults=(ExpertCorruption(step={corrupt_step}, expert=1),
+                         DeviceLoss(step={kill_step}, device=n_dev - 3)),
+                 name="bench")
+inj = FaultInjector(plan, n_devices=n_dev,
+                    health=HealthMonitor(n_devices=n_dev,
+                                         heartbeat_timeout=2))
+eng = DistributedEngine(model, params, 2, 32, mesh=mesh,
+                        config=EngineConfig(prefill_len=8,
+                                            step_wrapper=inj.wrap))
+h = ChaosHarness(eng, inj, planner=planner, trace=trace)
+t0 = time.perf_counter()
+live = h.serve(stream())
+wall = time.perf_counter() - t0
+out = [r.out_tokens for r in live]
+
+kinds = sorted({{e.kind for e in h.health.events}})
+actions = sorted({{r["action"] for r in h.recoveries}})
+tokens = sum(len(t) for t in out)
+rec = {{
+    "n_devices": n_dev, "n_experts": {n_experts},
+    "survivors": eng.n_ep,
+    "detected": kinds, "recoveries": actions,
+    "reference": {{"tokens": sum(len(t) for t in out_ref),
+                  "wall_s": ref_wall,
+                  "tok_per_s": sum(len(t) for t in out_ref) / ref_wall}},
+    "faulted": {{"tokens": tokens, "wall_s": wall,
+                "tok_per_s": tokens / wall}},
+    "complete": all(len(r.out_tokens) == r.max_new_tokens for r in live),
+    "identical": out == out_ref,
+}}
+rec["ok"] = bool(
+    "device_loss" in kinds and "nan" in kinds
+    and rec["survivors"] < n_dev
+    and rec["complete"] and rec["identical"])
+print("CHAOS_JSON " + json.dumps(rec))
+"""
+
+
+def _shed_serve(eng, reqs):
+    """Step-clock driver that keeps shed requests out of the latency stats:
+    ``submit`` returning a ``ShedEvent`` marks the request rejected (it
+    never runs); TTFT is recorded per ADMITTED request in engine steps.
+    Returns ``(ttfts, admitted, shed, steps, wall_s)``."""
+    pend = sorted(reqs, key=lambda r: r.arrival)
+    t, i, steps = 0.0, 0, 0
+    first = {}
+    admitted, shed = [], []
+    t0 = time.perf_counter()
+    while i < len(pend) or eng.queue or eng.num_active or eng.num_pending:
+        while i < len(pend) and pend[i].arrival <= t:
+            ev = eng.submit(pend[i])
+            (shed if ev is not None else admitted).append(pend[i])
+            i += 1
+        busy = eng.step()
+        steps += 1
+        for r in admitted:
+            if r.out_tokens and id(r) not in first:
+                first[id(r)] = t
+        if not busy and i < len(pend):
+            t = max(t + 1.0, pend[i].arrival)
+        else:
+            t += 1.0
+    wall = time.perf_counter() - t0
+    ttfts = [first[id(r)] + 1.0 - r.arrival for r in admitted]
+    return ttfts, admitted, shed, steps, wall
+
+
+def bench_chaos(arch="phi3.5-moe-42b-a6.6b", n_devices=8, n_experts=8,
+                n_requests=8, max_new=5, corrupt_step=2, kill_step=3,
+                batch_slots=2, cache_cap=64, prompt_len=8, n_overload=12,
+                deadline_steps=2.0, slack=3.0, seed=0):
+    """Fault-tolerant serving: mid-stream failover and shed-mode admission.
+
+    Two legs, two failure regimes:
+
+    * **mesh** (subprocess, {n_devices}-way host-device EP mesh): one
+      stream served twice — clean, and with a ``FaultPlan`` that corrupts
+      an expert's weights at step ``corrupt_step`` and fail-stops a device
+      at step ``kill_step``. The ``ChaosHarness`` must DETECT both (NaN
+      guard + missing heartbeats), roll back and repair the corrupt step
+      from a replica/pristine copy, re-queue the lost device's work, and
+      adopt a survivor-only degraded plan (``plan_degraded`` →
+      ``adopt_degraded`` mesh rebuild). Gates: both fault kinds detected,
+      the engine finishes on fewer devices, every request completes, and
+      the token streams are BYTE-IDENTICAL to the clean run — recovery is
+      lossless.
+    * **shed** (main process): an overload burst — ``n_overload``
+      same-instant requests whose deadlines only ``deadline_steps`` steps
+      out are provably unattainable for the queue's tail. Three runs: a
+      no-overload reference (the SLO the admitted tail is held to), the
+      burst under plain EDF (every request admitted, the tail blows the
+      deadline), and the burst under ``EdfAdmission(shed=True)``. Gates:
+      sheds happen, every shed carries a typed reason, every ADMITTED
+      request still completes (shed never starves admitted work), and the
+      shed leg's admitted p95 TTFT stays within ``slack`` x the
+      no-overload reference on the deterministic step clock.
+    """
+    from repro.serving import (ContinuousEngine, EdfAdmission, EngineConfig,
+                               Request)
+
+    # -- mesh failover leg (subprocess: needs its own device mesh) ---------
+    script = _CHAOS_WORKER.format(
+        arch=arch, n_devices=n_devices, n_experts=n_experts,
+        n_requests=n_requests, max_new=max_new, corrupt_step=corrupt_step,
+        kill_step=kill_step)
+    mesh_rec, err = _run_worker(script, _worker_env(n_devices), "chaos",
+                                "CHAOS_JSON ", timeout=1200, retries=1)
+    if mesh_rec is None:
+        mesh_rec = {"ok": False, "error": err}
+    else:
+        print(f"== chaos mesh leg: {n_experts} experts EP-sharded over "
+              f"{n_devices} host devices; corrupt expert @ step "
+              f"{corrupt_step}, kill device @ step {kill_step} ==")
+        print(f"detected {mesh_rec['detected']}, recoveries "
+              f"{mesh_rec['recoveries']}, finished on "
+              f"{mesh_rec['survivors']}/{n_devices} devices")
+        print(f"{'leg':<10} {'tokens':>7} {'wall s':>8} {'tok/s':>9}")
+        for leg in ("reference", "faulted"):
+            r = mesh_rec[leg]
+            print(f"{leg:<10} {r['tokens']:>7} {r['wall_s']:>8.2f} "
+                  f"{r['tok_per_s']:>9.1f}")
+        print("token streams byte-identical across clean/chaos runs"
+              if mesh_rec["identical"] else
+              "FAIL: recovery changed emitted tokens")
+
+    # -- shed-mode admission leg (main process, step clock) ----------------
+    cfg, model, params = _build(arch, seed=seed)
+    rng = np.random.default_rng(seed)
+
+    def burst(n, spacing):
+        reqs = []
+        for i in range(n):
+            t = i * spacing
+            reqs.append(Request(
+                prompt=[int(x) for x in rng.integers(1, cfg.vocab,
+                                                     prompt_len)],
+                max_new_tokens=max_new, arrival=t,
+                deadline=t + deadline_steps))
+        return reqs
+
+    def admission(shed):
+        return EdfAdmission(chunk=prompt_len,
+                            budget=prompt_len + batch_slots, shed=shed,
+                            queue_cap=n_overload if shed else None)
+
+    def run(reqs, shed):
+        eng = ContinuousEngine(
+            model, params, batch_slots, cache_cap,
+            config=EngineConfig(admission=admission(shed),
+                                prefill_len=prompt_len))
+        ttfts, admitted, sheds, steps, wall = _shed_serve(eng, reqs)
+        tokens = sum(len(r.out_tokens) for r in admitted)
+        rec = _leg(tokens, wall, steps=steps,
+                   admitted=len(admitted), shed=len(sheds),
+                   ttft_p95_steps=float(np.percentile(ttfts, 95)))
+        return rec, admitted, eng.shed_events
+
+    # No-overload reference: the same request shape, arrivals spread out so
+    # the queue never backs up — its p95 TTFT is the SLO the shed leg's
+    # admitted tail is held to.
+    ref_rec, _, _ = run(burst(batch_slots * 2, spacing=4.0), shed=False)
+    noshed_rec, _, _ = run(burst(n_overload, spacing=0.0), shed=False)
+    shed_rec, shed_admitted, shed_events = run(burst(n_overload,
+                                                     spacing=0.0),
+                                               shed=True)
+    reasons_typed = all(
+        ev.reason.startswith(("deadline:", "queue_cap:"))
+        for ev in shed_events)
+    admitted_complete = all(len(r.out_tokens) == r.max_new_tokens
+                            for r in shed_admitted)
+    bound = ref_rec["ttft_p95_steps"] * slack
+    shed = {
+        "reference": ref_rec, "noshed": noshed_rec, "shed": shed_rec,
+        "ttft_bound_steps": bound,
+        "ok": bool(shed_rec["shed"] >= 1 and reasons_typed
+                   and admitted_complete
+                   and shed_rec["ttft_p95_steps"] <= bound),
+    }
+    print(f"== chaos shed leg: {n_overload}-request burst, deadlines "
+          f"{deadline_steps:g} steps out, EDF budget "
+          f"{prompt_len + batch_slots} ==")
+    print(f"{'leg':<10} {'admit':>6} {'shed':>5} {'ttft p95':>9} "
+          f"{'tok/s':>8}")
+    for name, r in (("reference", ref_rec), ("noshed", noshed_rec),
+                    ("shed", shed_rec)):
+        print(f"{name:<10} {r['admitted']:>6} {r['shed']:>5} "
+              f"{r['ttft_p95_steps']:>9.1f} {r['tok_per_s']:>8.1f}")
+    for ev in shed_events[:3]:
+        print(f"  shed[{ev.tenant}@{ev.arrival:g}]: {ev.reason}")
+    print(f"admitted p95 TTFT {shed_rec['ttft_p95_steps']:.1f} steps vs "
+          f"bound {bound:.1f} ({slack:g}x no-overload reference); "
+          f"{shed_rec['shed']} shed, all admitted completed")
+
+    return {"mesh": mesh_rec, "shed": shed,
+            "ok": bool(mesh_rec.get("ok") and shed["ok"])}
+
+
+# ---------------------------------------------------------------------------
 # Driver
 # ---------------------------------------------------------------------------
 
@@ -1334,8 +1630,14 @@ def main() -> int:
                     help="run the four-scenario SLO sweep (one stream "
                          "through exclusive/colocated x homo/hetero; not "
                          "part of --all — it has its own CI step)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the fault-tolerance section: mid-stream "
+                         "device kill + expert corruption with lossless "
+                         "failover (subprocess mesh) and shed-mode EDF "
+                         "under an overload burst; not part of --all — it "
+                         "has its own CI step")
     ap.add_argument("--all", action="store_true",
-                    help="run every section (except --sweep)")
+                    help="run every section (except --sweep and --chaos)")
     ap.add_argument("--small", action="store_true",
                     help="CI smoke sizes (fewer/shorter requests)")
     ap.add_argument("--json", default=None,
@@ -1346,7 +1648,7 @@ def main() -> int:
     run_classic = args.all or not (args.chunked or args.drift or args.multi
                                    or args.kernels or args.overlap
                                    or args.skew or args.admission
-                                   or args.sweep)
+                                   or args.sweep or args.chaos)
     run_chunked = args.all or args.chunked or args.drift
     run_admission = args.all or args.admission
     run_drift = args.all or args.drift
@@ -1413,6 +1715,13 @@ def main() -> int:
         # baseline-gated CI step.
         kw = (dict(n_phase=6, max_new=4) if args.small else {})
         sections["sweep"] = bench_sweep(arch=args.moe_arch, seed=args.seed,
+                                        **kw)
+    if args.chaos:
+        # Deliberately outside --all (like --sweep): the mesh leg spawns an
+        # 8-device subprocess and its recovery gates get their own CI step.
+        kw = (dict(n_requests=6, max_new=4, n_overload=10)
+              if args.small else {})
+        sections["chaos"] = bench_chaos(arch=args.moe_arch, seed=args.seed,
                                         **kw)
 
     if args.json:

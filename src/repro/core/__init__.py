@@ -14,11 +14,14 @@ The paper's contribution as a composable library:
 
 from .cluster import (Cluster, DeviceType, heterogeneous_cluster,
                       homogeneous_cluster, PAPER_HET_TIERS)
+from .errors import FaultError, PlanError
 from .traffic import (MoETrace, add_noise, b_max_heterogeneous,
-                      b_max_homogeneous, identity_replication,
-                      paper_eval_traces, replicated_ffn_loads,
-                      replicated_traffic, synthetic_trace, trace_from_counts,
-                      traffic_from_routing, validate_replication)
+                      b_max_homogeneous, degraded_ffn_loads, degraded_traffic,
+                      identity_replication, paper_eval_traces,
+                      replicated_ffn_loads, replicated_traffic,
+                      synthetic_trace, trace_from_counts,
+                      traffic_from_routing, validate_degraded_hosts,
+                      validate_replication)
 from .schedule import (CommSchedule, Slot, aurora_schedule, comm_time,
                        fluid_comm_time, rcs_order, sjf_order)
 from .matching import bottleneck_perfect_matching, hopcroft_karp
@@ -29,8 +32,8 @@ from .colocation import (aggregate_traffic, aggregate_traffic_multi,
                          case2_pairing, group_pairs, lina_packing,
                          random_grouping, random_pairing)
 from .simulator import (SimResult, colocated_inference_time,
-                        exclusive_inference_time, lina_inference_time,
-                        multi_colocated_inference_time,
+                        degraded_inference_time, exclusive_inference_time,
+                        lina_inference_time, multi_colocated_inference_time,
                         replicated_inference_time)
 from .planner import AuroraPlanner, Plan, PlanDiff, diff_plans
 from .bruteforce import bruteforce_colocated, bruteforce_exclusive
@@ -51,6 +54,8 @@ __all__ = [
     "lina_inference_time", "multi_colocated_inference_time",
     "replicated_inference_time", "identity_replication",
     "replicated_ffn_loads", "replicated_traffic", "validate_replication",
+    "degraded_inference_time", "degraded_ffn_loads", "degraded_traffic",
+    "validate_degraded_hosts", "FaultError", "PlanError",
     "AuroraPlanner", "Plan", "PlanDiff", "diff_plans",
     "bruteforce_colocated", "bruteforce_exclusive",
 ]

@@ -86,6 +86,19 @@ class Cluster:
             reverse=True,
         )
 
+    def subcluster(self, indices: Sequence[int]) -> "Cluster":
+        """Survivor view for degraded re-planning: the same physical devices
+        re-indexed 0..k-1 in the given order. ``indices`` are positions into
+        this cluster; duplicates and out-of-range entries are rejected."""
+        idx = [int(i) for i in indices]
+        if len(set(idx)) != len(idx):
+            raise ValueError(f"subcluster indices contain duplicates: {idx}")
+        for i in idx:
+            if not 0 <= i < self.n:
+                raise ValueError(
+                    f"subcluster index {i} out of range for {self.n} devices")
+        return Cluster(devices=tuple(self.devices[i] for i in idx))
+
 
 def homogeneous_cluster(n: int, device: DeviceType = V100G) -> Cluster:
     return Cluster(devices=(device,) * n)

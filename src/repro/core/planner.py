@@ -25,14 +25,16 @@ from .assignment import aurora_assignment, expert_loads
 from .cluster import Cluster
 from .colocation import (aurora_grouping, aurora_pairing, aggregate_traffic,
                          aggregate_traffic_multi, case2_pairing, group_pairs)
+from .errors import FaultError
 from .matching import bottleneck_perfect_matching
 from .schedule import CommSchedule, aurora_schedule
 from .simulator import (SimResult, colocated_inference_time,
-                        exclusive_inference_time,
+                        degraded_inference_time, exclusive_inference_time,
                         multi_colocated_inference_time,
                         replicated_inference_time)
-from .traffic import (MoETrace, replicated_ffn_loads, replicated_traffic,
-                      validate_replication)
+from .traffic import (MoETrace, degraded_traffic, identity_replication,
+                      replicated_ffn_loads, replicated_traffic,
+                      validate_degraded_hosts, validate_replication)
 from .assignment import apply_assignment
 
 
@@ -53,6 +55,13 @@ class Plan:
     # deployment data — the routed function never changes. None = no
     # replication (every expert only on its home device).
     replication: tuple[tuple[int, ...], ...] | None = None
+    # Degraded plans (scenario "degraded+..."): survivors[j] is the ORIGINAL
+    # cluster index of survivor j — every other per-device field of this
+    # plan (expert_to_device, replication hosts, schedules) is expressed in
+    # the 0..len(survivors)-1 survivor frame, and replication hosts need not
+    # start with the expert's own index (the expert↔device bijection died
+    # with the failed devices). None = healthy plan in the original frame.
+    survivors: tuple[int, ...] | None = None
 
     @property
     def replication_counts(self) -> tuple[int, ...] | None:
@@ -292,6 +301,121 @@ class AuroraPlanner:
         pred = self.evaluate_replicated(trace, rep)
         return Plan("exclusive+homogeneous+replicated", np.arange(n), None,
                     schedules, pred, replication=rep)
+
+    # -- degraded re-planning (fail-stop device loss) ------------------------
+    def plan_degraded(self, trace: MoETrace, failed_devices,
+                      replication=None, ep_compatible: bool = False,
+                      total_multiple: int | None = None) -> Plan:
+        """Survivor-only plan after fail-stop device loss.
+
+        ``failed_devices`` are original cluster indices now gone. Failover
+        is two-tier: experts with a surviving replica (``replication`` is
+        the healthy plan's host map, identity when None) keep their
+        surviving copies — lossless, only the shard-of-token split widens
+        back to fewer copies — while experts whose every host died are
+        re-homed greedily onto the least-loaded survivor (load measured in
+        FFN time, so slow devices attract less on heterogeneous clusters).
+        Schedules and the predicted time come from the survivor-frame
+        traffic (``degraded_traffic`` / ``degraded_inference_time``).
+
+        ``ep_compatible=True`` restricts the plan to the fastest survivor
+        subset whose size divides the expert count (EP sharding needs
+        experts-per-device integral) and pads total replica count to a
+        multiple of it, so distributed engines can adopt the plan on a
+        shrunken mesh. ``total_multiple`` overrides the padding multiple.
+
+        Raises ``FaultError`` when no device survives, when a failed index
+        is out of range, or when padding is impossible.
+        """
+        cl = self.cluster
+        n = trace.n
+        if cl.n != n:
+            raise FaultError(
+                f"plan_degraded plans from the healthy one-device-per-expert "
+                f"frame: cluster has {cl.n} devices for {n} experts")
+        failed = sorted({int(d) for d in failed_devices})
+        for d in failed:
+            if not 0 <= d < n:
+                raise FaultError(f"failed device {d} out of range({n})")
+        alive = [d for d in range(n) if d not in failed]
+        if not alive:
+            raise FaultError("no surviving devices to re-plan onto")
+        if ep_compatible:
+            k = max(s for s in range(1, len(alive) + 1) if n % s == 0)
+            order = [d for d in cl.sorted_indices_by_performance()
+                     if d in alive]
+            chosen = sorted(order[:k])
+        else:
+            chosen = alive
+        k = len(chosen)
+        surv = cl.subcluster(chosen)
+        pos = {d: j for j, d in enumerate(chosen)}
+
+        rep = (identity_replication(n) if replication is None
+               else validate_replication(replication, n))
+        mean_d = np.mean([trace.layer(l) for l in range(len(trace.layers))],
+                         axis=0)
+        col = mean_d.sum(axis=0)
+        comp = np.asarray(surv.computes, float)
+
+        hosts: list[list[int]] = [
+            [pos[d] for d in rep[e] if d in pos] for e in range(n)]
+        loads = np.zeros(k)
+        for e in range(n):
+            if hosts[e]:
+                for h in hosts[e]:
+                    loads[h] += col[e] / len(hosts[e])
+        # Re-home orphaned experts, hottest first, onto the least-loaded
+        # survivor (in time units — heterogeneous survivors differ).
+        orphans = [e for e in range(n) if not hosts[e]]
+        for e in sorted(orphans, key=lambda e: -col[e]):
+            h = int(np.argmin(loads / comp))
+            hosts[e] = [h]
+            loads[h] += col[e]
+
+        multiple = total_multiple if total_multiple is not None else (
+            k if ep_compatible else None)
+        if multiple:
+            while sum(len(h) for h in hosts) % multiple:
+                cand = None
+                for e in np.argsort(-col / [len(h) for h in hosts]):
+                    free = [j for j in np.argsort(loads / comp)
+                            if j not in hosts[e]]
+                    if free:
+                        cand = (int(e), int(free[0]))
+                        break
+                if cand is None:
+                    raise FaultError(
+                        f"cannot pad degraded replication to a multiple of "
+                        f"{multiple}: every expert is on every survivor")
+                e, h = cand
+                share_old = col[e] / len(hosts[e])
+                for j in hosts[e]:
+                    loads[j] -= share_old
+                hosts[e].append(h)
+                share_new = col[e] / len(hosts[e])
+                for j in hosts[e]:
+                    loads[j] += share_new
+
+        host_map = validate_degraded_hosts([tuple(h) for h in hosts], n, k)
+        # Failed devices' token streams land round-robin on survivors.
+        sources = [pos[i] if i in pos else pos[chosen[i % k]]
+                   for i in range(n)]
+        bw = np.asarray(surv.bandwidths, float)
+        schedules = tuple(
+            aurora_schedule(
+                degraded_traffic(trace.layer(l), host_map, sources, k), bw)
+            for l in range(len(trace.layers)))
+        pred = _mean_sim([
+            degraded_inference_time(trace, l, surv, host_map, sources,
+                                    policy="aurora")
+            for l in range(len(trace.layers))
+        ])
+        scenario = ("degraded+homogeneous" if surv.homogeneous
+                    else "degraded+heterogeneous")
+        e2d = np.asarray([h[0] for h in host_map])
+        return Plan(scenario, e2d, None, schedules, pred,
+                    replication=host_map, survivors=tuple(chosen))
 
     def evaluate_replicated(self, trace: MoETrace, replicas) -> SimResult:
         """Predicted inference time of an EXISTING replica placement on

@@ -24,6 +24,7 @@ import dataclasses
 
 import numpy as np
 
+from .errors import PlanError
 from .traffic import strip_diagonal, validate_traffic
 
 _EPS = 1e-9
@@ -98,25 +99,25 @@ def check_partial_permutation(dst, n: int, what: str) -> tuple[int, ...]:
     idle), no receiver hears two senders, nobody sends to itself
     (self-traffic never crosses the network, §4.2 footnote 1), nothing
     points off the mesh. Violations silently drop or overwrite token
-    buckets in flight, so they raise here instead. Returns the normalized
-    tuple."""
+    buckets in flight, so they raise ``PlanError`` here instead. Returns the
+    normalized tuple."""
     dst = tuple(int(j) for j in dst)
     if len(dst) != n:
-        raise ValueError(f"{what}: dst has {len(dst)} entries for {n} "
-                         "devices")
+        raise PlanError(f"{what}: dst has {len(dst)} entries for {n} "
+                        "devices")
     seen_recv: set[int] = set()
     for i, j in enumerate(dst):
         if j < 0:
             continue  # idle sender (artificial traffic only)
         if j >= n:
-            raise ValueError(f"{what}: sender {i} targets device {j} "
-                             f"(out of range for {n} devices)")
+            raise PlanError(f"{what}: sender {i} targets device {j} "
+                            f"(out of range for {n} devices)")
         if j == i:
-            raise ValueError(
+            raise PlanError(
                 f"{what}: self-send {i}->{i} — self-traffic never crosses "
                 "the network (§4.2 footnote 1) and must be marked idle (-1)")
         if j in seen_recv:
-            raise ValueError(
+            raise PlanError(
                 f"{what}: receiver {j} is targeted by two senders — not a "
                 "(partial) permutation; lowering it to ppermute would "
                 "silently misroute one bucket")
@@ -128,10 +129,11 @@ def validate_permutation_slots(slots, n: int) -> None:
     """Explicit error for non-permutation slots instead of silent misrouting.
 
     ``aurora_schedule`` only emits valid slots; hand-built or corrupted
-    schedules fail loudly here before the ppermute lowering trusts them.
+    schedules fail loudly (``PlanError``) here before the ppermute lowering
+    trusts them.
     """
     if n <= 0:
-        raise ValueError(f"schedule needs a positive device count, got {n}")
+        raise PlanError(f"schedule needs a positive device count, got {n}")
     for s_i, slot in enumerate(slots):
         check_partial_permutation(slot.dst, n, f"slot {s_i}")
 

@@ -32,8 +32,8 @@ from .assignment import apply_assignment
 from .cluster import Cluster
 from .colocation import aggregate_traffic, aggregate_traffic_multi, lina_packing
 from .schedule import comm_time
-from .traffic import (MoETrace, replicated_ffn_loads, replicated_traffic,
-                      strip_diagonal)
+from .traffic import (MoETrace, degraded_ffn_loads, degraded_traffic,
+                      replicated_ffn_loads, replicated_traffic, strip_diagonal)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,6 +120,46 @@ def replicated_inference_time(
         gate=float(gate.max()), N=n_time, ffn=float(ffn.max()),
         C=c_time, agg=float(agg.max()),
         n_replicas=int(sum(len(h) for h in replicas)),
+    ))
+
+
+def degraded_inference_time(
+    trace: MoETrace,
+    layer: int,
+    survivors: Cluster,
+    hosts,
+    sources,
+    policy: str = "aurora",
+    seed: int = 0,
+) -> SimResult:
+    """Exclusive scenario on a survivor-only cluster after device loss.
+
+    Unlike ``exclusive_inference_time``/``replicated_inference_time``, the
+    device count ``m = survivors.n`` may be SMALLER than the expert count:
+    ``hosts[e]`` lists the survivor indices computing expert e (several
+    experts share a device, replicas still shard tokens evenly) and
+    ``sources[i]`` maps each ORIGINAL device's token stream onto the
+    survivor that inherited it. The timing law is still Eqn 3 — the failure
+    changes the deployment, not the phase structure.
+    """
+    d_exp = trace.layer(layer)
+    m = survivors.n
+    d_dev = degraded_traffic(d_exp, hosts, sources, m)
+    ffn_tokens = degraded_ffn_loads(d_exp, hosts, m)
+    bw, comp = _device_arrays(survivors)
+
+    gate = trace.gate / comp
+    ffn = trace.ffn_time(ffn_tokens) / comp
+    agg = trace.agg / comp
+    n_time = comm_time(d_dev, policy, bw, seed=seed)
+    c_time = comm_time(d_dev.T, policy, bw, seed=seed + 1)
+
+    t = float(gate.max() + n_time + ffn.max() + c_time + agg.max())
+    busy = gate + ffn + agg
+    util = float(np.mean(busy / t)) if t > 0 else 1.0
+    return SimResult(t, util, dict(
+        gate=float(gate.max()), N=n_time, ffn=float(ffn.max()),
+        C=c_time, agg=float(agg.max()), n_survivors=m,
     ))
 
 

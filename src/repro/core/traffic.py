@@ -125,6 +125,76 @@ def identity_replication(n: int) -> tuple[tuple[int], ...]:
     return tuple((e,) for e in range(n))
 
 
+def validate_degraded_hosts(hosts, n_experts: int,
+                            m: int) -> tuple[tuple[int, ...], ...]:
+    """Normalize/validate a survivor-frame host map.
+
+    Unlike ``validate_replication`` — which lives in the one-device-per-
+    expert frame and pins each expert's home to its own index — a degraded
+    map places ``n_experts`` logical experts on ``m <= n_experts`` surviving
+    devices: ``hosts[e]`` is a non-empty tuple of distinct survivor indices
+    in ``range(m)``, home (the copy routing falls back to) first, with no
+    home constraint since the expert↔device bijection is gone.
+    """
+    if len(hosts) != n_experts:
+        raise ValueError(f"degraded hosts need one tuple per expert "
+                         f"({n_experts}), got {len(hosts)}")
+    out = []
+    for e, hs in enumerate(hosts):
+        hs = tuple(int(h) for h in hs)
+        if not hs:
+            raise ValueError(f"hosts[{e}] is empty — expert {e} has no "
+                             "surviving copy")
+        if len(set(hs)) != len(hs):
+            raise ValueError(f"hosts[{e}] has duplicate devices: {hs}")
+        if any(h < 0 or h >= m for h in hs):
+            raise ValueError(f"hosts[{e}] out of range({m} survivors): {hs}")
+        out.append(hs)
+    return tuple(out)
+
+
+def degraded_traffic(d: np.ndarray, hosts, sources,
+                     m: int) -> np.ndarray:
+    """Device traffic of a survivor-only deployment, ``(m, m)``.
+
+    ``d`` is the expert-frame matrix (source device i → expert e tokens,
+    one row per ORIGINAL device); ``sources[i]`` is the survivor that
+    inherited original device i's tokens (i's own survivor index when it
+    survived); ``hosts[e]`` lists the survivors computing expert e, tokens
+    splitting evenly across copies (same shard-of-token rule as
+    ``replicated_traffic``). Self-shares stay off the wire (§4.2 fn 1).
+    """
+    d = validate_traffic(d)
+    n = d.shape[0]
+    hosts = validate_degraded_hosts(hosts, n, m)
+    src = [int(s) for s in sources]
+    if len(src) != n or any(s < 0 or s >= m for s in src):
+        raise ValueError(f"sources must map {n} original devices into "
+                         f"range({m} survivors), got {sources}")
+    row_agg = np.zeros((m, n))
+    for i, s in enumerate(src):
+        row_agg[s] += d[i]
+    out = np.zeros((m, m))
+    for e, hs in enumerate(hosts):
+        share = row_agg[:, e] / len(hs)
+        for h in hs:
+            out[:, h] += share
+    return strip_diagonal(out)
+
+
+def degraded_ffn_loads(d: np.ndarray, hosts, m: int) -> np.ndarray:
+    """Per-survivor FFN token load; locally-absorbed shares still count."""
+    d = validate_traffic(d)
+    n = d.shape[0]
+    hosts = validate_degraded_hosts(hosts, n, m)
+    loads = np.zeros(m)
+    for e, hs in enumerate(hosts):
+        share = d[:, e].sum() / len(hs)
+        for h in hs:
+            loads[h] += share
+    return loads
+
+
 def row_col_sums(d: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     d = validate_traffic(d)
     return d.sum(axis=1), d.sum(axis=0)

@@ -30,6 +30,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from ..core.errors import FaultError
 from .layers import (KernelConfig, NO_PARALLEL, ParallelContext, ffn_apply,
                      init_ffn)
 
@@ -131,6 +132,77 @@ def replica_arrays(spec: ReplicationSpec):
     """(base (E,), counts (E,)) as int32 device arrays for dispatch remaps."""
     return (jnp.asarray(spec.base, jnp.int32),
             jnp.asarray(spec.counts, jnp.int32))
+
+
+def shrink_replication(spec: ReplicationSpec | None,
+                       drop_phys) -> "ReplicationSpec | None":
+    """Failover shrink: the physical slots in ``drop_phys`` are gone (their
+    device died or their weights are corrupt); return the layout with those
+    copies removed. Lossless as long as every logical expert keeps at least
+    one copy — replicas are byte-identical — otherwise ``FaultError``: the
+    last copy of an expert's weights cannot be shrunk away. Returns None
+    when the survivor layout is the identity (no replication left)."""
+    if spec is None:
+        raise FaultError(
+            f"cannot drop physical expert slots {sorted(set(drop_phys))}: "
+            "no replication is active, every slot is a last copy")
+    drop = {int(p) for p in drop_phys}
+    for p in drop:
+        if not 0 <= p < spec.n_phys:
+            raise FaultError(f"physical slot {p} out of "
+                             f"range({spec.n_phys})")
+    p2l = spec.phys_to_logical
+    counts = list(spec.counts)
+    for p in drop:
+        counts[p2l[p]] -= 1
+    for e, c in enumerate(counts):
+        if c < 1:
+            raise FaultError(
+                f"expert {e} would lose its last copy (dropping "
+                f"{sorted(drop)} from counts {spec.counts}) — failover "
+                "is only lossless while one replica survives")
+    return ReplicationSpec.from_counts(counts)
+
+
+def repair_moe_params(params, spec: ReplicationSpec | None, bad_phys,
+                      axis: int = 1):
+    """Overwrite corrupt physical expert slots from a healthy replica.
+
+    ``bad_phys`` lists physical slots whose weights are unusable (NaN
+    injection, bit flips). Each is re-cloned from another copy of the same
+    LOGICAL expert — byte-identical by the replication invariant, so the
+    routed function is exactly restored. ``FaultError`` when some logical
+    expert has no healthy copy left (including the unreplicated case,
+    where every logical expert has exactly one slot)."""
+    bad = {int(p) for p in bad_phys}
+    n_phys = spec.n_phys if spec is not None else None
+    if n_phys is None:
+        if bad:
+            raise FaultError(
+                f"cannot repair physical slots {sorted(bad)}: no "
+                "replication is active, there is no healthy copy to clone")
+        return params
+    for p in bad:
+        if not 0 <= p < n_phys:
+            raise FaultError(f"physical slot {p} out of range({n_phys})")
+    base, counts = spec.base, spec.counts
+    src = list(range(n_phys))
+    for p in bad:
+        e = spec.phys_to_logical[p]
+        healthy = [q for q in range(base[e], base[e] + counts[e])
+                   if q not in bad]
+        if not healthy:
+            raise FaultError(
+                f"expert {e} has no healthy copy left among physical slots "
+                f"{list(range(base[e], base[e] + counts[e]))}")
+        src[p] = healthy[0]
+    gather = jnp.asarray(src)
+
+    def heal(path, leaf):
+        if _is_experts_leaf(path):
+            return jnp.take(leaf, gather, axis=axis)
+        return leaf
+    return jax.tree_util.tree_map_with_path(heal, params)
 
 
 def init_moe(key, d_model: int, moe, dtype) -> dict:

@@ -1,14 +1,17 @@
 """Serving: static + continuous single-model engines, Aurora colocation
 (dual-model static + continuous, N-tenant continuous with live tenant
-churn), live traffic monitoring + online re-planning/re-grouping, and the
+churn), live traffic monitoring + online re-planning/re-grouping, the
 EP-sharded distributed engines (mesh decode, round-pipelined dispatch, live
-schedule refresh). All engines are configured through one frozen
-``EngineConfig`` (admission policies, prefill pool, kernels, jit)."""
+schedule refresh), and fault tolerance (seedable fault injection, health
+monitoring, degraded-mode failover). All engines are configured through one
+frozen ``EngineConfig`` (admission policies, prefill pool, kernels, jit)."""
+
+from repro.core.errors import FaultError, PlanError
 
 from .config import (AdmissionPolicy, EdfAdmission, EngineConfig,
                      FifoAdmission, LengthBucketedAdmission, RequestSpec,
-                     TenantSpec, TokenBudgetAdmission, coerce_admission,
-                     make_bucketer, scale_admission)
+                     ShedEvent, TenantSpec, TokenBudgetAdmission,
+                     coerce_admission, make_bucketer, scale_admission)
 from .engine import (ContinuousEngine, Request, ServingEngine,
                      poisson_requests, serve_stream)
 from .colocated import (ColocatedContinuousEngine, ColocatedEngine,
@@ -19,6 +22,9 @@ from .distributed import (DistributedColocatedEngine, DistributedEngine,
                           rounds_from_plan, rounds_from_trace,
                           rounds_from_traffic)
 from .monitor import OnlineReplanner, ReplanEvent, TrafficMonitor
+from .health import FaultEvent, HealthMonitor
+from .faults import (ChaosHarness, DeviceLoss, ExpertCorruption,
+                     FaultInjector, FaultPlan, Straggler)
 
 __all__ = ["Request", "ServingEngine", "ContinuousEngine",
            "ColocatedEngine", "ColocatedContinuousEngine",
@@ -27,9 +33,12 @@ __all__ = ["Request", "ServingEngine", "ContinuousEngine",
            "EngineConfig", "AdmissionPolicy", "FifoAdmission",
            "LengthBucketedAdmission", "TokenBudgetAdmission",
            "EdfAdmission", "RequestSpec", "TenantSpec", "coerce_admission",
-           "scale_admission",
+           "scale_admission", "ShedEvent",
            "apply_pairing", "build_lockstep_step", "device_traffic",
            "inverse_pair", "make_bucketer", "poisson_requests",
            "reseat_pairing", "rounds_from_plan", "rounds_from_trace",
            "rounds_from_traffic", "serve_stream", "TrafficMonitor",
-           "OnlineReplanner", "ReplanEvent"]
+           "OnlineReplanner", "ReplanEvent",
+           "FaultEvent", "HealthMonitor", "FaultPlan", "FaultInjector",
+           "ChaosHarness", "DeviceLoss", "ExpertCorruption", "Straggler",
+           "FaultError", "PlanError"]

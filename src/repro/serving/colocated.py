@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.errors import PlanError
 from repro.models import Model
 from repro.serving.config import (EngineConfig, TenantSpec, coerce_config,
                                   scale_admission)
@@ -97,7 +98,7 @@ def reseat_pairing(params, old_pair, new_pair, cfg):
     ids = list(range(n))
     for name, pair in (("current", old_pair), ("new", new_pair)):
         if sorted(pair) != ids:
-            raise ValueError(
+            raise PlanError(
                 f"{name} pairing {pair} is not a permutation of the expert "
                 f"ids 0..{n - 1} — re-seating it would duplicate/drop "
                 "experts")
@@ -540,7 +541,7 @@ class MultiTenantContinuousEngine:
         — after churn the anchor column need not be the identity)."""
         new_groups = [tuple(g) for g in plan.groups]
         if any(len(g) != self.n_tenants for g in new_groups):
-            raise ValueError(
+            raise PlanError(
                 f"plan groups tenant count {[len(g) for g in new_groups]} "
                 f"!= engine tenant count {self.n_tenants}")
         for t in range(self.n_tenants):

@@ -27,7 +27,10 @@ schemes are the exemplar):
   earliest-deadline-first within the chunk budget, starvation-free via
   aging (``age_limit`` caps every request's effective deadline at
   ``arrival + age_limit``, so deadline-free traffic cannot be starved by a
-  stream of tight deadlines).
+  stream of tight deadlines). With ``shed=True`` it also REJECTS submits
+  whose deadline is provably unattainable at current queue depth (or past
+  ``queue_cap``) as typed ``ShedEvent`` results — overload robustness
+  instead of silent queue growth.
 
 Policies see the scheduler state as ``RequestSpec`` objects (arrival time,
 prompt length, SLO deadline, tenant id, next chunk size) through two
@@ -87,9 +90,10 @@ def make_bucketer(policy) -> Callable[[int], int]:
     if isinstance(policy, str) and policy.startswith("step:"):
         k = int(policy.split(":", 1)[1])
         if k <= 0:
-            raise ValueError(f"bucket step must be positive, got {k}")
+            raise ValueError(f"bucket_policy 'step:K' needs a positive K, "
+                             f"got {k}")
         return lambda n: -(-n // k) * k
-    raise ValueError(f"unknown bucket policy {policy!r} "
+    raise ValueError(f"bucket_policy {policy!r} is unknown "
                      "(expected 'pow2', 'exact', 'step:K', or a callable)")
 
 
@@ -111,9 +115,28 @@ class RequestSpec:
 
     def __post_init__(self):
         if self.chunk < 0:
-            raise ValueError("chunk must be a non-negative token count")
+            raise ValueError("RequestSpec.chunk must be a non-negative "
+                             "token count")
         if math.isnan(self.deadline):
-            raise ValueError("deadline must be a time or math.inf, not NaN")
+            raise ValueError("RequestSpec.deadline must be a time or "
+                             "math.inf, not NaN")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShedEvent:
+    """One rejected submit under shed-mode admission.
+
+    Load shedding surfaces as a TYPED RESULT, never a silent stall or an
+    exception: ``ContinuousEngine.submit`` returns the event (and appends
+    it to ``engine.shed_events``) so callers — and per-tenant accounting —
+    see exactly which request was refused and why. ``reason`` is
+    human-readable and starts with the policy trigger (``"queue_cap"`` or
+    ``"deadline"``)."""
+
+    tenant: object
+    arrival: float
+    reason: str
+    request: object = None
 
 
 def _fifo_order(reqs: Sequence[RequestSpec]) -> tuple[int, ...]:
@@ -197,7 +220,8 @@ class LengthBucketedAdmission:
 
     def __post_init__(self):
         if self.chunk <= 0:
-            raise ValueError("prefill_chunk must be a positive token count")
+            raise ValueError("LengthBucketedAdmission.chunk must be a "
+                             "positive token count")
 
     def pad(self, prompt_len: int) -> int:
         return make_bucketer(self.bucket_policy)(prompt_len)
@@ -231,10 +255,11 @@ class TokenBudgetAdmission:
 
     def __post_init__(self):
         if self.chunk <= 0:
-            raise ValueError("prefill_chunk must be a positive token count")
+            raise ValueError("TokenBudgetAdmission.chunk must be a "
+                             "positive token count")
         if self.budget <= 0:
-            raise ValueError("step_token_budget must be a positive "
-                             "token count")
+            raise ValueError("TokenBudgetAdmission.budget must be a "
+                             "positive token count")
 
     def pad(self, prompt_len: int) -> int:
         return make_bucketer(self.bucket_policy)(prompt_len)
@@ -283,22 +308,43 @@ class EdfAdmission:
     slot rows, so EDF emits byte-identical streams to FIFO — for a
     single-tenant stream with uniform deadlines even the schedule matches
     (the ranking degenerates to arrival order).
+
+    **Shed mode** (``shed=True``): overloaded submits are REJECTED as typed
+    ``ShedEvent`` results instead of queueing hopeless work. Two triggers,
+    checked in order by ``shed_reason``: the queue already holds
+    ``queue_cap`` requests, or the request's deadline is PROVABLY
+    unattainable — even if prefill got the whole step budget every step,
+    the prompt tokens queued at-or-ahead of it under EDF ranking could not
+    finish before its deadline. The bound deliberately ignores decode's
+    budget share and prompt padding, so it never sheds a request the
+    engine might still serve in time; requests without a finite deadline
+    are only ever capacity-shed. Shedding the provably-late tail is what
+    keeps ADMITTED requests' TTFT inside their SLO under overload —
+    without it, EDF ordering alone lets doomed work consume budget ahead
+    of attainable deadlines.
     """
 
     chunk: int
     budget: int | None = None
     bucket_policy: object = "pow2"
     age_limit: float = 256.0
+    shed: bool = False
+    queue_cap: int | None = None
 
     def __post_init__(self):
         if self.chunk <= 0:
-            raise ValueError("prefill_chunk must be a positive token count")
+            raise ValueError("EdfAdmission.chunk must be a positive token "
+                             "count")
         if self.budget is not None and self.budget <= 0:
-            raise ValueError("step_token_budget must be a positive "
+            raise ValueError("EdfAdmission.budget must be a positive "
                              "token count")
         if not self.age_limit > 0:
-            raise ValueError("age_limit must be a positive step count "
-                             "(it is the starvation bound)")
+            raise ValueError("EdfAdmission.age_limit must be a positive "
+                             "step count (it is the starvation bound)")
+        if self.queue_cap is not None and self.queue_cap < 1:
+            raise ValueError("EdfAdmission.queue_cap must be >= 1 "
+                             f"(got {self.queue_cap}); use None for "
+                             "an unbounded queue")
 
     def pad(self, prompt_len: int) -> int:
         return make_bucketer(self.bucket_policy)(prompt_len)
@@ -324,6 +370,42 @@ class EdfAdmission:
 
     def order(self, reqs: Sequence[RequestSpec]) -> tuple[int, ...]:
         return tuple(self._rank(reqs))
+
+    def shed_reason(self, spec: RequestSpec,
+                    queued: Sequence[RequestSpec],
+                    num_active: int = 0) -> str | None:
+        """Shed-mode admission test: the reason to reject ``spec`` given
+        the current queue, or None to admit.
+
+        The deadline trigger is a LOWER bound on time-to-first-token:
+        prefill needs at least ``ceil(work / budget)`` engine steps, where
+        ``work`` counts the new prompt plus every queued prompt ranked
+        at-or-ahead of it under the EDF effective deadline. Decode's share
+        of the budget, prompt padding, and slot contention are all ignored
+        — each only makes reality slower — so a shed here is provable, not
+        a heuristic. Unbudgeted policies only enforce ``queue_cap``."""
+        if not self.shed:
+            return None
+        if self.queue_cap is not None and len(queued) >= self.queue_cap:
+            return (f"queue_cap: {len(queued)} requests queued >= "
+                    f"queue_cap {self.queue_cap}")
+        if self.budget is None or not math.isfinite(spec.deadline):
+            return None
+
+        def eff(r: RequestSpec):
+            return (min(r.deadline, r.arrival + self.age_limit), r.arrival)
+
+        mine = eff(spec)
+        work = spec.prompt_len + sum(
+            r.prompt_len for r in queued if eff(r) <= mine)
+        steps = math.ceil(work / self.budget)
+        if spec.arrival + steps > spec.deadline:
+            return (f"deadline: first token needs >= {steps} steps of the "
+                    f"full prefill budget {self.budget} ({work} prompt "
+                    "tokens at or ahead of this deadline), but the "
+                    f"deadline is {spec.deadline - spec.arrival:g} steps "
+                    "after arrival")
+        return None
 
     def chunk_budget(self, num_active: int, chunks: Sequence[int]) -> int:
         return _deprecated_chunk_budget(self, num_active, chunks)

@@ -31,7 +31,11 @@ import dataclasses
 
 import numpy as np
 
+import jax
+import jax.numpy as jnp
+
 from repro.compat import set_mesh
+from repro.core.errors import PlanError
 from repro.core.schedule import aurora_schedule
 from repro.core.traffic import MoETrace, strip_diagonal
 from repro.distributed.alltoall import (aurora_rounds_from_schedule,
@@ -193,18 +197,27 @@ def _with_mesh(mesh):
     return wrap
 
 
-def _mesh_config(config, kw, owner, mesh) -> EngineConfig:
-    """Resolve the effective ``EngineConfig`` for a Distributed* engine and
-    compose the mesh-context wrapper UNDER any user ``step_wrapper`` (the
+def _compose_wrapper(user, mesh):
+    """Mesh-context wrapper composed UNDER any user ``step_wrapper`` (the
     mesh must be innermost — it has to be active when the compiled step
-    actually runs). Legacy keywords are coerced here non-strictly: ``kw``
-    still carries real pass-through arguments (``monitor``, ``pair``, ...)
-    for the parent constructor, which runs the strict pass on the rest."""
+    actually runs)."""
+    inner = _with_mesh(mesh)
+    return inner if user is None else (lambda fn: user(inner(fn)))
+
+
+def _mesh_config(config, kw, owner, mesh):
+    """Resolve the effective ``EngineConfig`` for a Distributed* engine and
+    compose the mesh-context wrapper under any user ``step_wrapper``.
+    Legacy keywords are coerced here non-strictly: ``kw`` still carries
+    real pass-through arguments (``monitor``, ``pair``, ...) for the parent
+    constructor, which runs the strict pass on the rest. Returns
+    ``(config, user_wrapper)`` — the engines stash the USER's original
+    wrapper so a degraded mesh rebuild (``adopt_degraded``) can recompose
+    it around the survivor mesh's context."""
     config = coerce_config(config, kw, owner, strict=False)
     user = config.step_wrapper
-    inner = _with_mesh(mesh)
-    wrapper = inner if user is None else (lambda fn: user(inner(fn)))
-    return dataclasses.replace(config, step_wrapper=wrapper)
+    wrapper = _compose_wrapper(user, mesh)
+    return dataclasses.replace(config, step_wrapper=wrapper), user
 
 
 # ---------------------------------------------------------------------------
@@ -225,7 +238,8 @@ class DistributedEngine(ContinuousEngine):
                  cache_cap: int, *, mesh, moe_impl: str = "aurora",
                  rounds=None, plan=None, overlap: bool = False,
                  config: EngineConfig | None = None, **kw):
-        config = _mesh_config(config, kw, type(self).__name__, mesh)
+        config, self._user_wrapper = _mesh_config(
+            config, kw, type(self).__name__, mesh)
         model = distribute(model, mesh, moe_impl=moe_impl, overlap=overlap)
         self.mesh = mesh
         self.n_ep = ep_size(model.pc)
@@ -272,7 +286,7 @@ class DistributedEngine(ContinuousEngine):
             if rep is not None:
                 n_phys = sum(len(h) for h in rep)
                 if n_phys % self.n_ep:
-                    raise ValueError(
+                    raise PlanError(
                         f"plan replicates to {n_phys} physical experts, "
                         f"which do not shard over the {self.n_ep}-device EP "
                         f"axis — plan with total_multiple={self.n_ep}")
@@ -280,6 +294,77 @@ class DistributedEngine(ContinuousEngine):
         rounds = resolve_rounds(plan, self.n_ep)
         self.swap_rounds(rounds)
         return rounds
+
+    def adopt_degraded(self, plan) -> None:
+        """Adopt a survivor-only degraded ``Plan`` (``AuroraPlanner
+        .plan_degraded``): rebuild the mesh over the surviving devices and
+        carry every byte of serving state across.
+
+        ``plan.survivors`` indexes the ORIGINAL flat EP device order (mesh
+        device i == cluster device i). The rebuild pulls params (back to
+        the logical frame), cache and the token buffer to host, constructs
+        the survivor mesh from the surviving jax devices, re-shards the
+        model over it, recomposes the step wrapper (the user's wrapper —
+        stashed at construction — around the NEW mesh's context), refreshes
+        the BvN rounds from the plan's degraded schedules, and re-adopts
+        the plan's replication counts. Host state is bit-copied, so
+        surviving requests' token streams are unchanged; requests resident
+        on lost devices must be ``requeue``d by the caller (the
+        ``ChaosHarness`` does both in order)."""
+        survivors = getattr(plan, "survivors", None)
+        if survivors is None:
+            raise PlanError(
+                "adopt_degraded needs a degraded Plan (built by "
+                "AuroraPlanner.plan_degraded) — this plan has no "
+                ".survivors device list")
+        flat = list(self.mesh.devices.flat)
+        n_old = len(flat)
+        surv = [int(s) for s in survivors]
+        if any(not 0 <= s < n_old for s in surv):
+            raise PlanError(
+                f"plan survivors {surv} do not index this mesh's "
+                f"{n_old} devices")
+        if self.n_ep != n_old:
+            raise PlanError(
+                "adopt_degraded needs the flat EP axis to cover the whole "
+                f"mesh ({self.n_ep} EP devices over {n_old} mesh devices)")
+        n_e = self.model.cfg.moe.n_experts
+        if n_e % len(surv):
+            raise PlanError(
+                f"{n_e} experts do not shard over {len(surv)} survivors — "
+                "plan with plan_degraded(ep_compatible=True) so the "
+                "survivor subset divides the expert count")
+        # Drop to the canonical logical frame through the tested
+        # placement-only paths, then pull everything to host.
+        if self.model.pc.moe_replication is not None:
+            self.adopt_replication(None)
+        if self.assignment is not None \
+                and self.assignment != list(range(n_e)):
+            self.adopt_assignment(list(range(n_e)))
+        params = jax.tree_util.tree_map(np.asarray, self.params)
+        cache = jax.tree_util.tree_map(np.asarray, self.cache)
+        tokens = np.asarray(self.tokens)
+        # Survivor mesh: same axis names, all-singleton leading axes, the
+        # surviving devices (ascending original order) on the last.
+        shape = tuple(1 for _ in self.mesh.axis_names[:-1]) + (len(surv),)
+        mesh = jax.sharding.Mesh(
+            np.array([flat[s] for s in surv]).reshape(shape),
+            self.mesh.axis_names)
+        model = distribute(self.model, mesh,
+                           moe_impl=self.model.pc.moe_impl,
+                           overlap=self.model.pc.ep_overlap)
+        self.mesh = mesh
+        self.n_ep = ep_size(model.pc)
+        self._step_wrapper = _compose_wrapper(self._user_wrapper, mesh)
+        if model.pc.moe_impl == "aurora":
+            model = _with_rounds(model,
+                                 resolve_rounds(plan, self.n_ep))
+        self.params = jax.tree_util.tree_map(jnp.asarray, params)
+        self.cache = jax.tree_util.tree_map(jnp.asarray, cache)
+        self.tokens = jnp.asarray(tokens)
+        self.assignment = list(range(n_e))
+        self._rebind(model)
+        self.adopt_replication(plan.replication)
 
 
 class DistributedColocatedEngine(ColocatedContinuousEngine):
@@ -298,7 +383,8 @@ class DistributedColocatedEngine(ColocatedContinuousEngine):
                  moe_impl: str = "aurora", rounds=None, plan=None,
                  overlap: bool = False, refresh_rounds: bool = True,
                  config: EngineConfig | None = None, **kw):
-        config = _mesh_config(config, kw, type(self).__name__, mesh)
+        config, self._user_wrapper = _mesh_config(
+            config, kw, type(self).__name__, mesh)
         model_a = distribute(model_a, mesh, moe_impl=moe_impl,
                              overlap=overlap)
         model_b = distribute(model_b, mesh, moe_impl=moe_impl,
@@ -361,7 +447,8 @@ class DistributedMultiTenantEngine(MultiTenantContinuousEngine):
                  rounds=None, plan=None, overlap: bool = False,
                  refresh_rounds: bool = True,
                  config: EngineConfig | None = None, **kw):
-        config = _mesh_config(config, kw, type(self).__name__, mesh)
+        config, self._user_wrapper = _mesh_config(
+            config, kw, type(self).__name__, mesh)
         models = [distribute(m, mesh, moe_impl=moe_impl, overlap=overlap)
                   for m in models]
         self.mesh = mesh

@@ -71,9 +71,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.errors import FaultError, PlanError
 from repro.models import Model
-from repro.serving.config import (EngineConfig, RequestSpec, coerce_config,
-                                  make_bucketer)
+from repro.serving.config import (EngineConfig, RequestSpec, ShedEvent,
+                                  coerce_config, make_bucketer)
 
 __all__ = ["Request", "poisson_requests", "serve_stream", "make_bucketer",
            "ServingEngine", "ContinuousEngine"]
@@ -248,6 +249,10 @@ class ContinuousEngine:
         self._step_wrapper = config.step_wrapper or (lambda fn: fn)
         self._build_steps()
         self.decode_steps = 0
+        # Shed-mode admission: every rejected submit is recorded here as a
+        # typed ``ShedEvent`` (and returned from ``submit``) — rejections
+        # are observable per tenant, never silent stalls.
+        self.shed_events: list[ShedEvent] = []
 
     def _build_steps(self) -> None:
         """(Re)build the jitted step programs from ``self.model``."""
@@ -384,19 +389,19 @@ class ContinuousEngine:
         same adoption is a REAL device move under ``DistributedEngine``."""
         from repro.serving.colocated import inverse_pair, reseat_pairing
         if self.assignment is None:
-            raise ValueError("adopt_assignment needs an MoE model "
-                             "(expert->device assignment is per expert)")
+            raise PlanError("adopt_assignment needs an MoE model "
+                            "(expert->device assignment is per expert)")
         e2d = [int(x) for x in np.asarray(expert_to_device).tolist()]
         n_e = len(self.assignment)
         if sorted(e2d) != list(range(n_e)):
-            raise ValueError(
+            raise PlanError(
                 f"expert_to_device {e2d} is not a permutation of "
                 f"0..{n_e - 1} — exclusive assignment places one expert "
                 "per device")
         if e2d == self.assignment:
             return
         if self.model.pc.moe_replication is not None:
-            raise ValueError(
+            raise PlanError(
                 "cannot re-seat an expert assignment while replicas are "
                 "live — adopt_replication(None) first (the replicated "
                 "leaves are in the widened physical frame)")
@@ -437,7 +442,7 @@ class ContinuousEngine:
         """In-flight chunked prefills (up to ``config.prefill_pool``)."""
         return len(self._pending)
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> ShedEvent | None:
         # Final per-slot length is pad(prompt) + max_new_tokens - 1 (the
         # last emitted token is never written back); beyond cache_cap the
         # decode path would silently overwrite slot cap-1 every step.
@@ -462,7 +467,24 @@ class ContinuousEngine:
                             if self.tenant_spec is not None else math.inf)
         if req.tenant is None and self.tenant_spec is not None:
             req.tenant = self.tenant_spec.name
+        # Shed-mode admission (``EdfAdmission(shed=True)``): reject — as a
+        # typed result, not an exception — when the queue is capped out or
+        # the deadline is provably unattainable at current queue depth.
+        shed_reason = getattr(self.admission, "shed_reason", None)
+        if shed_reason is not None:
+            def spec_of(r):
+                b = self._bucket(len(r.prompt))
+                return self._spec(r, min(self.prefill_chunk or b, b))
+            reason = shed_reason(spec_of(req),
+                                 [spec_of(r) for r in self.queue],
+                                 self.num_active + self.num_pending)
+            if reason is not None:
+                ev = ShedEvent(tenant=req.tenant, arrival=req.arrival,
+                               reason=reason, request=req)
+                self.shed_events.append(ev)
+                return ev
         self.queue.append(req)
+        return None
 
     def _bucket(self, n: int) -> int:
         if self.prefill_len is not None:
@@ -738,6 +760,76 @@ class ContinuousEngine:
         self.decode_steps += 1
         self._postdecode(logits)
         return True
+
+    # -- fault tolerance ---------------------------------------------------
+    def checkpoint(self) -> dict:
+        """Host-side snapshot of the serving state — cache, token buffer,
+        slot map, queue, in-flight prefills, emitted-token lengths — for
+        step-level rollback after a detected-corrupt step (NaN weights
+        caught by the ``HealthMonitor`` mid-step). Request objects are
+        shared with the live engine; ``restore`` rewinds their
+        ``out_tokens`` to the recorded lengths."""
+        reqs = {id(r): r for r in self.slots if r is not None}
+        for r in self.queue:
+            reqs[id(r)] = r
+        for p in self._pending:
+            reqs[id(p[0])] = p[0]
+        return {
+            "cache": jax.tree_util.tree_map(np.asarray, self.cache),
+            "tokens": np.asarray(self.tokens),
+            "slots": list(self.slots),
+            "queue": list(self.queue),
+            "pending": [[p[0], p[1], p[2].copy(), p[3]]
+                        for p in self._pending],
+            "out_lens": [(r, len(r.out_tokens)) for r in reqs.values()],
+            "decode_steps": self.decode_steps,
+        }
+
+    def restore(self, snap: dict) -> None:
+        """Roll the engine back to a ``checkpoint`` snapshot. The recovery
+        loop restores, repairs the weights (``repair_moe_params`` from a
+        healthy replica), and re-runs the step — deterministic greedy
+        decoding makes the re-run byte-identical to a never-faulted run."""
+        self.cache = jax.tree_util.tree_map(jnp.asarray, snap["cache"])
+        self.tokens = jnp.asarray(snap["tokens"])
+        self.slots = list(snap["slots"])
+        self.queue = collections.deque(snap["queue"])
+        self._pending = [[p[0], p[1], p[2].copy(), p[3]]
+                         for p in snap["pending"]]
+        for r, ln in snap["out_lens"]:
+            del r.out_tokens[ln:]
+        self.decode_steps = snap["decode_steps"]
+
+    def requeue(self, slots) -> list[Request]:
+        """Fail-stop eviction: push the requests occupying ``slots`` (and
+        any in-flight prefill reserving them) back onto the FRONT of the
+        queue with their generation reset. The slots' cache rows are
+        treated as lost — re-admission re-prefills from the prompt, and
+        deterministic greedy decoding re-emits the exact same stream, so a
+        re-queued request that completes is byte-identical to its un-failed
+        run. Returns the evicted requests (re-queue order)."""
+        lost = sorted({int(s) for s in slots})
+        for s in lost:
+            if not 0 <= s < self.batch_slots:
+                raise FaultError(
+                    f"cannot requeue slot {s}: out of "
+                    f"range({self.batch_slots})")
+        lost_set = set(lost)
+        victims: list[Request] = []
+        for p in list(self._pending):
+            if p[1] in lost_set:
+                self._pending.remove(p)
+                victims.append(p[0])
+        for s in lost:
+            r = self.slots[s]
+            if r is not None:
+                self.slots[s] = None
+                victims.append(r)
+        for r in victims:
+            r.out_tokens.clear()
+        for r in reversed(victims):
+            self.queue.appendleft(r)
+        return victims
 
     # -- driver ------------------------------------------------------------
     def serve(self, reqs: list[Request]) -> list[Request]:

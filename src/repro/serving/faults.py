@@ -1,0 +1,366 @@
+"""Deterministic fault injection and the closed recovery loop.
+
+Three pieces, layered so each is usable alone:
+
+* **FaultPlan** — a seedable, declarative script of faults (device loss at
+  step t, expert-weight NaN corruption, straggler slowdown). Frozen
+  dataclasses, so a plan is hashable/reproducible; ``FaultPlan.random``
+  derives one deterministically from a seed for chaos property tests.
+* **FaultInjector** — realizes a plan against a live engine through the
+  existing ``EngineConfig.step_wrapper`` seam (the same seam the
+  distributed engines use for their mesh context), so it works unchanged
+  on all three engines and their distributed variants. The wrapper times
+  every compiled step and feeds a ``HealthMonitor``; ``tick()`` (called
+  once per ENGINE step by the driver — the wrapper alone cannot tell
+  engine steps from compiled-fn calls) applies due faults: poisons expert
+  weights with NaN, silences a lost device's heartbeat, arms stragglers.
+  Straggler slowdown is SYNTHETIC — the injector inflates the step-time
+  signal reported for the straggling device rather than sleeping, so CI
+  wall-clock is unchanged while detection exercises the real EWMA path.
+* **ChaosHarness** — the recovery loop: tick, (optionally) checkpoint,
+  step, then drain the monitor's events and react. NaN => rollback to the
+  pre-step checkpoint, repair the weights from a healthy replica
+  (``repair_moe_params``; pristine logical-frame copy as last resort) and
+  re-run the step — deterministic greedy decoding makes the re-run
+  byte-identical to a never-faulted run. Device loss => re-queue the lost
+  device's slots (fail-stop; re-admission re-emits identical streams) and,
+  when a planner+trace are wired in, adopt a survivor-only degraded plan
+  (``AuroraPlanner.plan_degraded`` -> ``adopt_degraded``/``adopt``).
+  Stragglers are recorded (re-planning against them is the traffic
+  monitor's drift story, not a failover).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.errors import FaultError
+from repro.serving.health import HealthMonitor
+
+__all__ = ["DeviceLoss", "ExpertCorruption", "Straggler", "FaultPlan",
+           "FaultInjector", "ChaosHarness", "corrupt_moe_params"]
+
+
+# -- fault plan -------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DeviceLoss:
+    """Fail-stop loss of ``device`` at engine step ``step``: its heartbeat
+    goes silent (detection lags by the monitor's timeout — that lag is the
+    bounded TTFT spike the chaos bench gates on)."""
+    step: int
+    device: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpertCorruption:
+    """Expert ``expert``'s weights turn NaN at step ``step`` (bit flip /
+    bad shard). ``layer=None`` corrupts every layer's copy of the expert;
+    an int corrupts one layer. Detection happens the first step the router
+    sends a token through the poisoned slot."""
+    step: int
+    expert: int
+    layer: int | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Straggler:
+    """Device ``device`` runs ``factor``x slow for ``duration`` steps
+    starting at ``step`` (synthetic: the reported step-time signal is
+    inflated; no real sleep)."""
+    step: int
+    device: int
+    factor: float = 4.0
+    duration: int = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A deterministic script of faults, ordered by step."""
+    faults: tuple = ()
+    name: str = "chaos"
+
+    def at(self, step: int) -> tuple:
+        return tuple(f for f in self.faults if f.step == step)
+
+    def horizon(self) -> int:
+        """Last step at which any fault is active."""
+        h = 0
+        for f in self.faults:
+            end = f.step + (f.duration if isinstance(f, Straggler) else 0)
+            h = max(h, end)
+        return h
+
+    @property
+    def has_corruption(self) -> bool:
+        return any(isinstance(f, ExpertCorruption) for f in self.faults)
+
+    @classmethod
+    def random(cls, seed: int, horizon: int, n_devices: int, n_experts: int,
+               n_faults: int = 2, kinds: tuple = ("device_loss",
+                                                  "corruption",
+                                                  "straggler"),
+               max_losses: int | None = None) -> "FaultPlan":
+        """Deterministic random plan for chaos property tests. At most
+        ``max_losses`` (default: n_devices - 1) distinct devices die, so a
+        survivor always exists for ``plan_degraded``."""
+        rng = np.random.default_rng(seed)
+        if max_losses is None:
+            max_losses = n_devices - 1
+        faults, lost = [], set()
+        for _ in range(n_faults):
+            kind = kinds[int(rng.integers(len(kinds)))]
+            step = int(rng.integers(1, max(horizon, 2)))
+            if kind == "device_loss":
+                alive = [d for d in range(n_devices) if d not in lost]
+                if len(lost) >= max_losses or not alive:
+                    kind = "straggler"
+                else:
+                    d = alive[int(rng.integers(len(alive)))]
+                    lost.add(d)
+                    faults.append(DeviceLoss(step=step, device=d))
+                    continue
+            if kind == "corruption":
+                faults.append(ExpertCorruption(
+                    step=step, expert=int(rng.integers(n_experts))))
+            else:
+                faults.append(Straggler(
+                    step=step, device=int(rng.integers(n_devices)),
+                    factor=float(2.0 + 4.0 * rng.random()),
+                    duration=int(rng.integers(8, 33))))
+        return cls(faults=tuple(sorted(faults, key=lambda f: f.step)),
+                   name=f"random-{seed}")
+
+
+# -- weight corruption ------------------------------------------------------
+def corrupt_moe_params(params, phys_slot: int, layer: int | None = None,
+                       axis: int = 1):
+    """Poison one physical expert slot's float leaves with NaN (the
+    injected fault ``repair_moe_params`` undoes). ``axis`` is the expert
+    axis of the stacked leaves — 1 for full-model (layer, E, ...) segments,
+    matching ``replicate_moe_params``."""
+    from repro.models.moe import _is_experts_leaf
+
+    def poison(path, leaf):
+        if not _is_experts_leaf(path) or leaf.dtype.kind != "f":
+            return leaf
+        leaf = jnp.asarray(leaf)
+        idx = [slice(None)] * leaf.ndim
+        idx[axis] = phys_slot
+        if layer is not None and axis > 0:
+            idx[0] = layer
+        return leaf.at[tuple(idx)].set(jnp.nan)
+    return jax.tree_util.tree_map_with_path(poison, params)
+
+
+# -- injector ---------------------------------------------------------------
+class FaultInjector:
+    """Realize a ``FaultPlan`` against a live engine.
+
+    Construction order matters: the injector exists FIRST (its ``wrap`` is
+    the ``EngineConfig.step_wrapper``), the engine is built with that
+    config, then ``attach(engine)`` closes the loop. ``tick()`` must be
+    called once per engine step, before ``engine.step()`` — the chaos
+    harness does this; a custom driver can too.
+    """
+
+    def __init__(self, plan: FaultPlan, n_devices: int,
+                 health: HealthMonitor | None = None):
+        self.plan = plan
+        self.n_devices = int(n_devices)
+        self.health = health or HealthMonitor(n_devices=self.n_devices)
+        self.engine = None
+        self.step = 0                    # engine steps ticked so far
+        self.lost: set[int] = set()
+        self.corrupted_phys: set[int] = set()
+        self._stragglers: dict[int, tuple[float, int]] = {}  # d -> (f, end)
+        self._applied: set[int] = set()
+
+    def attach(self, engine) -> None:
+        self.engine = engine
+
+    # The step_wrapper seam: time every compiled step, feed the monitor's
+    # EWMAs (straggler-inflated for the afflicted device — synthetic, no
+    # sleep) and NaN guard. Works on any engine because every compiled
+    # step of every engine flows through this one seam.
+    def wrap(self, fn):
+        def wrapped(*args, **kwargs):
+            t0 = time.perf_counter()
+            out = fn(*args, **kwargs)
+            out = jax.block_until_ready(out)
+            dt = time.perf_counter() - t0
+            step = max(self.step - 1, 0)
+            for d in range(self.n_devices):
+                if d in self.lost:
+                    continue
+                f = self._stragglers.get(d)
+                self.health.observe_step_time(
+                    d, dt * f[0] if f is not None else dt)
+            self.health.observe_output(out, step)
+            return out
+        return wrapped
+
+    def tick(self) -> None:
+        """Advance the fault clock one ENGINE step: apply newly due faults,
+        expire finished stragglers, heartbeat the alive devices."""
+        now = self.step
+        for i, f in enumerate(self.plan.faults):
+            if i in self._applied or f.step > now:
+                continue
+            self._applied.add(i)
+            self._apply(f)
+        for d, (factor, end) in list(self._stragglers.items()):
+            if now >= end:
+                del self._stragglers[d]
+        for d in range(self.n_devices):
+            if d not in self.lost:
+                self.health.heartbeat(d, now)
+        self.step = now + 1
+
+    def _apply(self, f) -> None:
+        if isinstance(f, DeviceLoss):
+            self.lost.add(int(f.device))
+        elif isinstance(f, Straggler):
+            self._stragglers[int(f.device)] = (
+                float(f.factor), f.step + int(f.duration))
+        elif isinstance(f, ExpertCorruption):
+            if self.engine is None:
+                raise FaultError(
+                    "ExpertCorruption needs an attached engine — call "
+                    "FaultInjector.attach(engine) before serving")
+            spec = self.engine.model.pc.moe_replication
+            e = int(f.expert)
+            phys = spec.base[e] if spec is not None else e
+            self.engine.params = corrupt_moe_params(
+                self.engine.params, phys, layer=f.layer)
+            self.corrupted_phys.add(phys)
+        else:
+            raise FaultError(f"unknown fault type {type(f).__name__}")
+
+    def clear_corrupted(self) -> None:
+        self.corrupted_phys.clear()
+
+
+# -- recovery loop ----------------------------------------------------------
+class ChaosHarness:
+    """Closed detect-and-recover loop around one continuous engine.
+
+    Per step: ``injector.tick()`` (faults land), checkpoint when the plan
+    can corrupt weights, ``engine.step()``, ``health.check()``, then react
+    to drained events:
+
+    * ``nan`` — restore the pre-step checkpoint, repair the poisoned slots
+      from a healthy replica (``repair_moe_params``) or, when no replica
+      survives, from the pristine logical-frame copy snapshotted at
+      construction, and re-run the step. Greedy decoding is deterministic,
+      so the recovered stream is byte-identical to a never-faulted run.
+    * ``device_loss`` — fail-stop: re-queue the slots resident on the lost
+      device (``slots_of_device``; default round-robin ``slot % n``), and
+      when a planner + trace are wired in, compute
+      ``plan_degraded(failed_devices=...)`` and adopt it
+      (``engine.adopt_degraded`` when the engine moves real devices,
+      ``engine.adopt`` otherwise).
+    * ``straggler`` — recorded in ``recoveries`` (re-planning around slow
+      devices is the traffic monitor's drift loop, not a failover).
+    """
+
+    def __init__(self, engine, injector: FaultInjector, planner=None,
+                 trace=None, slots_of_device=None):
+        injector.attach(engine)
+        self.engine = engine
+        self.injector = injector
+        self.health = injector.health
+        self.planner = planner
+        self.trace = trace
+        self._slots_of_device = slots_of_device or (
+            lambda d: [s for s in range(engine.batch_slots)
+                       if s % injector.n_devices == d])
+        self.recoveries: list[dict] = []
+        self._handled_loss: set[int] = set()
+        # Pristine logical-frame weights for last-resort repair when no
+        # healthy replica of a corrupted expert survives.
+        from repro.models.moe import dereplicate_moe_params
+        spec = engine.model.pc.moe_replication
+        logical = (dereplicate_moe_params(engine.params, spec)
+                   if spec is not None else engine.params)
+        self._pristine = jax.tree_util.tree_map(np.asarray, logical)
+
+    def step(self) -> bool:
+        inj, eng = self.injector, self.engine
+        inj.tick()
+        now = inj.step - 1
+        snap = eng.checkpoint() if inj.plan.has_corruption else None
+        worked = eng.step()
+        self.health.check(now)
+        for ev in self.health.drain():
+            if ev.kind == "nan":
+                worked = self._recover_nan(ev, snap) or worked
+            elif ev.kind == "device_loss":
+                self._recover_loss(ev)
+            else:
+                self.recoveries.append(
+                    {"event": ev, "action": "observed"})
+        return worked
+
+    def serve(self, reqs) -> list:
+        from repro.serving.engine import serve_stream
+        serve_stream(self.step, [(self.engine, reqs)])
+        return reqs
+
+    # -- reactions ---------------------------------------------------------
+    def _recover_nan(self, ev, snap) -> bool:
+        eng, inj = self.engine, self.injector
+        if snap is None:
+            raise FaultError(
+                "NaN detected but no pre-step checkpoint exists — the "
+                "fault plan declared no corruption faults, so this is a "
+                "genuine numeric failure, not an injected one")
+        eng.restore(snap)
+        bad = sorted(inj.corrupted_phys)
+        spec = eng.model.pc.moe_replication
+        try:
+            from repro.models.moe import repair_moe_params
+            eng.params = repair_moe_params(eng.params, spec, bad)
+            action = "repaired-from-replica"
+        except FaultError:
+            # No healthy replica: rebuild from the pristine logical copy
+            # (byte-identical by definition) under the live layout.
+            from repro.models.moe import replicate_moe_params
+            params = jax.tree_util.tree_map(jnp.asarray, self._pristine)
+            if spec is not None:
+                params = replicate_moe_params(params, spec)
+            eng.params = params
+            action = "restored-pristine"
+        inj.clear_corrupted()
+        self.recoveries.append({"event": ev, "action": action,
+                                "bad_phys": bad})
+        return eng.step()                 # re-run the rolled-back step
+
+    def _recover_loss(self, ev) -> None:
+        eng = self.engine
+        d = int(ev.device)
+        if d in self._handled_loss:
+            return
+        self._handled_loss.add(d)
+        victims = eng.requeue(self._slots_of_device(d))
+        entry = {"event": ev, "action": "requeued",
+                 "requeued": len(victims)}
+        if self.planner is not None and self.trace is not None:
+            # Distributed engines rebuild a survivor mesh: the survivor
+            # subset must divide the expert count (EP sharding), so ask
+            # the planner for an EP-compatible degraded plan.
+            distributed = hasattr(eng, "adopt_degraded")
+            plan = self.planner.plan_degraded(
+                self.trace, failed_devices=sorted(self._handled_loss),
+                ep_compatible=distributed)
+            if distributed:
+                eng.adopt_degraded(plan)
+            else:
+                eng.adopt(plan.replication)
+            entry["action"] = "requeued+replanned"
+            entry["survivors"] = plan.survivors
+        self.recoveries.append(entry)

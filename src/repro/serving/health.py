@@ -1,0 +1,181 @@
+"""HealthMonitor: failure detection from live serving signals.
+
+Sits alongside ``TrafficMonitor`` (which watches WHERE tokens route; this
+watches WHETHER the cluster is healthy) and turns three live signals into
+typed ``FaultEvent``s:
+
+* **NaN/inf guards** — every wrapped engine step's outputs (logits, cache
+  writes) are screened for non-finite values. Corrupt expert weights (bit
+  flips, bad checkpoint shards) surface here the first step the router
+  sends a token through them.
+* **Straggler detection** — per-device step-time EWMAs. A device whose
+  smoothed step time exceeds ``straggler_ratio`` x the median of its peers
+  stalls every synchronous all-to-all round (the §3 synchrony weakness), so
+  it is flagged as soon as the EWMA has warmed up.
+* **Missing heartbeats** — devices report liveness each engine step
+  (``heartbeat``); one silent for ``heartbeat_timeout`` steps is declared
+  lost (fail-stop model), which is the trigger for degraded re-planning
+  (``AuroraPlanner.plan_degraded`` -> ``adopt``/``adopt_degraded``).
+
+Detection is detection only: the monitor never mutates the engine. The
+recovery loop (``serving.faults.ChaosHarness``, or a production driver)
+drains ``events`` and decides — repair weights from a replica, re-queue a
+lost device's slots, adopt a survivor-only plan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+
+__all__ = ["FaultEvent", "HealthMonitor"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One detected failure. ``kind`` is "nan", "straggler" or
+    "device_loss"; ``step`` is the engine step of DETECTION (injection may
+    be earlier — a corrupt expert is invisible until routed to); ``device``
+    is the suspect device (None for model-wide signals like NaN outputs)."""
+
+    kind: str
+    step: int
+    device: int | None = None
+    detail: str = ""
+
+
+class HealthMonitor:
+    """Streaming failure detector over ``n_devices`` devices.
+
+    ``observe_step_time(device, dt)`` feeds the straggler EWMAs (halflife
+    in steps); ``observe_output(out, step)`` screens a pytree of step
+    outputs for non-finite values; ``heartbeat(device, step)`` marks
+    liveness; ``check(step)`` sweeps the heartbeat table and EWMAs and
+    appends any NEW events (each device is reported lost once, flagged
+    straggler once per episode). ``drain()`` hands the accumulated events
+    to the recovery loop and clears the queue; ``events`` keeps the full
+    history for audits.
+    """
+
+    def __init__(self, n_devices: int = 1, halflife: float = 16.0,
+                 straggler_ratio: float = 3.0, heartbeat_timeout: int = 8,
+                 min_observations: int = 4):
+        if n_devices < 1:
+            raise ValueError("HealthMonitor.n_devices must be >= 1")
+        if halflife <= 0:
+            raise ValueError("HealthMonitor.halflife must be > 0 steps")
+        if straggler_ratio <= 1:
+            raise ValueError("HealthMonitor.straggler_ratio must be > 1 "
+                             "(1.0 would flag every device)")
+        if heartbeat_timeout < 1:
+            raise ValueError("HealthMonitor.heartbeat_timeout must be >= 1")
+        self.n_devices = int(n_devices)
+        self.halflife = float(halflife)
+        self.straggler_ratio = float(straggler_ratio)
+        self.heartbeat_timeout = int(heartbeat_timeout)
+        self.min_observations = int(min_observations)
+        self._decay = 0.5 ** (1.0 / self.halflife)
+        self._ewma_num = np.zeros(self.n_devices)
+        self._ewma_den = np.zeros(self.n_devices)
+        self._n_obs = np.zeros(self.n_devices, dtype=int)
+        self._last_beat: dict[int, int] = {}
+        self._lost: set[int] = set()
+        self._straggling: set[int] = set()
+        self._nan_steps: set[int] = set()
+        self.events: list[FaultEvent] = []
+        self._pending: list[FaultEvent] = []
+
+    # -- signal feeds ------------------------------------------------------
+    def heartbeat(self, device: int, step: int) -> None:
+        self._last_beat[int(device)] = int(step)
+
+    def observe_step_time(self, device: int, dt: float) -> None:
+        d = int(device)
+        self._ewma_num[d] = self._ewma_num[d] * self._decay + float(dt)
+        self._ewma_den[d] = self._ewma_den[d] * self._decay + 1.0
+        self._n_obs[d] += 1
+
+    def observe_output(self, out, step: int) -> bool:
+        """Screen a pytree of step outputs for NaN/inf. Returns True when
+        clean; records (at most one per step) a "nan" event when not."""
+        import jax
+
+        clean = True
+        for leaf in jax.tree_util.tree_leaves(out):
+            arr = np.asarray(leaf)
+            if arr.dtype.kind == "f" and not np.isfinite(arr).all():
+                clean = False
+                break
+        if not clean and step not in self._nan_steps:
+            self._nan_steps.add(step)
+            self._emit(FaultEvent(
+                kind="nan", step=int(step),
+                detail="non-finite values in step outputs — corrupt "
+                       "weights or numeric overflow"))
+        return clean
+
+    # -- detection sweep ---------------------------------------------------
+    def step_times(self) -> np.ndarray:
+        """Per-device EWMA step times (NaN where unobserved)."""
+        with np.errstate(invalid="ignore", divide="ignore"):
+            return np.where(self._ewma_den > 0,
+                            self._ewma_num / np.maximum(self._ewma_den,
+                                                        1e-12),
+                            math.nan)
+
+    def check(self, step: int) -> list[FaultEvent]:
+        """Sweep heartbeats and EWMAs at engine step ``step``; emit NEW
+        events. A device with no heartbeat for ``heartbeat_timeout`` steps
+        is lost (once); a warmed-up device whose EWMA exceeds
+        ``straggler_ratio`` x the median of the others straggles (once per
+        episode — recovery below the threshold re-arms the flag)."""
+        new: list[FaultEvent] = []
+        for d, last in sorted(self._last_beat.items()):
+            if d in self._lost:
+                continue
+            if step - last >= self.heartbeat_timeout:
+                self._lost.add(d)
+                ev = FaultEvent(
+                    kind="device_loss", step=int(step), device=d,
+                    detail=f"no heartbeat for {step - last} steps "
+                           f"(timeout {self.heartbeat_timeout})")
+                self._emit(ev)
+                new.append(ev)
+        times = self.step_times()
+        for d in range(self.n_devices):
+            if d in self._lost or self._n_obs[d] < self.min_observations:
+                continue
+            peers = [times[o] for o in range(self.n_devices)
+                     if o != d and not math.isnan(times[o])]
+            if not peers:
+                continue
+            med = float(np.median(peers))
+            if med > 0 and times[d] > self.straggler_ratio * med:
+                if d not in self._straggling:
+                    self._straggling.add(d)
+                    ev = FaultEvent(
+                        kind="straggler", step=int(step), device=d,
+                        detail=f"EWMA step time {times[d]:.3g} > "
+                               f"{self.straggler_ratio:g}x peer median "
+                               f"{med:.3g}")
+                    self._emit(ev)
+                    new.append(ev)
+            else:
+                self._straggling.discard(d)
+        return new
+
+    @property
+    def lost_devices(self) -> tuple[int, ...]:
+        return tuple(sorted(self._lost))
+
+    def _emit(self, ev: FaultEvent) -> None:
+        self.events.append(ev)
+        self._pending.append(ev)
+
+    def drain(self) -> list[FaultEvent]:
+        """Events since the last drain (the recovery loop's work queue)."""
+        out, self._pending = self._pending, []
+        return out

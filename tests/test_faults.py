@@ -1,0 +1,397 @@
+"""Fault tolerance: injection, detection, and lossless recovery.
+
+Chaos property tests (via ``tests/_propcheck.py``, so they run with or
+without hypothesis): random ``FaultPlan``s against a live engine must leave
+token streams BYTE-IDENTICAL to a never-faulted run (recovery is rollback +
+repair + re-queue, and greedy decoding is deterministic); replica-backed
+failover must drop zero tokens; shed-mode admission must never starve an
+admitted request. Plus unit coverage for the ``HealthMonitor`` detectors,
+the repair/shrink edge cases, and the typed ``FaultError``/``PlanError``
+surfaces.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import AuroraPlanner, homogeneous_cluster, synthetic_trace
+from repro.core.errors import FaultError, PlanError
+from repro.core.schedule import check_partial_permutation
+from repro.models import Model
+from repro.models.moe import (ReplicationSpec, repair_moe_params,
+                              replicate_moe_params, shrink_replication)
+from repro.serving import (ChaosHarness, ContinuousEngine, DeviceLoss,
+                           EdfAdmission, EngineConfig, ExpertCorruption,
+                           FaultInjector, FaultPlan, HealthMonitor, Request,
+                           Straggler, scale_admission)
+from repro.serving.faults import corrupt_moe_params
+
+from tests._propcheck import given, settings, st
+
+
+# One reduced MoE model for every engine in this module (compile cost is
+# per-engine, not per-model, so sharing the model keeps examples honest
+# while sharing the expensive init).
+_CACHE: dict = {}
+
+
+def _moe():
+    if not _CACHE:
+        cfg = get_config("phi3.5-moe-42b-a6.6b").reduced()
+        model = Model(cfg)
+        _CACHE["m"] = (cfg, model, model.init(jax.random.PRNGKey(0)))
+    return _CACHE["m"]
+
+
+def _stream(n=4, max_new=3, prompt_len=4, seed=123):
+    cfg, _, _ = _moe()
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=[int(x) for x in
+                            rng.integers(1, cfg.vocab, prompt_len)],
+                    max_new_tokens=max_new, arrival=float(i))
+            for i in range(n)]
+
+
+def _clean_reference():
+    """Token streams of the no-fault run of the canonical stream."""
+    if "ref" not in _CACHE:
+        cfg, model, params = _moe()
+        eng = ContinuousEngine(model, params, 2, 32,
+                               config=EngineConfig(prefill_len=4))
+        done = eng.serve(_stream())
+        _CACHE["ref"] = [list(r.out_tokens) for r in done]
+    return _CACHE["ref"]
+
+
+# -- HealthMonitor detectors -------------------------------------------------
+
+def test_heartbeat_timeout_declares_loss_once():
+    mon = HealthMonitor(n_devices=3, heartbeat_timeout=2)
+    for step in range(2):
+        for d in range(3):
+            mon.heartbeat(d, step)
+        assert mon.check(step) == []
+    # Device 1 goes silent; the others keep beating.
+    for step in range(2, 6):
+        mon.heartbeat(0, step)
+        mon.heartbeat(2, step)
+        mon.check(step)
+    losses = [e for e in mon.events if e.kind == "device_loss"]
+    assert [e.device for e in losses] == [1]   # exactly once
+    assert mon.lost_devices == (1,)
+    assert losses[0].step == 3                 # silent since 1, timeout 2
+
+
+def test_straggler_flag_fires_once_and_rearms():
+    mon = HealthMonitor(n_devices=2, halflife=2.0, straggler_ratio=2.0,
+                        min_observations=2)
+    for step in range(4):
+        mon.observe_step_time(0, 1.0)
+        mon.observe_step_time(1, 10.0)
+        mon.check(step)
+    flags = [e for e in mon.events if e.kind == "straggler"]
+    assert [e.device for e in flags] == [1]    # once per episode
+    # Recovery: device 1 speeds back up, EWMA decays under the threshold,
+    # then it degrades again — the flag re-arms.
+    for step in range(4, 16):
+        mon.observe_step_time(0, 1.0)
+        mon.observe_step_time(1, 1.0)
+        mon.check(step)
+    for step in range(16, 24):
+        mon.observe_step_time(0, 1.0)
+        mon.observe_step_time(1, 10.0)
+        mon.check(step)
+    flags = [e for e in mon.events if e.kind == "straggler"]
+    assert [e.device for e in flags] == [1, 1]
+
+
+def test_nan_guard_dedups_per_step_and_drains():
+    mon = HealthMonitor()
+    assert mon.observe_output({"x": jnp.zeros(3)}, step=0)
+    bad = {"x": jnp.array([1.0, float("nan")])}
+    assert not mon.observe_output(bad, step=1)
+    assert not mon.observe_output(bad, step=1)     # same step: one event
+    assert [e.kind for e in mon.events] == ["nan"]
+    assert [e.step for e in mon.drain()] == [1]
+    assert mon.drain() == []                       # drained
+    assert len(mon.events) == 1                    # history kept
+
+
+def test_monitor_rejects_degenerate_config():
+    with pytest.raises(ValueError):
+        HealthMonitor(n_devices=0)
+    with pytest.raises(ValueError):
+        HealthMonitor(straggler_ratio=1.0)
+    with pytest.raises(ValueError):
+        HealthMonitor(heartbeat_timeout=0)
+
+
+def test_synthetic_straggler_reaches_detector():
+    # The injector inflates the reported signal (no real sleep); the EWMA
+    # path must still flag the device.
+    plan = FaultPlan((Straggler(step=0, device=1, factor=10.0,
+                                duration=32),))
+    inj = FaultInjector(plan, n_devices=2,
+                        health=HealthMonitor(n_devices=2, halflife=2.0,
+                                             straggler_ratio=3.0,
+                                             min_observations=2))
+    fn = inj.wrap(lambda: jnp.zeros(4))
+    for _ in range(6):
+        inj.tick()
+        fn()
+        inj.health.check(inj.step - 1)
+    assert any(e.kind == "straggler" and e.device == 1
+               for e in inj.health.events)
+
+
+# -- FaultPlan ---------------------------------------------------------------
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_random_plan_is_deterministic_and_bounded(seed):
+    a = FaultPlan.random(seed, horizon=16, n_devices=4, n_experts=8,
+                         n_faults=5)
+    assert a == FaultPlan.random(seed, horizon=16, n_devices=4,
+                                 n_experts=8, n_faults=5)
+    assert len(a.faults) == 5
+    losses = [f for f in a.faults if isinstance(f, DeviceLoss)]
+    assert len({f.device for f in losses}) <= 3   # a survivor always exists
+    for f in a.faults:
+        assert 1 <= f.step < 16
+    assert a.horizon() >= max((f.step for f in a.faults), default=0)
+
+
+def test_plan_at_and_corruption_flag():
+    plan = FaultPlan((DeviceLoss(step=2, device=0),
+                      ExpertCorruption(step=2, expert=1),
+                      Straggler(step=5, device=1)))
+    assert len(plan.at(2)) == 2 and len(plan.at(3)) == 0
+    assert plan.has_corruption
+    assert not FaultPlan((DeviceLoss(step=1, device=0),)).has_corruption
+
+
+# -- weight corruption / repair ----------------------------------------------
+
+def _experts_leaves(params):
+    return [leaf for path, leaf
+            in jax.tree_util.tree_leaves_with_path(params)
+            if any(getattr(k, "key", None) == "experts" for k in path)]
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_repair_from_replica_is_byte_identical(seed):
+    cfg, _, params = _moe()
+    n = cfg.moe.n_experts
+    rng = np.random.default_rng(seed)
+    counts = [int(c) for c in rng.integers(1, 3, n)]
+    if max(counts) < 2:
+        counts[int(rng.integers(n))] = 2
+    spec = ReplicationSpec.from_counts(counts)
+    rep = replicate_moe_params(params, spec)
+    # Corrupt one copy of a replicated expert; its sibling is healthy.
+    e = int(rng.choice([i for i in range(n) if counts[i] >= 2]))
+    phys = spec.base[e] + int(rng.integers(counts[e]))
+    bad = corrupt_moe_params(rep, phys)
+    assert any(not np.isfinite(np.asarray(leaf)).all()
+               for leaf in _experts_leaves(bad))
+    healed = repair_moe_params(bad, spec, [phys])
+    for a, b in zip(jax.tree_util.tree_leaves(rep),
+                    jax.tree_util.tree_leaves(healed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_repair_and_shrink_refuse_last_copy():
+    cfg, _, params = _moe()
+    n = cfg.moe.n_experts
+    with pytest.raises(FaultError):
+        repair_moe_params(params, None, [0])       # unreplicated: no donor
+    spec = ReplicationSpec.from_counts([2] + [1] * (n - 1))
+    with pytest.raises(FaultError):
+        # Both copies of expert 0 corrupt: nothing healthy to clone.
+        repair_moe_params(replicate_moe_params(params, spec), spec, [0, 1])
+    with pytest.raises(FaultError):
+        shrink_replication(spec, [spec.base[1]])   # expert 1's only copy
+    with pytest.raises(FaultError):
+        shrink_replication(None, [0])
+    shrunk = shrink_replication(spec, [0])
+    assert shrunk is None                           # back to identity
+
+
+# -- degraded re-planning ----------------------------------------------------
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_plan_degraded_covers_every_expert_on_survivors(seed):
+    n = 8
+    rng = np.random.default_rng(seed)
+    failed = sorted(rng.choice(n, size=int(rng.integers(1, n)),
+                               replace=False).tolist())
+    trace = synthetic_trace(f"chaos-{seed}", n_experts=n, n_layers=2,
+                            seed=seed)
+    planner = AuroraPlanner(homogeneous_cluster(n))
+    plan = planner.plan_degraded(trace, failed, ep_compatible=True)
+    k = len(plan.survivors)
+    assert set(plan.survivors).isdisjoint(failed)
+    assert n % k == 0                               # EP-shardable
+    total = 0
+    for hosts in plan.replication:
+        assert len(hosts) >= 1                      # nothing orphaned
+        assert all(0 <= h < k for h in hosts)       # survivor frame
+        total += len(hosts)
+    assert total % k == 0                           # padded for EP
+
+
+def test_plan_degraded_typed_errors():
+    n = 4
+    trace = synthetic_trace("err", n_experts=n, n_layers=1, seed=0)
+    planner = AuroraPlanner(homogeneous_cluster(n))
+    with pytest.raises(FaultError):
+        planner.plan_degraded(trace, list(range(n)))   # nobody survives
+    with pytest.raises(FaultError):
+        planner.plan_degraded(trace, [n + 1])          # out of range
+    with pytest.raises(FaultError):
+        AuroraPlanner(homogeneous_cluster(n + 1)).plan_degraded(trace, [0])
+
+
+def test_schedule_and_adopt_raise_typed_errors():
+    with pytest.raises(PlanError):
+        check_partial_permutation((0, 0), 2, "slot")   # self-send
+    with pytest.raises(PlanError):
+        check_partial_permutation((1, 5), 2, "slot")   # off the mesh
+    cfg, model, params = _moe()
+    eng = ContinuousEngine(model, params, 2, 32,
+                           config=EngineConfig(prefill_len=4))
+    with pytest.raises(PlanError):
+        eng.adopt_assignment([0] * cfg.moe.n_experts)  # not a permutation
+    with pytest.raises(TypeError, match="bogus_flag"):
+        ContinuousEngine(model, params, 2, 32, bogus_flag=7)
+
+
+def test_scale_admission_preserves_shed_policy():
+    pol = EdfAdmission(chunk=4, budget=16, shed=True, queue_cap=7)
+    scaled = scale_admission(pol, 0.5)
+    assert scaled.budget == 8
+    assert scaled.shed and scaled.queue_cap == 7    # shedding survives
+    assert scale_admission(pol, None) is pol
+
+
+# -- chaos: random fault plans vs a live engine ------------------------------
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=6, deadline=None)
+def test_chaos_recovery_is_byte_identical(seed):
+    """Any random FaultPlan (corruption, loss, stragglers) must recover to
+    the EXACT no-fault token streams: NaN steps roll back and repair,
+    lost devices' requests re-queue and re-emit, stragglers are observed
+    only. Zero tokens dropped."""
+    cfg, model, params = _moe()
+    ref = _clean_reference()
+    plan = FaultPlan.random(seed, horizon=8, n_devices=2,
+                            n_experts=cfg.moe.n_experts, n_faults=2,
+                            max_losses=1)
+    inj = FaultInjector(plan, n_devices=2,
+                        health=HealthMonitor(n_devices=2,
+                                             heartbeat_timeout=2,
+                                             min_observations=2))
+    eng = ContinuousEngine(model, params, 2, 32,
+                           config=EngineConfig(prefill_len=4,
+                                               step_wrapper=inj.wrap))
+    live = ChaosHarness(eng, inj).serve(_stream())
+    assert [list(r.out_tokens) for r in live] == ref
+    assert all(len(r.out_tokens) == r.max_new_tokens for r in live)
+
+
+def test_replica_backed_failover_drops_zero_tokens():
+    """Corrupting a replicated expert must repair FROM THE REPLICA (not
+    the pristine fallback) and still match the unreplicated clean run —
+    replication is placement-only and failover is lossless."""
+    cfg, model, params = _moe()
+    n = cfg.moe.n_experts
+    ref = _clean_reference()
+    plan = FaultPlan((ExpertCorruption(step=2, expert=0),))
+    inj = FaultInjector(plan, n_devices=2,
+                        health=HealthMonitor(n_devices=2))
+    eng = ContinuousEngine(model, params, 2, 32,
+                           config=EngineConfig(prefill_len=4,
+                                               step_wrapper=inj.wrap))
+    eng.adopt_replication([2] + [1] * (n - 1))
+    h = ChaosHarness(eng, inj)
+    live = h.serve(_stream())
+    assert [list(r.out_tokens) for r in live] == ref
+    assert any(r["action"] == "repaired-from-replica"
+               for r in h.recoveries)
+
+
+def test_device_loss_requeues_and_streams_survive():
+    """Fail-stop loss mid-stream: the lost device's slots re-queue and the
+    finished streams match the clean run byte for byte."""
+    cfg, model, params = _moe()
+    ref = _clean_reference()
+    plan = FaultPlan((DeviceLoss(step=2, device=1),))
+    inj = FaultInjector(plan, n_devices=2,
+                        health=HealthMonitor(n_devices=2,
+                                             heartbeat_timeout=2))
+    eng = ContinuousEngine(model, params, 2, 32,
+                           config=EngineConfig(prefill_len=4,
+                                               step_wrapper=inj.wrap))
+    h = ChaosHarness(eng, inj)
+    live = h.serve(_stream())
+    assert [list(r.out_tokens) for r in live] == ref
+    assert any(r["action"] == "requeued" for r in h.recoveries)
+    assert any(e.kind == "device_loss" for e in h.health.events)
+
+
+def test_nan_without_declared_corruption_is_a_real_failure():
+    """A NaN the fault plan did not script has no checkpoint to roll back
+    to — that is a genuine numeric failure and must surface, not be
+    silently absorbed."""
+    cfg, model, params = _moe()
+    inj = FaultInjector(FaultPlan(), n_devices=1)
+    eng = ContinuousEngine(model, params, 2, 32,
+                           config=EngineConfig(prefill_len=4,
+                                               step_wrapper=inj.wrap))
+    h = ChaosHarness(eng, inj)
+    eng.params = corrupt_moe_params(eng.params, 0)   # unscripted corruption
+    for r in _stream(n=2):
+        eng.submit(r)
+    with pytest.raises(FaultError):
+        for _ in range(8):
+            h.step()
+
+
+# -- shed-mode admission -----------------------------------------------------
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=6, deadline=None)
+def test_shed_never_starves_admitted(seed):
+    """Random overload bursts under EdfAdmission(shed=True): every shed
+    request is refused with a typed reason and emits nothing; every
+    ADMITTED request runs to completion — shedding protects admitted work,
+    it never starves it."""
+    cfg, model, params = _moe()
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for _ in range(8):
+        t = float(rng.integers(0, 3))
+        reqs.append(Request(
+            prompt=[int(x) for x in rng.integers(1, cfg.vocab, 4)],
+            max_new_tokens=2, arrival=t,
+            deadline=t + float(rng.integers(1, 6))))
+    eng = ContinuousEngine(
+        model, params, 2, 32,
+        config=EngineConfig(prefill_len=4,
+                            admission=EdfAdmission(chunk=4, budget=6,
+                                                   shed=True,
+                                                   queue_cap=4)))
+    eng.serve(reqs)
+    shed_ids = {id(ev.request) for ev in eng.shed_events}
+    for ev in eng.shed_events:
+        assert ev.reason.startswith(("deadline:", "queue_cap:"))
+    for r in reqs:
+        if id(r) in shed_ids:
+            assert r.out_tokens == []               # refused, not run
+        else:
+            assert len(r.out_tokens) == r.max_new_tokens
