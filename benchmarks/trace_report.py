@@ -1,0 +1,186 @@
+"""Render a telemetry JSONL trace into a per-step timeline table.
+
+  PYTHONPATH=src python -m benchmarks.trace_report BENCH_trace_worker.jsonl
+  PYTHONPATH=src python -m benchmarks.trace_report trace.jsonl --markdown
+
+Input is the JSONL written by ``Telemetry.write_jsonl`` (one record per
+line: spans and bus events, timeline-ordered) — what ``repro.launch.serve
+--trace-out`` and the ``serving_bench --trace`` mesh worker produce.
+
+The table is the paper's Fig. 3 view reconstructed from the host side: one
+row per engine step, splitting the step's wall window into
+
+* **comm (est)** — the summed ``dispatch_round`` child spans. These are
+  EQUAL subdivisions of the measured compiled-step window (a host cannot
+  see intra-step device timing without a device profiler), so the split is
+  an estimate and is labelled as such; the round COUNT per step is exact.
+* **compute** — the rest of the step span: compiled work outside the round
+  schedule plus host-side scheduling (admission, slot management).
+* **idle** — the gap between this step's end and the next step's start
+  (arrival waits, driver bookkeeping between steps).
+
+Bus events (replans, sheds, faults, adoptions, recoveries) print as
+interleaved rows at their timeline position, so "the straggler was flagged
+two steps after the rounds swap" reads straight off the table.
+
+``--markdown`` emits a GitHub-flavored table (CI posts it to the step
+summary); default is aligned plain text.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+# Top-level per-engine-step spans, and the compiled-program spans nested
+# inside them (the names engine.py / colocated.py wrap their jitted steps
+# with).
+STEP_SPANS = ("engine_step", "lockstep_step")
+COMPILED_SPANS = ("prefill", "prefill_chunk", "decode_step", "pool_step",
+                  "lockstep_decode")
+
+
+def load_records(path: str) -> list[dict]:
+    with open(path) as f:
+        return [json.loads(ln) for ln in f if ln.strip()]
+
+
+def build_timeline(records: list[dict]) -> dict:
+    """Group spans into per-step rows with interleaved events.
+
+    Returns ``{"rows": [...], "events_by_kind": {...}, "totals": {...}}``.
+    Each row is either ``{"row": "step", ...}`` with the comm/compute/idle
+    split or ``{"row": "event", ...}`` at its timeline position.
+    """
+    spans = [r for r in records if r.get("type") == "span"]
+    events = [r for r in records if r.get("type") == "event"]
+    steps = [s for s in spans if s["name"] in STEP_SPANS]
+    if not steps:
+        # Traces captured without the engine-step wrapper (e.g. spans
+        # emitted around bare compiled calls): treat top-level compiled
+        # spans as the steps so the table still renders.
+        steps = [s for s in spans if s["name"] in COMPILED_SPANS
+                 and s.get("depth", 0) == 0]
+    steps.sort(key=lambda s: s["ts"])
+
+    def children(step):
+        lo, hi = step["ts"], step["ts"] + step["dur"]
+        return [s for s in spans
+                if s is not step and lo <= s["ts"] < hi
+                and s.get("depth", 0) > step.get("depth", 0)]
+
+    rows: list[dict] = []
+    totals = {"wall_s": 0.0, "comm_s": 0.0, "compute_s": 0.0, "idle_s": 0.0}
+    for i, st in enumerate(steps):
+        kids = children(st)
+        rounds = [k for k in kids if k["name"] == "dispatch_round"]
+        comm = sum(k["dur"] for k in rounds)
+        compute = max(st["dur"] - comm, 0.0)
+        idle = (max(steps[i + 1]["ts"] - (st["ts"] + st["dur"]), 0.0)
+                if i + 1 < len(steps) else 0.0)
+        compiled = [k["name"] for k in kids
+                    if k["name"] in COMPILED_SPANS]
+        rows.append({
+            "row": "step", "ts": st["ts"],
+            "step": st.get("attrs", {}).get("step", i),
+            "span": st["name"],
+            "compiled": "+".join(dict.fromkeys(compiled)) or "-",
+            "rounds": len(rounds),
+            "comm_ms": comm * 1e3, "compute_ms": compute * 1e3,
+            "idle_ms": idle * 1e3, "total_ms": st["dur"] * 1e3,
+            "tenant": st.get("attrs", {}).get("tenant"),
+        })
+        totals["wall_s"] += st["dur"] + idle
+        totals["comm_s"] += comm
+        totals["compute_s"] += compute
+        totals["idle_s"] += idle
+    for e in events:
+        rows.append({"row": "event", "ts": e["ts"], "kind": e["kind"],
+                     "step": e.get("step"), "payload": e.get("payload")})
+    rows.sort(key=lambda r: r["ts"])
+
+    by_kind: dict[str, int] = {}
+    for e in events:
+        by_kind[e["kind"]] = by_kind.get(e["kind"], 0) + 1
+    return {"rows": rows, "events_by_kind": by_kind, "totals": totals,
+            "n_steps": len(steps), "n_events": len(events)}
+
+
+def _event_text(r: dict) -> str:
+    payload = r.get("payload")
+    detail = ""
+    if isinstance(payload, dict):
+        # Keep the headline fields; full payloads live in the JSONL.
+        keys = [k for k in ("kind", "device", "reason", "applied",
+                            "n_rounds", "detail") if k in payload]
+        detail = " ".join(f"{k}={payload[k]}" for k in keys)[:60]
+    step = "" if r.get("step") is None else f" @ step {r['step']}"
+    return f"{r['kind']}{step}" + (f" ({detail})" if detail else "")
+
+
+def render(timeline: dict, markdown: bool = False) -> str:
+    cols = ("step", "span", "compiled", "rounds", "comm (est) ms",
+            "compute ms", "idle ms", "total ms")
+    lines: list[str] = []
+    if markdown:
+        lines.append("| " + " | ".join(cols) + " |")
+        lines.append("|" + "|".join("---" for _ in cols) + "|")
+    else:
+        lines.append(f"{'step':>5} {'span':<13} {'compiled':<15} "
+                     f"{'rounds':>6} {'comm(est)ms':>12} {'compute ms':>11} "
+                     f"{'idle ms':>8} {'total ms':>9}")
+    for r in timeline["rows"]:
+        if r["row"] == "event":
+            txt = _event_text(r)
+            if markdown:
+                lines.append(f"| | **{r['kind']}** | {txt} | | | | | |")
+            else:
+                lines.append(f"      >> {txt}")
+            continue
+        vals = (r["step"], r["span"], r["compiled"], r["rounds"],
+                f"{r['comm_ms']:.2f}", f"{r['compute_ms']:.2f}",
+                f"{r['idle_ms']:.2f}", f"{r['total_ms']:.2f}")
+        if markdown:
+            lines.append("| " + " | ".join(str(v) for v in vals) + " |")
+        else:
+            lines.append(f"{vals[0]!s:>5} {vals[1]:<13} {vals[2]:<15} "
+                         f"{vals[3]:>6} {vals[4]:>12} {vals[5]:>11} "
+                         f"{vals[6]:>8} {vals[7]:>9}")
+    t = timeline["totals"]
+    wall = max(t["wall_s"], 1e-12)
+    summary = (f"{timeline['n_steps']} steps over {t['wall_s'] * 1e3:.1f} ms"
+               f" — comm(est) {t['comm_s'] / wall:.0%}, compute "
+               f"{t['compute_s'] / wall:.0%}, idle {t['idle_s'] / wall:.0%}"
+               f"; {timeline['n_events']} events "
+               f"{timeline['events_by_kind']}")
+    lines.append("")
+    lines.append(summary if not markdown else f"**{summary}**")
+    return "\n".join(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("jsonl", help="trace JSONL from Telemetry.write_jsonl "
+                                  "(serve --trace-out / bench --trace)")
+    ap.add_argument("--markdown", action="store_true",
+                    help="emit a GitHub-flavored table (for CI step "
+                         "summaries)")
+    ap.add_argument("--max-rows", type=int, default=None,
+                    help="truncate the table to the first N rows")
+    args = ap.parse_args()
+
+    timeline = build_timeline(load_records(args.jsonl))
+    if args.max_rows is not None:
+        hidden = len(timeline["rows"]) - args.max_rows
+        timeline["rows"] = timeline["rows"][:args.max_rows]
+        if hidden > 0:
+            print(f"(showing first {args.max_rows} rows; {hidden} hidden)")
+    print(render(timeline, markdown=args.markdown))
+    return 0
+
+
+if __name__ == "__main__":
+    try:
+        raise SystemExit(main())
+    except BrokenPipeError:       # e.g. `... | head` closing stdout early
+        raise SystemExit(0)

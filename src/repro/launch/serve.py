@@ -32,6 +32,14 @@ initializes, which is why it is handled first). ``--moe-impl aurora``
 synthetic historical trace; ``--overlap`` pipelines expert FFN chunks with
 in-flight rounds (repro.distributed.overlap). The expert count must divide
 N — use ``--experts`` to widen the reduced configs.
+
+``--trace-out BASE`` / ``--metrics-out PATH`` attach the unified telemetry
+hub (serving/telemetry.py) to whichever engine is built: structured spans
+(engine_step > prefill_chunk / decode_step > dispatch_round) and the typed
+event bus (replan / shed / fault / adoption) land in ``BASE.jsonl`` and
+``BASE.trace.json`` (Chrome trace-event JSON — open in Perfetto), and the
+final metrics snapshot (tok/s, TTFT, expert-load imbalance, …) is written
+as JSON on exit — including on Ctrl-C.
 """
 
 from __future__ import annotations
@@ -100,6 +108,13 @@ def main() -> int:
     ap.add_argument("--experts", type=int, default=None,
                     help="override the MoE expert count (reduced configs "
                          "clamp to 4, which rarely divides a mesh)")
+    ap.add_argument("--trace-out", default=None, metavar="BASE",
+                    help="record telemetry and write BASE.jsonl (structured "
+                         "spans + events) and BASE.trace.json (Chrome "
+                         "trace-event JSON — open in Perfetto) on exit")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the final metrics snapshot as JSON on exit "
+                         "(also on Ctrl-C)")
     args = ap.parse_args()
 
     if args.mesh is None and (args.overlap or args.moe_impl is not None):
@@ -114,6 +129,39 @@ def main() -> int:
         from repro.launch.mesh import force_host_device_count
         force_host_device_count(args.mesh)
 
+    telemetry = None
+    if args.trace_out or args.metrics_out:
+        from repro.serving.telemetry import Telemetry
+        telemetry = Telemetry()
+
+    # The flush runs on every exit path — clean return, SystemExit, and
+    # Ctrl-C — so a long serving run killed mid-stream still leaves its
+    # trace and metrics on disk.
+    try:
+        return _serve(args, telemetry)
+    except KeyboardInterrupt:
+        print("\ninterrupted")
+        return 130
+    finally:
+        _flush_telemetry(telemetry, args)
+
+
+def _flush_telemetry(telemetry, args) -> None:
+    if telemetry is None:
+        return
+    if args.trace_out:
+        telemetry.write_jsonl(args.trace_out + ".jsonl")
+        telemetry.write_chrome_trace(args.trace_out + ".trace.json")
+        print(f"trace: {args.trace_out}.jsonl + {args.trace_out}.trace.json"
+              f" (open the .trace.json in Perfetto / chrome://tracing)")
+    if args.metrics_out:
+        import json
+        with open(args.metrics_out, "w") as f:
+            json.dump(telemetry.snapshot(), f, indent=2, sort_keys=True)
+        print(f"metrics snapshot: {args.metrics_out}")
+
+
+def _serve(args, telemetry) -> int:
     import jax
     from repro.configs import get_config
     from repro.models import Model
@@ -140,7 +188,7 @@ def main() -> int:
                 budget=args.step_budget,
                 bucket_policy=args.bucket_policy),
             prefill_pool=args.prefill_pool, kernels=args.kernels,
-            tenants=tenants)
+            tenants=tenants, telemetry=telemetry)
         print(f"SLO targets (engine steps): ttft_p95<="
               f"{args.ttft_slo if args.ttft_slo is not None else 'none'} "
               f"tpot_p95<="
@@ -152,7 +200,7 @@ def main() -> int:
                               step_token_budget=args.step_budget,
                               bucket_policy=args.bucket_policy,
                               prefill_pool=args.prefill_pool,
-                              kernels=args.kernels)
+                              kernels=args.kernels, telemetry=telemetry)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -264,7 +312,8 @@ def main() -> int:
                                  "with equal expert counts")
             from repro.serving import OnlineReplanner
             replan = OnlineReplanner(planner, interval=args.replan_interval,
-                                     threshold=args.replan_threshold)
+                                     threshold=args.replan_threshold,
+                                     telemetry=telemetry)
         kw = dict(batch_slots=args.batch, cache_cap=args.cache_cap,
                   config=config, pair=(list(plan.pair) if plan else None),
                   replan=replan)

@@ -3,8 +3,10 @@
 churn), live traffic monitoring + online re-planning/re-grouping, the
 EP-sharded distributed engines (mesh decode, round-pipelined dispatch, live
 schedule refresh), and fault tolerance (seedable fault injection, health
-monitoring, degraded-mode failover). All engines are configured through one
-frozen ``EngineConfig`` (admission policies, prefill pool, kernels, jit)."""
+monitoring, degraded-mode failover), plus unified telemetry (metrics
+registry, structured spans, bounded event bus — ``EngineConfig(telemetry=
+Telemetry())``). All engines are configured through one frozen
+``EngineConfig`` (admission policies, prefill pool, kernels, jit)."""
 
 from repro.core.errors import FaultError, PlanError
 
@@ -25,6 +27,9 @@ from .monitor import OnlineReplanner, ReplanEvent, TrafficMonitor
 from .health import FaultEvent, HealthMonitor
 from .faults import (ChaosHarness, DeviceLoss, ExpertCorruption,
                      FaultInjector, FaultPlan, Straggler)
+from .events import BusEvent, EventBus, RingBuffer
+from .telemetry import (MetricsRegistry, SpanRecord, Telemetry,
+                        record_adoption)
 
 __all__ = ["Request", "ServingEngine", "ContinuousEngine",
            "ColocatedEngine", "ColocatedContinuousEngine",
@@ -41,4 +46,6 @@ __all__ = ["Request", "ServingEngine", "ContinuousEngine",
            "OnlineReplanner", "ReplanEvent",
            "FaultEvent", "HealthMonitor", "FaultPlan", "FaultInjector",
            "ChaosHarness", "DeviceLoss", "ExpertCorruption", "Straggler",
-           "FaultError", "PlanError"]
+           "FaultError", "PlanError",
+           "Telemetry", "MetricsRegistry", "SpanRecord", "record_adoption",
+           "EventBus", "BusEvent", "RingBuffer"]

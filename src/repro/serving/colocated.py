@@ -30,6 +30,7 @@ from repro.core.errors import PlanError
 from repro.models import Model
 from repro.serving.config import (EngineConfig, TenantSpec, coerce_config,
                                   scale_admission)
+from repro.serving.telemetry import record_adoption
 
 
 def _pool_config_for(config: EngineConfig, spec: TenantSpec | None):
@@ -280,15 +281,25 @@ class ColocatedContinuousEngine:
 
         self._jit = config.jit
         self._step_wrapper = config.step_wrapper or (lambda fn: fn)
+        self._telemetry = config.telemetry
+        if replan is not None and config.telemetry is not None \
+                and getattr(replan, "telemetry", None) is None:
+            replan.telemetry = config.telemetry
         self._build_lockstep()
         self.decode_steps = 0
 
     def _build_lockstep(self) -> None:
         """(Re)build the fused lockstep step from the pools' current models
         (rebuilt when a distributed engine swaps ppermute rounds)."""
-        self._step = self._step_wrapper(build_lockstep_step(
+        step = self._step_wrapper(build_lockstep_step(
             [self.model_a, self.model_b],
             collect_stats=self.replan is not None, jit=self._jit))
+        if self._telemetry is not None:
+            step = self._telemetry.wrap_step(
+                step, "lockstep_decode",
+                rounds=lambda: getattr(self.model_a.pc, "aurora_rounds",
+                                       None))
+        self._step = step
 
     @property
     def replan_events(self) -> list:
@@ -306,6 +317,8 @@ class ColocatedContinuousEngine:
         if self.monitor_b is not None:
             self.monitor_b.slot_to_expert = list(new_pair)
         self.plan = plan
+        record_adoption(self._telemetry, "pairing", step=self.decode_steps,
+                        pair=new_pair)
 
     def _adopt_online(self, plan) -> None:
         """Seam for the replanner loop (the distributed engine layers an
@@ -320,6 +333,13 @@ class ColocatedContinuousEngine:
 
     def step(self) -> bool:
         """Admit into both pools, then one fused lockstep decode."""
+        tel = self._telemetry
+        if tel is None or not tel.enabled:
+            return self._step_impl()
+        with tel.span("lockstep_step", step=self.decode_steps):
+            return self._step_impl()
+
+    def _step_impl(self) -> bool:
         a, b = self.pool_a, self.pool_b
         worked_a = a._admit_tick()
         worked_b = b._admit_tick()
@@ -514,15 +534,25 @@ class MultiTenantContinuousEngine:
             for t, (m, p) in enumerate(zip(models, params))]
         self._jit = config.jit
         self._step_wrapper = config.step_wrapper or (lambda fn: fn)
+        self._telemetry = config.telemetry
+        if replan is not None and config.telemetry is not None \
+                and getattr(replan, "telemetry", None) is None:
+            replan.telemetry = config.telemetry
         self._build_lockstep()
         self.decode_steps = 0
 
     def _build_lockstep(self) -> None:
         """(Re)build the fused N-tenant step from the pools' current models
         (rebuilt when a distributed engine swaps ppermute rounds)."""
-        self._step = self._step_wrapper(build_lockstep_step(
+        step = self._step_wrapper(build_lockstep_step(
             self.models, collect_stats=self.replan is not None,
             jit=self._jit))
+        if self._telemetry is not None:
+            step = self._telemetry.wrap_step(
+                step, "lockstep_decode",
+                rounds=lambda: getattr(self.models[0].pc, "aurora_rounds",
+                                       None))
+        self._step = step
 
     @property
     def replan_events(self) -> list:
@@ -555,6 +585,8 @@ class MultiTenantContinuousEngine:
                 self.monitors[t].slot_to_expert = new_p
         self.groups = new_groups
         self.plan = plan
+        record_adoption(self._telemetry, "grouping", step=self.decode_steps,
+                        groups=new_groups)
 
     def _adopt_online(self, plan) -> None:
         """Seam for the replanner loop (the distributed engine layers an
@@ -672,6 +704,14 @@ class MultiTenantContinuousEngine:
 
     def step(self) -> bool:
         """Admit into every pool, then one fused lockstep decode."""
+        tel = self._telemetry
+        if tel is None or not tel.enabled:
+            return self._step_impl()
+        with tel.span("lockstep_step", step=self.decode_steps,
+                      tenants=self.n_tenants):
+            return self._step_impl()
+
+    def _step_impl(self) -> bool:
         worked = [p._admit_tick() for p in self.pools]
         if all(p.num_active == 0 for p in self.pools):
             return any(worked)

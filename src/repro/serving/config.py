@@ -559,6 +559,14 @@ class EngineConfig:
     ``step_wrapper`` wraps every compiled step (the distributed engines
     compose their mesh-context wrapper under it); ``jit=False`` runs steps
     eagerly (debugging).
+
+    ``telemetry`` attaches a ``repro.serving.Telemetry`` hub: compiled
+    steps become spans, shed/replan/fault/adoption events publish to the
+    hub's bus, and the metrics registry fills in. ``None`` (default) is
+    the zero-overhead path — no wrapper is composed and no per-step work
+    happens. The hub is shared by colocated/multi-tenant pools (pool
+    configs are ``dataclasses.replace`` copies). ``event_capacity``
+    bounds the per-engine event rings (``shed_events``), drop-oldest.
     """
 
     prefill_len: int | None = None
@@ -571,9 +579,13 @@ class EngineConfig:
     kernels: object = False          # bool | KernelConfig
     jit: bool = True
     step_wrapper: Callable | None = None
+    telemetry: object = None         # Telemetry | None
+    event_capacity: int = 4096
 
     def __post_init__(self):
         object.__setattr__(self, "tenants", tuple(self.tenants))
+        if self.event_capacity < 1:
+            raise ValueError("event_capacity must be >= 1")
         for t in self.tenants:
             if not isinstance(t, TenantSpec):
                 raise ValueError(f"tenants must be TenantSpec entries, "

@@ -47,6 +47,7 @@ from repro.sharding import make_pc
 from .colocated import ColocatedContinuousEngine, MultiTenantContinuousEngine
 from .config import EngineConfig, coerce_config
 from .engine import ContinuousEngine
+from .telemetry import record_adoption
 
 
 # ---------------------------------------------------------------------------
@@ -263,6 +264,8 @@ class DistributedEngine(ContinuousEngine):
             self.model.pc,
             aurora_rounds=validate_rounds_cover(rounds, self.n_ep))
         self._rebind(dataclasses.replace(self.model, pc=pc))
+        record_adoption(self._telemetry, "rounds", step=self.decode_steps,
+                        n_rounds=len(pc.aurora_rounds))
 
     def adopt(self, plan):
         """Refresh the BvN rounds from a fresh ``Plan`` / ``MoETrace`` /
@@ -365,6 +368,8 @@ class DistributedEngine(ContinuousEngine):
         self.assignment = list(range(n_e))
         self._rebind(model)
         self.adopt_replication(plan.replication)
+        record_adoption(self._telemetry, "degraded", step=self.decode_steps,
+                        survivors=surv)
 
 
 class DistributedColocatedEngine(ColocatedContinuousEngine):
@@ -415,6 +420,8 @@ class DistributedColocatedEngine(ColocatedContinuousEngine):
             pool._rebind(dataclasses.replace(pool.model, pc=pc))
         self.model_a, self.model_b = self.pool_a.model, self.pool_b.model
         self._build_lockstep()
+        record_adoption(self._telemetry, "rounds", step=self.decode_steps,
+                        n_rounds=len(rounds))
 
     def adopt(self, source):
         """One adoption surface for placement AND schedule: a full ``Plan``
@@ -474,6 +481,8 @@ class DistributedMultiTenantEngine(MultiTenantContinuousEngine):
             pool._rebind(dataclasses.replace(pool.model, pc=pc))
         self.models = [p.model for p in self.pools]
         self._build_lockstep()
+        record_adoption(self._telemetry, "rounds", step=self.decode_steps,
+                        n_rounds=len(rounds))
 
     def adopt(self, source):
         """One adoption surface: a full ``Plan`` re-seats every tenant to

@@ -75,6 +75,8 @@ from repro.core.errors import FaultError, PlanError
 from repro.models import Model
 from repro.serving.config import (EngineConfig, RequestSpec, ShedEvent,
                                   coerce_config, make_bucketer)
+from repro.serving.events import RingBuffer
+from repro.serving.telemetry import STEP_BOUNDS, record_adoption
 
 __all__ = ["Request", "poisson_requests", "serve_stream", "make_bucketer",
            "ServingEngine", "ContinuousEngine"]
@@ -247,21 +249,49 @@ class ContinuousEngine:
         # mesh context (``with_sharding_constraint`` needs an active mesh on
         # legacy jax); identity for the single-device engines.
         self._step_wrapper = config.step_wrapper or (lambda fn: fn)
+        # Optional telemetry hub (``config.telemetry``): compiled steps get
+        # span-wrapped in ``_build_steps`` and the scheduler publishes
+        # shed/adoption events + queue/TTFT/token metrics. None (default)
+        # keeps the exact untelemetered code path — no wrapper, no per-step
+        # work.
+        self._telemetry = config.telemetry
+        self._tenant_label = (self.tenant_spec.name
+                              if self.tenant_spec is not None else "")
         self._build_steps()
         self.decode_steps = 0
         # Shed-mode admission: every rejected submit is recorded here as a
         # typed ``ShedEvent`` (and returned from ``submit``) — rejections
-        # are observable per tenant, never silent stalls.
-        self.shed_events: list[ShedEvent] = []
+        # are observable per tenant, never silent stalls. Bounded ring
+        # (``config.event_capacity``), drop-oldest; evictions are counted
+        # on ``shed_events.dropped``.
+        self.shed_events: RingBuffer = RingBuffer(config.event_capacity)
+
+    def _live_rounds(self):
+        """The CURRENT BvN round schedule (None off the distributed path).
+        Read through ``self.model`` at call time so telemetry follows
+        mid-stream rounds swaps (``_rebind``)."""
+        return getattr(self.model.pc, "aurora_rounds", None)
+
+    def _wrap_step_fn(self, fn, name: str, rounds: bool = False):
+        """Compose the step wrappers for one compiled step: the configured
+        ``step_wrapper`` (mesh context / fault injection) innermost, the
+        telemetry span wrapper — when a hub is attached — outermost, so
+        span timing covers the full wrapped call."""
+        fn = self._step_wrapper(fn)
+        tel = self._telemetry
+        if tel is None:
+            return fn
+        return tel.wrap_step(fn, name, tenant=self._tenant_label or None,
+                             rounds=self._live_rounds if rounds else None)
 
     def _build_steps(self) -> None:
         """(Re)build the jitted step programs from ``self.model``."""
-        model, jit, wrap = self.model, self._jit, self._step_wrapper
+        model, jit, wrap = self.model, self._jit, self._wrap_step_fn
         stats = self.monitor is not None
         fn_p = partial(model.prefill_slot, cap=self.cache_cap,
                        src_len=self.src_len, collect_moe_stats=stats)
         self._prefill = wrap(jax.jit(fn_p, donate_argnums=(2,))
-                             if jit else fn_p)
+                             if jit else fn_p, "prefill")
         # Chunked prefill runs straight against the shared per-slot cache:
         # each chunk slices the slot row, continues the prefill, and merges
         # back in ONE donated program (``Model.prefill_chunk_slot``) — no
@@ -270,20 +300,20 @@ class ContinuousEngine:
                         cap=self.cache_cap, src_len=self.src_len,
                         collect_moe_stats=stats)
         self._chunk_first = wrap(jax.jit(fn_c0, donate_argnums=(2,))
-                                 if jit else fn_c0)
+                                 if jit else fn_c0, "prefill_chunk")
         fn_c = partial(model.prefill_chunk_slot, first=False,
                        cap=self.cache_cap, src_len=self.src_len,
                        collect_moe_stats=stats)
         self._chunk = wrap(jax.jit(fn_c, donate_argnums=(2,))
-                           if jit else fn_c)
+                           if jit else fn_c, "prefill_chunk")
         fn_d = model.decode_step_stats if stats else model.decode_step
         self._decode = wrap(jax.jit(fn_d, donate_argnums=(2,))
-                            if jit else fn_d)
+                            if jit else fn_d, "decode_step", rounds=True)
         if self._pool_size > 1:
             fn_pool = self._make_pool_fn(stats)
             self._pool_step = wrap(
                 jax.jit(fn_pool, static_argnums=(0, 1), donate_argnums=(4,))
-                if jit else fn_pool)
+                if jit else fn_pool, "pool_step", rounds=True)
 
     def _make_pool_fn(self, stats: bool):
         """The pooled-admission program: K chunked prefills (and, when
@@ -361,6 +391,9 @@ class ContinuousEngine:
         self.params = params
         pc = dataclasses.replace(self.model.pc, moe_replication=spec)
         self._rebind(dataclasses.replace(self.model, pc=pc))
+        record_adoption(self._telemetry, "replication",
+                        step=self.decode_steps,
+                        counts=None if spec is None else spec.counts)
 
     def adopt_replication(self, replication) -> None:
         """Adopt a planner host map (``Plan.replication`` — per-expert host
@@ -412,6 +445,8 @@ class ContinuousEngine:
         self.assignment = e2d
         if self.monitor is not None:
             self.monitor.slot_to_expert = new_pair
+        record_adoption(self._telemetry, "assignment",
+                        step=self.decode_steps, expert_to_device=e2d)
 
     def adopt(self, plan) -> None:
         """Unified adoption surface (one verb across every engine): take
@@ -482,6 +517,12 @@ class ContinuousEngine:
                 ev = ShedEvent(tenant=req.tenant, arrival=req.arrival,
                                reason=reason, request=req)
                 self.shed_events.append(ev)
+                tel = self._telemetry
+                if tel is not None and tel.enabled:
+                    tel.count("serving_sheds_total",
+                              help="submits rejected by shed-mode admission",
+                              tenant=str(req.tenant), reason=reason)
+                    tel.publish("shed", ev, step=self.decode_steps)
                 return ev
         self.queue.append(req)
         return None
@@ -560,6 +601,15 @@ class ContinuousEngine:
         if len(r.out_tokens) < r.max_new_tokens:
             self.slots[slot] = r
             self.tokens = self.tokens.at[slot, 0].set(tok0)
+        tel = self._telemetry
+        if tel is not None and tel.enabled and r.max_new_tokens > 0:
+            tel.count("serving_tokens_total",
+                      help="tokens emitted", tenant=self._tenant_label)
+            tel.observe("serving_ttft_steps",
+                        max(0.0, self.decode_steps - r.arrival),
+                        help="engine steps from arrival to first token "
+                             "(step clock)",
+                        bounds=STEP_BOUNDS, tenant=self._tenant_label)
 
     def _admit(self) -> None:
         """Drain the queue into free slots (one-shot per-slot prefill each,
@@ -684,7 +734,7 @@ class ContinuousEngine:
         if decode:
             dlogits, dstats = dec_out
             if self.monitor is not None:
-                self.monitor.observe(dstats, mask)
+                self._observe_decode_routing(dstats, mask)
             self.decode_steps += 1
             self._postdecode(dlogits)
         finished = []
@@ -701,6 +751,35 @@ class ContinuousEngine:
             self._finish_admission(p[0], p[1], logits)
         return True
 
+    def _observe_decode_routing(self, stats, mask) -> None:
+        """Fold decode routing counts into the monitor and — when a
+        telemetry hub is attached — the per-layer load gauges."""
+        self.monitor.observe(stats, mask)
+        tel = self._telemetry
+        if tel is None or not tel.enabled:
+            return
+        arr = np.asarray(stats, np.float64)          # (L, B, E)
+        if mask is not None:
+            arr = arr * np.asarray(mask, np.float64)[None, :, None]
+        totals = arr.sum(axis=1)                     # (L, E)
+        moe = self.model.cfg.moe
+        cf = moe.capacity_factor if moe is not None else None
+        for l, row in enumerate(totals):
+            tot = float(row.sum())
+            if tot <= 0:
+                continue
+            tel.gauge("moe_expert_load_imbalance",
+                      float(row.max()) * row.size / tot,
+                      help="max/mean expert load this decode step "
+                           "(1.0 = perfectly balanced)", layer=l)
+            if cf:
+                cap = cf * tot / row.size
+                tel.gauge("moe_expert_drop_rate",
+                          float(np.maximum(row - cap, 0.0).sum()) / tot,
+                          help="estimated fraction of routed tokens over "
+                               "per-expert capacity (capacity_factor rule "
+                               "applied to this step's counts)", layer=l)
+
     def _observe_prefill(self, stats, pad: int) -> None:
         """Fold prefill routing counts into the monitor, dropping the first
         ``pad`` positions (left-padding routes token id 0 every time and
@@ -716,12 +795,18 @@ class ContinuousEngine:
                          axis=-1).astype(jnp.int32)
         self.tokens = nxt
         host = np.asarray(nxt)
+        emitted = 0
         for i, r in enumerate(self.slots):
             if r is None:
                 continue
             r.out_tokens.append(int(host[i, 0]))
+            emitted += 1
             if len(r.out_tokens) >= r.max_new_tokens:
                 self.slots[i] = None                     # slot free for reuse
+        tel = self._telemetry
+        if tel is not None and tel.enabled and emitted:
+            tel.count("serving_tokens_total", emitted,
+                      help="tokens emitted", tenant=self._tenant_label)
 
     def _decode_all(self):
         """One fixed-shape decode over every slot (stats-aware).
@@ -736,7 +821,7 @@ class ContinuousEngine:
             logits, self.cache, stats = self._decode(self.params, self.tokens,
                                                      self.cache,
                                                      jnp.asarray(mask))
-            self.monitor.observe(stats, mask)
+            self._observe_decode_routing(stats, mask)
         else:
             logits, self.cache = self._decode(self.params, self.tokens,
                                               self.cache, jnp.asarray(mask))
@@ -751,6 +836,17 @@ class ContinuousEngine:
         request's first decode shifts one engine step later than in the
         serialized schedule, but per-request token streams are unchanged
         (its first token comes from the prefill logits either way)."""
+        tel = self._telemetry
+        if tel is None or not tel.enabled:
+            return self._step_impl()
+        with tel.span("engine_step", step=self.decode_steps,
+                      tenant=self._tenant_label or None):
+            tel.gauge("serving_queue_depth", len(self.queue),
+                      help="requests waiting for admission",
+                      tenant=self._tenant_label)
+            return self._step_impl()
+
+    def _step_impl(self) -> bool:
         if self._pool_size > 1:
             return self._pool_tick(fuse_decode=True)
         worked = self._admit_tick()

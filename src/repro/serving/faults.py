@@ -222,6 +222,12 @@ class FaultInjector:
         self.step = now + 1
 
     def _apply(self, f) -> None:
+        tel = getattr(self.health, "telemetry", None)
+        if tel is not None and tel.enabled:
+            tel.count("serving_faults_injected_total",
+                      help="faults injected by the chaos plan",
+                      kind=type(f).__name__)
+            tel.publish("fault_injected", f, step=self.step)
         if isinstance(f, DeviceLoss):
             self.lost.add(int(f.device))
         elif isinstance(f, Straggler):
@@ -302,9 +308,19 @@ class ChaosHarness:
             elif ev.kind == "device_loss":
                 self._recover_loss(ev)
             else:
-                self.recoveries.append(
+                self._record_recovery(
                     {"event": ev, "action": "observed"})
         return worked
+
+    def _record_recovery(self, entry: dict) -> None:
+        self.recoveries.append(entry)
+        tel = getattr(self.health, "telemetry", None)
+        if tel is not None and tel.enabled:
+            tel.count("serving_recoveries_total",
+                      help="recovery actions taken by the chaos harness",
+                      action=entry["action"])
+            tel.publish("recovery", entry,
+                        step=max(self.injector.step - 1, 0))
 
     def serve(self, reqs) -> list:
         from repro.serving.engine import serve_stream
@@ -336,8 +352,8 @@ class ChaosHarness:
             eng.params = params
             action = "restored-pristine"
         inj.clear_corrupted()
-        self.recoveries.append({"event": ev, "action": action,
-                                "bad_phys": bad})
+        self._record_recovery({"event": ev, "action": action,
+                               "bad_phys": bad})
         return eng.step()                 # re-run the rolled-back step
 
     def _recover_loss(self, ev) -> None:
@@ -363,4 +379,4 @@ class ChaosHarness:
                 eng.adopt(plan.replication)
             entry["action"] = "requeued+replanned"
             entry["survivors"] = plan.survivors
-        self.recoveries.append(entry)
+        self._record_recovery(entry)

@@ -30,6 +30,8 @@ import math
 
 import numpy as np
 
+from repro.serving.events import RingBuffer
+
 
 __all__ = ["FaultEvent", "HealthMonitor"]
 
@@ -56,13 +58,26 @@ class HealthMonitor:
     liveness; ``check(step)`` sweeps the heartbeat table and EWMAs and
     appends any NEW events (each device is reported lost once, flagged
     straggler once per episode). ``drain()`` hands the accumulated events
-    to the recovery loop and clears the queue; ``events`` keeps the full
-    history for audits.
+    to the recovery loop and clears the queue; ``events`` keeps recent
+    history for audits — a bounded drop-oldest ring (``capacity``), so a
+    long-running monitor cannot grow without limit; evictions are counted
+    on the ring's ``dropped``.
+
+    The first ``min_observations`` step-time samples are averaged with
+    EQUAL weight (no decay) before the EWMA takes over: decay-folding
+    from zero would make a slow cold-start step dominate the baseline for
+    ~a halflife and mis-arm straggler detection. ``armed(device)`` (and
+    the ``device_detector_armed`` gauge when ``telemetry`` is attached)
+    exposes the warming/armed state.
+
+    ``telemetry`` (optional ``repro.serving.Telemetry``) receives every
+    FaultEvent on the unified bus plus per-device step-time/armed gauges.
     """
 
     def __init__(self, n_devices: int = 1, halflife: float = 16.0,
                  straggler_ratio: float = 3.0, heartbeat_timeout: int = 8,
-                 min_observations: int = 4):
+                 min_observations: int = 4, capacity: int = 4096,
+                 telemetry=None):
         if n_devices < 1:
             raise ValueError("HealthMonitor.n_devices must be >= 1")
         if halflife <= 0:
@@ -85,8 +100,9 @@ class HealthMonitor:
         self._lost: set[int] = set()
         self._straggling: set[int] = set()
         self._nan_steps: set[int] = set()
-        self.events: list[FaultEvent] = []
-        self._pending: list[FaultEvent] = []
+        self.events: RingBuffer = RingBuffer(capacity)
+        self._pending: RingBuffer = RingBuffer(capacity)
+        self.telemetry = telemetry
 
     # -- signal feeds ------------------------------------------------------
     def heartbeat(self, device: int, step: int) -> None:
@@ -94,9 +110,36 @@ class HealthMonitor:
 
     def observe_step_time(self, device: int, dt: float) -> None:
         d = int(device)
-        self._ewma_num[d] = self._ewma_num[d] * self._decay + float(dt)
-        self._ewma_den[d] = self._ewma_den[d] * self._decay + 1.0
+        if self._n_obs[d] < self.min_observations:
+            # Warm-up: equal-weight mean. Decay-folding from zero would
+            # weight the very first sample by a full decay factor over
+            # each later one, so one slow cold step (compile, cache fill)
+            # would bias the straggler baseline long after warm-up.
+            self._ewma_num[d] += float(dt)
+            self._ewma_den[d] += 1.0
+        else:
+            self._ewma_num[d] = self._ewma_num[d] * self._decay + float(dt)
+            self._ewma_den[d] = self._ewma_den[d] * self._decay + 1.0
         self._n_obs[d] += 1
+        tel = self.telemetry
+        if tel is not None and tel.enabled:
+            tel.gauge("device_step_seconds",
+                      float(self._ewma_num[d]
+                            / max(self._ewma_den[d], 1e-12)),
+                      help="per-device EWMA step time (seconds)", device=d)
+            tel.gauge("device_detector_armed", float(self.armed(d)),
+                      help="1 once the straggler detector has warmed up "
+                           "(min_observations samples)", device=d)
+
+    def armed(self, device: int) -> bool:
+        """True once ``device`` has enough samples for straggler checks."""
+        return bool(self._n_obs[int(device)] >= self.min_observations)
+
+    @property
+    def warming_devices(self) -> tuple[int, ...]:
+        """Devices still inside the equal-weight warm-up window."""
+        return tuple(int(d) for d in range(self.n_devices)
+                     if self._n_obs[d] < self.min_observations)
 
     def observe_output(self, out, step: int) -> bool:
         """Screen a pytree of step outputs for NaN/inf. Returns True when
@@ -174,8 +217,14 @@ class HealthMonitor:
     def _emit(self, ev: FaultEvent) -> None:
         self.events.append(ev)
         self._pending.append(ev)
+        tel = self.telemetry
+        if tel is not None and tel.enabled:
+            tel.count("serving_faults_total",
+                      help="detected faults by kind", kind=ev.kind)
+            tel.publish("fault", ev, step=ev.step)
 
     def drain(self) -> list[FaultEvent]:
         """Events since the last drain (the recovery loop's work queue)."""
-        out, self._pending = self._pending, []
+        out = list(self._pending)
+        self._pending.clear()
         return out

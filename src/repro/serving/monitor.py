@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core.planner import AuroraPlanner, Plan, PlanDiff
 from repro.core.traffic import MoETrace, trace_from_counts
+from repro.serving.events import RingBuffer
 
 
 class TrafficMonitor:
@@ -200,7 +201,9 @@ class OnlineReplanner:
                  baseline_groups: list[tuple[int, ...]] | None = None,
                  predictive: bool = False,
                  baseline_replication=None,
-                 baseline_assignment=None):
+                 baseline_assignment=None,
+                 telemetry=None,
+                 event_capacity: int = 4096):
         if interval <= 0:
             raise ValueError("interval must be positive")
         self.planner = planner
@@ -231,7 +234,23 @@ class OnlineReplanner:
         self.baseline_assignment = (
             None if baseline_assignment is None
             else [int(d) for d in baseline_assignment])
-        self.events: list[ReplanEvent] = []
+        # Bounded drop-oldest history: a long-lived replanner keeps only
+        # the newest ``event_capacity`` decision points (evictions are
+        # counted on ``events.dropped``).
+        self.events: RingBuffer = RingBuffer(event_capacity)
+        # Optional repro.serving.Telemetry hub: every ReplanEvent is also
+        # published on the unified bus (kind="replan") and counted. Engines
+        # wire this automatically when their config carries a hub.
+        self.telemetry = telemetry
+
+    def _record(self, ev: ReplanEvent) -> None:
+        self.events.append(ev)
+        tel = self.telemetry
+        if tel is not None and tel.enabled:
+            tel.count("serving_replans_total",
+                      help="re-plan checkpoints by outcome",
+                      applied=ev.applied)
+            tel.publish("replan", ev, step=ev.step)
 
     def maybe_replan(self, step: int, monitor_a: TrafficMonitor,
                      monitor_b: TrafficMonitor,
@@ -255,7 +274,7 @@ class OnlineReplanner:
         if self.baseline_pair is not None:
             base_t = self.planner.evaluate_colocated(
                 tr_a, tr_b, self.baseline_pair).inference_time
-        self.events.append(ReplanEvent(
+        self._record(ReplanEvent(
             step=step, stale_time=stale.inference_time,
             candidate_time=cand.predicted.inference_time,
             pair=list(cand.pair), applied=apply, baseline_time=base_t))
@@ -289,7 +308,7 @@ class OnlineReplanner:
         if self.baseline_assignment is not None:
             base_t = self.planner.evaluate_exclusive(
                 tr, self.baseline_assignment).inference_time
-        self.events.append(ReplanEvent(
+        self._record(ReplanEvent(
             step=step, stale_time=stale.inference_time,
             candidate_time=cand.predicted.inference_time,
             pair=[], applied=apply, baseline_time=base_t,
@@ -345,7 +364,7 @@ class OnlineReplanner:
         if self.baseline_groups is not None:
             base_t = self.planner.evaluate_multi(
                 traces, self.baseline_groups).inference_time
-        self.events.append(ReplanEvent(
+        self._record(ReplanEvent(
             step=step, stale_time=stale.inference_time,
             candidate_time=cand_time,
             pair=list(cand.pair) if cand.pair is not None else [],
@@ -393,7 +412,7 @@ class OnlineReplanner:
         if self.baseline_replication is not None:
             base_t = self.planner.evaluate_replicated(
                 tr, self.baseline_replication).inference_time
-        self.events.append(ReplanEvent(
+        self._record(ReplanEvent(
             step=step, stale_time=stale.inference_time,
             candidate_time=cand.predicted.inference_time,
             pair=[], applied=apply, baseline_time=base_t,
